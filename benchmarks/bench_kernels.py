@@ -1,0 +1,58 @@
+"""Pallas kernel micro-benchmarks: interpret-mode correctness + jnp-ref
+timing on this CPU container (TPU wall-clock is out of scope here; the
+per-kernel roofline lives in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.kernels import Kernel
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    kern = Kernel("rbf", gamma=8.0)
+    ref_jit = jax.jit(lambda X, Y: ref.kermat_ref(X, Y, gamma=8.0))
+    for n, m, d in ((1024, 1024, 64), (2048, 512, 128)):
+        X = jax.random.uniform(jax.random.fold_in(key, n), (n, d))
+        Y = jax.random.uniform(jax.random.fold_in(key, m), (m, d))
+        want = ref_jit(X, Y)              # warm both paths (compile)
+        got = ops.kernel_matrix(X, Y, kern)
+        want, t_ref = timed(ref_jit, X, Y)
+        got, t_pal = timed(ops.kernel_matrix, X, Y, kern)
+        err = float(jnp.max(jnp.abs(got - want)))
+        rows.append((f"kernels.kermat.{n}x{m}x{d}", t_pal * 1e6,
+                     f"ref_us={t_ref*1e6:.0f};maxerr={err:.2e}"))
+        assert err < 1e-4
+
+    X = jax.random.uniform(key, (2048, 32))
+    Xm = jax.random.uniform(jax.random.fold_in(key, 1), (256, 32))
+    W = jax.nn.one_hot(jax.random.randint(key, (256,), 0, 16), 16)
+    W = W / jnp.maximum(W.sum(0), 1.0)
+    Kmm = ref.kermat_ref(Xm, Xm, gamma=8.0)
+    s = jnp.einsum("mk,mn,nk->k", W, Kmm, W)
+    (a_got, s_got), t = timed(ops.kmeans_assign, X, Xm, W, s, 8.0)
+    a_ref, _ = ref.kmeans_assign_ref(X, Xm, W, jnp.asarray(s)[None, :], gamma=8.0)
+    agree = float(jnp.mean((a_got == a_ref).astype(jnp.float32)))
+    rows.append(("kernels.kmeans_assign.2048x256x16", t * 1e6,
+                 f"agree={agree:.4f}"))
+
+    y = jnp.sign(jax.random.normal(key, (2048,)))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (64,))
+    got, t = timed(ops.cd_column_update, X, y, X[:64], w, kern)
+    want = ref.cd_column_update_ref(X, y, X[:64], w, gamma=8.0)
+    err = float(jnp.max(jnp.abs(got - want)))
+    rows.append(("kernels.cd_update.2048x64", t * 1e6, f"maxerr={err:.2e}"))
+    assert err < 1e-3
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,72 @@
+"""Where the paper's technique meets the model zoo: train a DC-SVM
+classification head on frozen features from a zoo LM.
+
+A tiny LM embeds token sequences; DC-SVM learns a non-linear classifier on
+the pooled features WITHOUT backprop through the LM — the classic kernel-
+head fine-tune, solved exactly by divide-and-conquer.
+
+    PYTHONPATH=src python examples/svm_head_on_lm_features.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (
+    DCSVMConfig, Kernel, accuracy, fit, predict_exact,
+)
+from repro.models import lm as LM
+from repro.models import model as M
+from repro.models.param import init_tree
+
+
+def make_labeled_sequences(key, n, seq, vocab):
+    """Synthetic task: label = does the motif token appear in the sequence."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (n, seq), 0, vocab)
+    motif = 7
+    has = jax.random.bernoulli(k2, 0.5, (n,))
+    pos = jax.random.randint(k3, (n,), 0, seq)
+    tokens = jnp.where(has[:, None] & (jnp.arange(seq)[None] == pos[:, None]),
+                       motif, tokens)
+    y = jnp.where(has, 1.0, -1.0)
+    return tokens, y
+
+
+def main():
+    cfg = get_config("qwen15_05b", reduced=True)
+    params = init_tree(M.build_decls_any(cfg), jax.random.PRNGKey(0),
+                       jnp.float32)
+    key = jax.random.PRNGKey(1)
+    tokens, y = make_labeled_sequences(key, 2000, 32, cfg.vocab)
+
+    @jax.jit
+    def embed(tok):
+        logits, _, _ = LM.forward(cfg, params, tok, chunk=16)
+        return logits.mean(axis=1)          # mean-pooled last-layer readout
+
+    feats = []
+    for s in range(0, tokens.shape[0], 256):
+        feats.append(embed(tokens[s:s + 256]))
+    X = jnp.concatenate(feats)
+    X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+    # project to a manageable feature dim for the kernel head
+    key_p = jax.random.PRNGKey(2)
+    P = jax.random.normal(key_p, (X.shape[1], 32)) / np.sqrt(X.shape[1])
+    X = X @ P
+
+    ntr = 1600
+    Xtr, ytr, Xte, yte = X[:ntr], y[:ntr], X[ntr:], y[ntr:]
+    svm_cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=0.5), C=4.0, k=4,
+                          levels=1, m=400, tol=1e-3)
+    t0 = time.perf_counter()
+    model = fit(svm_cfg, Xtr, ytr)
+    acc = accuracy(yte, predict_exact(model, Xte))
+    print(f"DC-SVM head on frozen LM features: {time.perf_counter()-t0:.1f}s, "
+          f"test acc {acc:.3f} (motif-detection task)")
+
+
+if __name__ == "__main__":
+    main()

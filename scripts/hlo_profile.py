@@ -1,0 +1,69 @@
+"""Rank collectives / largest ops in a cell's partitioned HLO (hillclimb tool).
+
+    PYTHONPATH=src python scripts/hlo_profile.py --arch deepseek_moe_16b \
+        --shape train_4k [--mesh single] [--top 15]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.analysis import _DTYPE_BYTES, _SHAPE_RE
+
+COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--chunk", type=int, default=1024)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    build = build_cell(cfg, mesh, SHAPES[args.shape], chunk=args.chunk)
+    compiled = build.step_fn.lower(*build.abstract_args).compile()
+    text = compiled.as_text()
+
+    items = []
+    for line in text.splitlines():
+        kind = next((k for k in COLL if f" {k}(" in line or f" {k}-start(" in line), None)
+        if kind is None or "-done(" in line:
+            continue
+        shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split("(", 1)[0])
+        b = sum(shape_bytes(d, s) for d, s in shapes)
+        meta = re.search(r'op_name="([^"]+)"', line)
+        items.append((b, kind, meta.group(1)[-110:] if meta else line.strip()[:110]))
+    items.sort(reverse=True)
+    total = sum(b for b, _, _ in items)
+    print(f"{len(items)} collectives, {total/2**30:.2f} GiB total (per-device shapes)")
+    agg = defaultdict(float)
+    for b, kind, name in items:
+        agg[kind] += b
+    for kind, b in sorted(agg.items(), key=lambda kv: -kv[1]):
+        print(f"  {kind:20s} {b/2**30:9.2f} GiB")
+    print("\ntop ops:")
+    for b, kind, name in items[: args.top]:
+        print(f"  {b/2**30:8.3f} GiB {kind:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+# The paper's Section-5 comparison set, reimplemented in JAX:
+#   exact_cd   — LIBSVM analogue: whole-problem greedy CD + shrinking, zero init
+#   cascade    — CascadeSVM [Graf et al., 2005]: random binary partition tree,
+#                only SVs propagate upward
+#   nystrom    — LLSVM [Zhang et al., 2008/Wang et al., 2011]: kmeans-Nystrom
+#                low-rank feature map + linear SVM
+#   rff        — FastFood/RFF analogue [Le et al., 2013]: random Fourier
+#                features + linear SVM
+#   ltpu       — Locally-Tuned Processing Units [Moody & Darken, 1989]
+#   (BCM prediction lives in repro.core.predict — it is a prediction-time
+#    combiner over the DC-SVM cluster models, as in the paper's Table 1)
+from repro.baselines.exact_cd import ExactSVM, train_exact
+from repro.baselines.cascade import CascadeSVM, train_cascade
+from repro.baselines.nystrom import LLSVM, train_llsvm
+from repro.baselines.rff import RFFSVM, train_rff
+from repro.baselines.ltpu import LTPU, train_ltpu

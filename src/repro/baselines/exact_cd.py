@@ -1,0 +1,76 @@
+"""LIBSVM analogue: exact whole-problem solver, zero-initialized.
+
+Greedy coordinate descent with shrinking on the full dual — the same solver
+family LIBSVM uses (working-set selection by maximal violation), adapted to
+the bias-free dual (working set of size 1 suffices).  This is the paper's
+primary exact baseline: DC-SVM's claim is that warm-starting THIS solver from
+the divide step's concatenated solution slashes its iteration count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel, gram
+from repro.core import solver as S
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ExactSVM:
+    kernel: Kernel
+    C: float
+    X: Array
+    y: Array
+    alpha: Array
+    iters: int
+    pg_max: float
+    train_time: float
+
+    def decision(self, Xq: Array, chunk: int = 4096) -> Array:
+        w = self.alpha * self.y
+        out = jnp.zeros(Xq.shape[0], Xq.dtype)
+        n = self.X.shape[0]
+        for s in range(0, n, chunk):
+            e = min(s + chunk, n)
+            out = out + gram(self.kernel, Xq, self.X[s:e]) @ w[s:e]
+        return out
+
+    def predict(self, Xq: Array) -> Array:
+        return jnp.sign(self.decision(Xq))
+
+
+def train_exact(
+    X: Array,
+    y: Array,
+    kernel: Kernel,
+    C: float,
+    tol: float = 1e-3,
+    max_iters: int = 300_000,
+    shrink_rounds: int = 3,
+    block: int = 0,
+    alpha0: Optional[Array] = None,
+    full_gram_threshold: int = 16384,
+) -> ExactSVM:
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    t0 = time.perf_counter()
+    n = X.shape[0]
+    if n <= full_gram_threshold:
+        K = gram(kernel, X, X)
+        Q = (y[:, None] * y[None, :]) * K
+        res = S.solve_with_shrinking(Q, C, alpha0=alpha0, tol=tol,
+                                     max_iters=max_iters, rounds=shrink_rounds,
+                                     block=block)
+    else:
+        res = S.solve_box_qp_matvec(X, y, kernel, C, alpha0=alpha0, tol=tol,
+                                    max_iters=max_iters,
+                                    block=max(block, 64))
+    res.alpha.block_until_ready()
+    return ExactSVM(kernel, C, X, y, res.alpha, int(res.iters),
+                    float(res.pg_max), time.perf_counter() - t0)

@@ -1,0 +1,84 @@
+"""LLSVM: kmeans-Nystrom low-rank linearization [Zhang et al.; Wang et al. 2011].
+
+Approximate K ~= K_nb K_bb^-1 K_bn with b landmark points chosen by kmeans,
+map every point to phi(x) = K_bb^{-1/2} k_b(x)  (rank-b feature space), and
+train a LINEAR SVM there with the same box-QP CD solver.  An *approximate*
+solver in the paper's taxonomy: fast, but accuracy saturates with b.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel, gram
+from repro.core import solver as S
+
+Array = jax.Array
+
+
+def _plain_kmeans(X: Array, b: int, key: Array, iters: int = 15) -> Array:
+    """Standard (input-space) kmeans for landmark selection."""
+    n = X.shape[0]
+    idx = jax.random.choice(key, n, shape=(b,), replace=False)
+    centers = X[idx]
+
+    def body(_, centers):
+        d = jnp.sum((X[:, None, :] - centers[None, :, :]) ** 2, -1)
+        a = jnp.argmin(d, 1)
+        H = jax.nn.one_hot(a, b, dtype=X.dtype)
+        cnt = jnp.maximum(H.sum(0), 1.0)
+        return (H.T @ X) / cnt[:, None]
+
+    return jax.lax.fori_loop(0, iters, body, centers)
+
+
+@dataclasses.dataclass
+class LLSVM:
+    kernel: Kernel
+    C: float
+    landmarks: Array          # (b, d)
+    whiten: Array             # (b, b) = K_bb^{-1/2}
+    w: Array                  # (b,) linear weights in feature space
+    train_time: float
+
+    def features(self, Xq: Array) -> Array:
+        return gram(self.kernel, Xq, self.landmarks) @ self.whiten
+
+    def decision(self, Xq: Array) -> Array:
+        return self.features(Xq) @ self.w
+
+    def predict(self, Xq: Array) -> Array:
+        return jnp.sign(self.decision(Xq))
+
+
+def train_llsvm(
+    X: Array,
+    y: Array,
+    kernel: Kernel,
+    C: float,
+    num_landmarks: int = 128,
+    tol: float = 1e-3,
+    max_iters: int = 200_000,
+    reg: float = 1e-6,
+    seed: int = 0,
+) -> LLSVM:
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    t0 = time.perf_counter()
+    landmarks = _plain_kmeans(X, num_landmarks, jax.random.PRNGKey(seed))
+    Kbb = gram(kernel, landmarks, landmarks)
+    evals, evecs = jnp.linalg.eigh(Kbb + reg * jnp.eye(num_landmarks))
+    whiten = evecs @ jnp.diag(jax.lax.rsqrt(jnp.maximum(evals, reg))) @ evecs.T
+    feats = gram(kernel, X, landmarks) @ whiten          # (n, b)
+    # linear SVM dual: Q = (y y') (F F'); solve with the same CD machinery,
+    # exploiting the low rank via the matvec Q a = y * (F (F' (y a)))
+    Q = (y[:, None] * y[None, :]) * (feats @ feats.T)
+    res = S.solve_box_qp_block(Q, C, tol=tol, max_iters=max_iters,
+                               block=min(64, X.shape[0]))
+    w = feats.T @ (res.alpha * y)
+    w.block_until_ready()
+    return LLSVM(kernel, C, landmarks, whiten, w, time.perf_counter() - t0)

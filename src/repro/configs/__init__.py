@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ALIASES,
+    ARCH_IDS,
+    SHAPES,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+    RunShape,
+    XLSTMConfig,
+    get_config,
+    shape_applicable,
+)

@@ -1,0 +1,164 @@
+"""Architecture + run-shape configuration and the config registry.
+
+Every assigned architecture gets a module in ``repro/configs/<id>.py`` whose
+``CONFIG`` is a ``ModelConfig`` with the exact published hyper-parameters,
+plus a ``reduced()`` variant for CPU smoke tests.  Shapes (the assigned
+seq-len x batch cells) live here as ``SHAPES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared: int = 0            # shared (always-on) experts, DeepSeek-style
+    d_expert: int = 0              # expert hidden dim (0 -> d_ff)
+    every: int = 1                 # MoE every N layers (others dense)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor_m: float = 2.0     # mLSTM up-projection
+    proj_factor_s: float = 1.334   # sLSTM ffn factor
+    chunk: int = 64                # chunkwise-parallel mLSTM chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    mlp: str = "swiglu"            # swiglu | geglu | gelu
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False      # gemma: scale embeddings by sqrt(d_model)
+    moe: Optional[MoEConfig] = None
+    # layer stacking: an optional explicit prefix + a repeating period of
+    # (mixer, ffn) slots; None period -> [("attn", "moe"|"dense")]
+    prefix_pattern: Tuple[Tuple[str, str], ...] = ()
+    period_pattern: Optional[Tuple[Tuple[str, str], ...]] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # dtypes: full configs run bf16 params/activations (the dry-run numbers);
+    # reduced smoke configs switch to f32 for CPU numerics
+    param_dtype: str = "bfloat16"
+    activ_dtype: str = "bfloat16"
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    enc_layers: int = 0
+    enc_frames: int = 1500         # stub audio frontend output length
+    # VLM stub frontend
+    num_patches: int = 0           # >0: input_specs provides patch embeddings
+    # training details
+    remat: str = "full"            # full | dots | none
+    scan_layers: bool = True
+    sub_quadratic: bool = False    # True for SSM/hybrid/linear archs (long_500k)
+    # gradient-accumulation microbatches for the train_4k cell, sized so the
+    # per-chip activation temp fits v5e's 16 GiB HBM (§Perf H7)
+    train_microbatches: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        from repro.models.model import build_decls_any
+        from repro.models.param import count_params
+        return count_params(build_decls_any(self))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        from repro.models.lm import build_plan
+        plan = build_plan(self)
+        m = self.moe
+        d_e = m.d_expert or self.d_ff
+        n_moe = plan.n_periods * sum(1 for p in plan.period if p.ffn == "moe")
+        n_moe += sum(1 for p in plan.prefix if p.ffn == "moe")
+        per_expert = 3 * self.d_model * d_e
+        inactive = n_moe * (m.num_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class RunShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, RunShape] = {
+    "train_4k": RunShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": RunShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": RunShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": RunShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "jamba_v01_52b",
+    "qwen15_05b",
+    "qwen3_8b",
+    "gemma_2b",
+    "yi_6b",
+    "deepseek_moe_16b",
+    "phi35_moe_42b",
+    "internvl2_26b",
+    "xlstm_125m",
+    "whisper_medium",
+]
+
+# external ids (with dashes/dots) -> module names
+ALIASES = {
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "qwen3-8b": "qwen3_8b",
+    "gemma-2b": "gemma_2b",
+    "yi-6b": "yi_6b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "internvl2-26b": "internvl2_26b",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-medium": "whisper_medium",
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: RunShape) -> Tuple[bool, str]:
+    """The brief's skip rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k requires sub-quadratic attention (skip per brief)"
+    return True, ""

@@ -1,0 +1,34 @@
+"""deepseek-moe-16b [arXiv:2401.06066] — fine-grained MoE.
+
+28L, d_model=2048, 16H (MHA kv=16), vocab=102400; fine-grained experts:
+64 routed (top-6) + 2 shared, expert hidden 1408; first layer is a dense
+FFN (intermediate 10944) per the DeepSeekMoE paper.
+"""
+import dataclasses
+
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=10944,                 # dense first layer intermediate
+    vocab=102400,
+    prefix_pattern=(("attn", "dense"),),
+    period_pattern=(("attn", "moe"),),
+    moe=MoEConfig(num_experts=64, top_k=6, num_shared=2, d_expert=1408),
+    rope_theta=10_000.0,
+    train_microbatches=4,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=128, n_heads=4, n_kv=4, d_ff=384,
+        vocab=512,
+        moe=MoEConfig(num_experts=8, top_k=2, num_shared=1, d_expert=64),
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

@@ -1,0 +1,32 @@
+"""internvl2-26b [arXiv:2404.16821] — InternViT + InternLM2 VLM.
+
+LM backbone only per the brief: 48L, d_model=6144, 48H (GQA kv=8),
+d_ff=16384, vocab=92553.  The InternViT frontend is a STUB:
+``input_specs`` provides precomputed patch embeddings (num_patches tokens,
+counted inside the cell's seq_len); the LM loss masks patch positions.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    d_ff=16384,
+    vocab=92553,
+    num_patches=1024,           # ViT stub output tokens (448px / 14 patch)
+    rope_theta=1_000_000.0,
+    train_microbatches=16,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=192, n_heads=6, n_kv=2, d_ff=384,
+        vocab=512, num_patches=16,
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

@@ -1,0 +1,46 @@
+"""jamba-v0.1-52b [arXiv:2403.19887; hf].
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=65536; hybrid
+Mamba:attention 7:1 interleave (one attention layer per 8-layer period);
+MoE 16 experts top-2 on every second layer.  Sub-quadratic (runs long_500k).
+"""
+import dataclasses
+
+from repro.configs.base import MambaConfig, MoEConfig, ModelConfig
+
+_PERIOD = (
+    ("mamba", "dense"), ("mamba", "moe"),
+    ("mamba", "dense"), ("mamba", "moe"),
+    ("mamba", "dense"), ("mamba", "moe"),
+    ("mamba", "dense"), ("attn", "moe"),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14336,
+    vocab=65536,
+    rope_theta=0.0,            # jamba uses no positional encoding (mamba mixes)
+    period_pattern=_PERIOD,
+    moe=MoEConfig(num_experts=16, top_k=2, every=2),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    sub_quadratic=True,
+    train_microbatches=16,
+)
+# note: rope_theta=0.0 is a sentinel meaning "no rope on attention layers"?
+# jamba DOES apply no explicit positional embedding; we keep rope on the 4
+# attention layers (theta 1e4) to match common jamba reimplementations:
+CONFIG = dataclasses.replace(CONFIG, rope_theta=10_000.0)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=8, d_model=128, n_heads=8, n_kv=2, d_ff=256, vocab=512,
+        moe=MoEConfig(num_experts=4, top_k=2, every=2),
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

@@ -1,0 +1,30 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model=4096, 32H (GQA kv=8), expert hidden 6400, vocab=32064;
+16 experts, top-2 routing (every layer).
+"""
+import dataclasses
+
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=6400,
+    vocab=32064,
+    moe=MoEConfig(num_experts=16, top_k=2),
+    rope_theta=10_000.0,
+    train_microbatches=16,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=128, n_heads=4, n_kv=2, d_ff=256,
+        vocab=512, moe=MoEConfig(num_experts=4, top_k=2),
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

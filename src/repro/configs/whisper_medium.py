@@ -1,0 +1,38 @@
+"""whisper-medium [arXiv:2212.04356] — encoder-decoder audio model.
+
+24 encoder + 24 decoder layers, d_model=1024, 16H (MHA), d_ff=4096,
+vocab=51865.  The conv audio frontend is a STUB per the brief:
+``input_specs`` supplies precomputed frame embeddings (B, 1500, d_model).
+Deviation from the released checkpoints (DESIGN.md): decoder positions are
+sinusoidal (not a learned 448-slot table) so the assigned decode_32k cell is
+well-defined.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,                # decoder layers
+    enc_layers=24,
+    enc_dec=True,
+    enc_frames=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv=16,
+    d_ff=4096,
+    vocab=51865,
+    mlp="gelu",
+    tie_embeddings=True,
+    norm_eps=1e-5,
+    train_microbatches=4,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, enc_layers=2, enc_frames=64, d_model=128,
+        n_heads=4, n_kv=4, d_ff=256, vocab=512,
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

@@ -1,0 +1,33 @@
+"""xlstm-125m [arXiv:2405.04517].
+
+12L, d_model=768, 4 heads, vocab=50304; alternating mLSTM (matrix-memory,
+chunkwise-parallel) and sLSTM (scalar-memory, recurrent) blocks; no separate
+FFN on mLSTM blocks (d_ff=0 in the assignment — the block's own projections
+carry the capacity); sLSTM blocks carry a small GELU FFN per the paper.
+Attention-free: runs the long_500k cell.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv=4,
+    d_ff=0,
+    vocab=50304,
+    period_pattern=(("mlstm", "none"), ("slstm", "none")),
+    xlstm=XLSTMConfig(proj_factor_m=2.0, proj_factor_s=1.334, chunk=64),
+    sub_quadratic=True,
+    train_microbatches=2,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=128, n_heads=4, n_kv=4, vocab=512,
+        param_dtype="float32", activ_dtype="float32", remat="none",
+    )

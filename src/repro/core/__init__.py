@@ -1,0 +1,32 @@
+# DC-SVM core: the paper's primary contribution as a composable JAX module.
+from repro.core.kernels import Kernel, gram, gram_matvec, offdiag_mass, sqdist
+from repro.core.solver import (
+    SolveResult,
+    kkt_residual,
+    objective,
+    proj_grad,
+    solve_box_qp,
+    solve_box_qp_block,
+    solve_box_qp_matvec,
+    solve_with_shrinking,
+)
+from repro.core.kkmeans import (
+    KKMeansModel,
+    Partition,
+    assign_points,
+    balanced_assign,
+    kernel_kmeans,
+    route,
+    two_step_kernel_kmeans,
+)
+from repro.core.dcsvm import DCSVMConfig, DCSVMModel, fit, objective_value
+from repro.core.predict import (
+    accuracy,
+    decision_bcm,
+    decision_early,
+    decision_exact,
+    predict_bcm,
+    predict_early,
+    predict_exact,
+)
+from repro.core import bounds

@@ -1,0 +1,55 @@
+"""Theorem 1 / Theorem 3 quantities (paper Sec. 3-4, Figure 1).
+
+* D(pi)            — off-diagonal kernel mass across clusters (Thm 1)
+* D_{S}(pi)        — the same restricted to an index set S (Thm 3)
+* theorem1_bound   — (1/2) C^2 D(pi), the upper bound on f(a-bar) - f(a*)
+* theorem2_margin  — the gradient threshold above which a subproblem non-SV
+                     is provably a non-SV of the full problem
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel, gram, offdiag_mass
+
+Array = jax.Array
+
+
+def d_pi(kernel: Kernel, X: Array, assign: Array, num_chunks: int = 8) -> Array:
+    """D(pi) = sum over cross-cluster pairs of |K(x_i, x_j)|."""
+    return offdiag_mass(kernel, X, jnp.asarray(assign), num_chunks=num_chunks)
+
+
+def d_pi_subset(kernel: Kernel, X: Array, assign: Array, subset: Array) -> Array:
+    """Theorem-3 restriction: D over pairs within ``subset`` only."""
+    Xs = X[subset]
+    ls = jnp.asarray(assign)[subset]
+    Ks = jnp.abs(gram(kernel, Xs, Xs))
+    cross = ls[:, None] != ls[None, :]
+    return jnp.sum(Ks * cross)
+
+
+def theorem1_bound(kernel: Kernel, X: Array, assign: Array, C: float) -> float:
+    return float(0.5 * C * C * d_pi(kernel, X, assign))
+
+
+def theorem3_bound(kernel: Kernel, X: Array, assign: Array, C: float, subset: Array) -> float:
+    return float(0.5 * C * C * d_pi_subset(kernel, X, assign, subset))
+
+
+def theorem2_margin(kernel: Kernel, X: Array, assign: Array, C: float,
+                    sigma_n: float) -> float:
+    """C D(pi) (1 + sqrt(n) K_max / sqrt(sigma_n D(pi))).
+
+    sigma_n is the smallest eigenvalue of the kernel matrix (caller supplies;
+    computing it exactly is O(n^3) so tests use small n or a lower bound).
+    """
+    n = X.shape[0]
+    D = float(d_pi(kernel, X, assign))
+    if D <= 0.0:
+        return 0.0
+    return C * D * (1.0 + np.sqrt(n) * kernel.k_max / np.sqrt(sigma_n * D))

@@ -1,0 +1,223 @@
+"""DC-SVM: multilevel divide-and-conquer kernel SVM (paper Algorithm 1).
+
+Level l (= levels .. 1): partition all n points into k^l balanced clusters by
+two-step kernel kmeans (sampling from the lower level's support vectors when
+``adaptive`` — Theorem 3), then solve the k^l independent sub-QPs warm-started
+from the lower level's alpha.  All clusters of one level are solved in a
+single vmapped CD call (or a lax.map sweep when the per-level Gram budget is
+exceeded).
+
+Level 0: optional refine pass on the level-1 support vectors, then the full
+problem — warm-started greedy CD (Theorem 1 says the warm start is within
+C^2 D(pi)/sigma_n of alpha*, so few iterations are needed; Theorem 2 says the
+SV pattern is largely correct already, so the greedy selection rarely touches
+non-SVs).
+
+``early_stop_level = l`` stops after level l and returns an early-prediction
+model (paper eq. 11): route a query to its nearest cluster, score with that
+cluster's local model only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel, gram, gram_matvec
+from repro.core.kkmeans import Partition, two_step_kernel_kmeans
+from repro.core import solver as S
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DCSVMConfig:
+    kernel: Kernel = Kernel("rbf", gamma=1.0)
+    C: float = 1.0
+    k: int = 4                     # branching factor (paper: 4)
+    levels: int = 4                # l_max (paper: 4 => 256 bottom clusters)
+    m: int = 1000                  # kmeans sample size (paper: 1000)
+    kmeans_iters: int = 20
+    tol: float = 1e-3              # projected-gradient stopping tolerance
+    max_iters: int = 30_000        # per-(sub)problem CD iteration cap
+    block: int = 0                 # 0 = paper-faithful 1-coordinate CD; >0 = block CD
+    sweeps: int = 4                # inner sweeps for block CD
+    adaptive: bool = True          # sample kmeans points from lower-level SVs
+    refine: bool = True            # refine pass on level-1 SVs before final solve
+    balanced: bool = True
+    use_pallas: bool = False
+    early_stop_level: int = 0      # 0 = exact solve; l >= 1 = stop after level l
+    gram_budget: int = 2**27       # max floats for a level's stacked cluster Grams
+    full_gram_threshold: int = 16384   # above this, level 0 uses the matvec solver
+    shrink_rounds: int = 3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DCSVMModel:
+    config: DCSVMConfig
+    X: Array                       # training points (referenced by the kernel model)
+    y: Array                       # labels in {-1, +1}
+    alpha: Array                   # dual solution (exact or level-l early)
+    partition: Optional[Partition] # partition at the stopping level (early prediction)
+    is_early: bool
+    level_stats: List[Dict[str, Any]]
+
+    @property
+    def sv_index(self) -> np.ndarray:
+        return np.nonzero(np.asarray(self.alpha) > 0)[0]
+
+
+# ---------------------------------------------------------------------------
+# per-level solve: all clusters at once
+# ---------------------------------------------------------------------------
+
+def _solve_clusters(
+    cfg: DCSVMConfig, Xc: Array, yc: Array, ac: Array, mask: Array
+) -> Array:
+    """Solve k independent sub-QPs. Xc: (k, nc, d), yc/ac/mask: (k, nc)."""
+    k, nc, _ = Xc.shape
+
+    def one(Xi, yi, ai, mi):
+        Ki = cfg.kernel.pairwise(Xi, Xi)
+        Qi = (yi[:, None] * yi[None, :]) * Ki
+        # zero pad rows/cols so pad slots cannot leak into real gradients
+        mm = mi[:, None] & mi[None, :]
+        Qi = jnp.where(mm, Qi, 0.0)
+        Qi = Qi + jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Qi.dtype)
+        ai = jnp.where(mi, ai, 0.0)
+        if cfg.block > 0 and cfg.block < nc:
+            res = S.solve_box_qp_block(
+                Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                block=cfg.block, sweeps=cfg.sweeps, active_mask=mi,
+            )
+        else:
+            res = S.solve_box_qp(
+                Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                active_mask=mi,
+            )
+        return res.alpha
+
+    if k * nc * nc <= cfg.gram_budget:
+        return jax.vmap(one)(Xc, yc, ac, mask)
+    # sequential sweep bounds peak memory at one cluster Gram
+    return jax.lax.map(one, (Xc, yc, ac, mask))
+
+
+def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array) -> Array:
+    """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs)."""
+    Xs, ys, as_ = X[idx], y[idx], alpha[idx]
+    Ks = gram(cfg.kernel, Xs, Xs, use_pallas=cfg.use_pallas)
+    Qs = (ys[:, None] * ys[None, :]) * Ks
+    if cfg.block > 0:
+        res = S.solve_box_qp_block(
+            Qs, cfg.C, alpha0=as_, tol=cfg.tol, max_iters=cfg.max_iters,
+            block=min(cfg.block, Qs.shape[0]), sweeps=cfg.sweeps,
+        )
+    else:
+        res = S.solve_box_qp(Qs, cfg.C, alpha0=as_, tol=cfg.tol, max_iters=cfg.max_iters)
+    return alpha.at[idx].set(res.alpha)
+
+
+def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array):
+    """Top-level (level 0) solve on the whole problem, warm-started."""
+    n = X.shape[0]
+    if n <= cfg.full_gram_threshold:
+        K = gram(cfg.kernel, X, X, use_pallas=cfg.use_pallas)
+        Q = (y[:, None] * y[None, :]) * K
+        res = S.solve_with_shrinking(
+            Q, cfg.C, alpha0=alpha, tol=cfg.tol, max_iters=cfg.max_iters,
+            rounds=cfg.shrink_rounds, block=cfg.block,
+        )
+    else:
+        res = S.solve_box_qp_matvec(
+            X, y, cfg.kernel, cfg.C, alpha0=alpha, tol=cfg.tol,
+            max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
+        )
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def fit(
+    cfg: DCSVMConfig,
+    X: Array,
+    y: Array,
+    callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
+) -> DCSVMModel:
+    """Train DC-SVM.  ``callback(level, alpha, stats)`` fires after each level
+    (level 0 = final solve) — benchmarks use it for time/objective curves."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    n = X.shape[0]
+    key = jax.random.PRNGKey(cfg.seed)
+    alpha = jnp.zeros(n, X.dtype)
+    sv_idx: Optional[np.ndarray] = None
+    stats: List[Dict[str, Any]] = []
+    partition: Optional[Partition] = None
+    rng = np.random.default_rng(cfg.seed)
+
+    for l in range(cfg.levels, 0, -1):
+        kl = cfg.k ** l
+        if kl >= n // 2:   # degenerate level (clusters of ~1 point): skip
+            continue
+        t0 = time.perf_counter()
+        key, sub = jax.random.split(key)
+        sample_idx = None
+        if cfg.adaptive and sv_idx is not None and len(sv_idx) > kl:
+            take = min(cfg.m, len(sv_idx))
+            sample_idx = rng.choice(sv_idx, size=take, replace=False)
+        partition = two_step_kernel_kmeans(
+            cfg.kernel, X, kl, sub, m=cfg.m, iters=cfg.kmeans_iters,
+            sample_idx=sample_idx, balanced=cfg.balanced, use_pallas=cfg.use_pallas,
+        )
+        t_cluster = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        Xc = partition.gather(X)
+        yc = partition.gather(y)
+        mask = jnp.asarray(partition.mask)
+        ac = jnp.where(mask, partition.gather(alpha), 0.0)
+        ac = _solve_clusters(cfg, Xc, yc, ac, mask)
+        alpha = partition.scatter(ac, n)
+        alpha.block_until_ready()
+        t_train = time.perf_counter() - t0
+
+        sv_idx = np.nonzero(np.asarray(alpha) > 0)[0]
+        st = dict(level=l, clusters=kl, cluster_time=t_cluster, train_time=t_train,
+                  n_sv=int(len(sv_idx)))
+        stats.append(st)
+        if callback is not None:
+            callback(l, alpha, st)
+        if cfg.early_stop_level == l:
+            return DCSVMModel(cfg, X, y, alpha, partition, True, stats)
+
+    # ---- level 0: refine + full solve -----------------------------------
+    t0 = time.perf_counter()
+    if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < n:
+        alpha = _solve_subset(cfg, X, y, alpha, jnp.asarray(sv_idx))
+    res = _solve_full(cfg, X, y, alpha)
+    alpha = res.alpha
+    alpha.block_until_ready()
+    st = dict(level=0, clusters=1, cluster_time=0.0,
+              train_time=time.perf_counter() - t0,
+              n_sv=int(np.sum(np.asarray(alpha) > 0)),
+              iters=int(res.iters), pg_max=float(res.pg_max))
+    stats.append(st)
+    if callback is not None:
+        callback(0, alpha, st)
+    return DCSVMModel(cfg, X, y, alpha, partition, False, stats)
+
+
+def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
+                    num_chunks: int = 8) -> Array:
+    """f(alpha) on the FULL problem, computed without materializing Q."""
+    Kv = gram_matvec(cfg.kernel, X, y * alpha, num_chunks=num_chunks)
+    return 0.5 * jnp.vdot(alpha, y * Kv) - jnp.sum(alpha)

@@ -1,0 +1,207 @@
+"""Two-step kernel kmeans (Ghitta et al., 2011 as used by DC-SVM).
+
+Step 1: run kernel kmeans on m sampled points (m << n) entirely in kernel
+space — O(m^2) memory.  Step 2: assign every point to its nearest center via
+the (n x m) cross-kernel — O(nmd) compute, never O(n^2).
+
+Centers are represented implicitly: a center c is the kernel-space mean of
+the sampled points assigned to it, so distances only need
+
+    d(x, c) = K(x,x) - 2 * K(x, X_m) @ w_c + s_c,
+    w_c = H[:, c] / |V_c|,   s_c = w_c' K_mm w_c.
+
+The returned ``KKMeansModel`` carries (X_m, W, s) and is the routing model
+used at serving time by early prediction (paper eq. 11).
+
+Balanced partitioning: SPMD shards must be equal-sized, and the paper itself
+prefers balanced partitions (Sec. 3).  ``balanced_assign`` does a greedy
+capacity-constrained assignment ordered by assignment confidence (host-side
+numpy: partitioning is one-off data preparation, not a jitted hot path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kernels import Kernel, gram
+
+Array = jax.Array
+
+
+class KKMeansModel(NamedTuple):
+    """Implicit kernel-space centers: d(x,c) = K(x,x) - 2 K(x,Xm) W[:,c] + s[c]."""
+
+    Xm: Array       # (m, d) sampled points
+    W: Array        # (m, k) normalized one-hot weights H / counts
+    s: Array        # (k,)  per-center self-term  w_c' K_mm w_c
+
+    @property
+    def k(self) -> int:
+        return self.W.shape[1]
+
+
+def _center_terms(Kmm: Array, assign: Array, k: int) -> Tuple[Array, Array]:
+    H = jax.nn.one_hot(assign, k, dtype=Kmm.dtype)              # (m, k)
+    counts = jnp.maximum(H.sum(axis=0), 1.0)
+    W = H / counts[None, :]
+    M = Kmm @ W                                                 # (m, k)
+    s = jnp.einsum("mk,mk->k", W, M)
+    return W, s
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kernel_kmeans(Kmm: Array, k: int, key: Array, iters: int = 20) -> Tuple[Array, Array, Array]:
+    """Kernel kmeans on an (m, m) kernel matrix. Returns (assign, W, s)."""
+    m = Kmm.shape[0]
+    diag = jnp.diagonal(Kmm)
+    # balanced random init (round-robin over a permutation)
+    perm = jax.random.permutation(key, m)
+    assign0 = jnp.zeros(m, jnp.int32).at[perm].set(jnp.arange(m, dtype=jnp.int32) % k)
+
+    def body(_, assign):
+        W, s = _center_terms(Kmm, assign, k)
+        D = diag[:, None] - 2.0 * (Kmm @ W) + s[None, :]
+        # reseed empty clusters: give them the point currently farthest from
+        # its own center (standard empty-cluster fix, keeps k populated)
+        counts = jnp.sum(jax.nn.one_hot(assign, k, dtype=Kmm.dtype), axis=0)
+        new_assign = jnp.argmin(D, axis=1).astype(jnp.int32)
+        empty = counts <= 0.0
+        worst = jnp.argmax(D[jnp.arange(m), new_assign])
+        first_empty = jnp.argmax(empty)
+        new_assign = jnp.where(
+            jnp.any(empty), new_assign.at[worst].set(first_empty.astype(jnp.int32)), new_assign
+        )
+        return new_assign
+
+    assign = lax.fori_loop(0, iters, body, assign0)
+    W, s = _center_terms(Kmm, assign, k)
+    return assign, W, s
+
+
+@partial(jax.jit, static_argnames=("kernel", "use_pallas"))
+def assign_points(
+    kernel: Kernel, model: KKMeansModel, X: Array, use_pallas: bool = False
+) -> Tuple[Array, Array]:
+    """Nearest-center assignment for arbitrary points. Returns (assign, D)."""
+    Knm = gram(kernel, X, model.Xm, use_pallas=use_pallas)      # (n, m)
+    D = kernel.diag(X)[:, None] - 2.0 * (Knm @ model.W) + model.s[None, :]
+    return jnp.argmin(D, axis=1).astype(jnp.int32), D
+
+
+def route(kernel: Kernel, model: KKMeansModel, X: Array) -> Array:
+    """Serving-time router: cluster id per query point (early prediction)."""
+    return assign_points(kernel, model, X)[0]
+
+
+def balanced_assign(D: np.ndarray, capacity: int) -> np.ndarray:
+    """Greedy capacity-constrained assignment from an (n, k) distance matrix.
+
+    Points are processed in order of confidence (gap between best and
+    second-best center); each takes its nearest center that still has room.
+    Guarantees every cluster gets at most ``capacity`` points; with
+    n <= k * capacity every point is assigned.
+    """
+    D = np.asarray(D, dtype=np.float64)
+    n, k = D.shape
+    if n > k * capacity:
+        raise ValueError(f"capacity {capacity} x {k} clusters < n={n}")
+    order_pref = np.argsort(D, axis=1)                 # per-point center ranking
+    if k > 1:
+        part = np.partition(D, 1, axis=1)
+        confidence = part[:, 1] - part[:, 0]           # big gap = assign first
+    else:
+        confidence = np.zeros(n)
+    point_order = np.argsort(-confidence)
+    remaining = np.full(k, capacity, dtype=np.int64)
+    out = np.full(n, -1, dtype=np.int32)
+    for i in point_order:
+        for c in order_pref[i]:
+            if remaining[c] > 0:
+                out[i] = c
+                remaining[c] -= 1
+                break
+    assert (out >= 0).all()
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """A (near-)balanced partition of n points into k clusters, padded layout.
+
+    ``idx[c]`` holds the original indices of cluster c padded with -1 up to
+    ``nc`` slots; ``mask[c]`` marks real entries.  The padded layout lets the
+    divide step gather every cluster into a dense (k, nc, d) tensor and solve
+    all k subproblems in ONE vmapped CD call (pad slots are excluded via the
+    solver's active mask).
+    """
+
+    assign: np.ndarray      # (n,) cluster id per original index
+    idx: np.ndarray         # (k, nc) original indices, -1 for padding
+    mask: np.ndarray        # (k, nc) True for real points
+    k: int
+    nc: int                 # slots per cluster (k * nc >= n)
+    model: KKMeansModel     # routing model (implicit centers)
+
+    @staticmethod
+    def build(assign: np.ndarray, k: int, model: KKMeansModel) -> "Partition":
+        n = assign.shape[0]
+        counts = np.bincount(assign, minlength=k)
+        nc = int(counts.max())
+        idx = np.full((k, nc), -1, dtype=np.int64)
+        mask = np.zeros((k, nc), dtype=bool)
+        for c in range(k):
+            members = np.nonzero(assign == c)[0]
+            idx[c, : len(members)] = members
+            mask[c, : len(members)] = True
+        return Partition(assign=assign, idx=idx, mask=mask, k=k, nc=nc, model=model)
+
+    def gather(self, A: Array) -> Array:
+        """Gather per-cluster values: (n, ...) -> (k, nc, ...); pads read row 0."""
+        return jnp.asarray(A)[np.maximum(self.idx, 0)]
+
+    def scatter(self, Ac: Array, n: int, fill: float = 0.0) -> Array:
+        """Scatter (k, nc, ...) back to (n, ...). Pad slots are dropped."""
+        flat_idx = jnp.asarray(np.where(self.mask, self.idx, n).reshape(-1))
+        flat_val = jnp.asarray(Ac).reshape((self.k * self.nc,) + Ac.shape[2:])
+        out = jnp.full((n + 1,) + flat_val.shape[1:], fill, flat_val.dtype)
+        out = out.at[flat_idx].set(flat_val)
+        return out[:n]
+
+
+def two_step_kernel_kmeans(
+    kernel: Kernel,
+    X: Array,
+    k: int,
+    key: Array,
+    m: int = 1000,
+    iters: int = 20,
+    sample_idx: Optional[Array] = None,
+    balanced: bool = True,
+    use_pallas: bool = False,
+) -> Partition:
+    """The paper's clustering step. ``sample_idx`` overrides the random sample
+    (adaptive clustering passes the current support-vector set here)."""
+    n = X.shape[0]
+    m = min(m, n)
+    if sample_idx is None:
+        sample_idx = jax.random.choice(key, n, shape=(m,), replace=False)
+    else:
+        sample_idx = jnp.asarray(sample_idx)
+        m = sample_idx.shape[0]
+    Xm = X[sample_idx]
+    Kmm = gram(kernel, Xm, Xm, use_pallas=use_pallas)
+    _, W, s = kernel_kmeans(Kmm, k, key, iters=iters)
+    model = KKMeansModel(Xm=Xm, W=W, s=s)
+    assign, D = assign_points(kernel, model, X, use_pallas=use_pallas)
+    if balanced:
+        capacity = -(-n // k)  # ceil
+        assign = balanced_assign(np.asarray(D), capacity)
+    else:
+        assign = np.asarray(assign)
+    return Partition.build(np.asarray(assign, np.int32), k, model)

@@ -1,0 +1,279 @@
+"""Box-constrained QP solvers for the SVM dual (no bias term).
+
+    min_a  f(a) = 1/2 a' Q a - e' a     s.t.  0 <= a <= C
+
+Because the paper drops the bias term there is no equality constraint, so
+single-coordinate updates are exactly solvable in closed form:
+
+    a_i <- clip(a_i - g_i / Q_ii, 0, C),      g = Q a - e.
+
+Solvers (all pure JAX, `lax` control flow, vmap-able over a leading batch of
+independent subproblems — the divide step solves all clusters of one level in
+a single vmapped call):
+
+* ``solve_box_qp``        — greedy (Gauss-Southwell) CD, the paper-faithful
+                            solver (LIBSVM's selection rule without bias).
+* ``solve_box_qp_block``  — beyond-paper batched variant: select top-B
+                            coordinates by projected gradient, solve the BxB
+                            sub-QP, rank-B gradient update (MXU-friendly).
+* ``solve_box_qp_matvec`` — block CD with on-the-fly kernel columns; never
+                            materializes Q (top-level conquer at large n).
+
+Stopping criterion everywhere: max_i |projected gradient| < tol — identical
+semantics to LIBSVM's epsilon on the violating pair, adapted to the
+bias-free dual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kernels import Kernel
+
+Array = jax.Array
+
+
+class SolveResult(NamedTuple):
+    alpha: Array
+    grad: Array          # g = Q a - e at the returned alpha
+    iters: Array         # number of outer iterations executed
+    pg_max: Array        # final max |projected gradient|
+
+
+def objective(alpha: Array, grad: Array) -> Array:
+    """f(a) = 1/2 a'Qa - e'a given g = Qa - e  =>  f = 1/2 a'(g - e)... no:
+
+    a'Qa = a'(g + e) so f = 1/2 a'(g + e) - e'a = 1/2 a'g - 1/2 e'a.
+    """
+    return 0.5 * jnp.vdot(alpha, grad) - 0.5 * jnp.sum(alpha)
+
+
+def proj_grad(alpha: Array, grad: Array, C: float) -> Array:
+    """Projected gradient of the box QP (the KKT residual)."""
+    at_lo = alpha <= 0.0
+    at_hi = alpha >= C
+    pg = jnp.where(at_lo, jnp.minimum(grad, 0.0), grad)
+    pg = jnp.where(at_hi, jnp.maximum(grad, 0.0), pg)
+    return pg
+
+
+def kkt_residual(Q: Array, alpha: Array, C: float) -> Array:
+    g = Q @ alpha - 1.0
+    return jnp.max(jnp.abs(proj_grad(alpha, g, C)))
+
+
+# ---------------------------------------------------------------------------
+# Greedy single-coordinate CD (paper-faithful conquer/sub-solver)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def solve_box_qp(
+    Q: Array,
+    C: float,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 10_000,
+    active_mask: Optional[Array] = None,
+) -> SolveResult:
+    """Greedy coordinate descent on a dense Q. vmap over leading dims is fine.
+
+    ``active_mask`` freezes coordinates (shrinking): masked-out coordinates
+    are never selected (their pg is treated as 0 for selection AND stopping,
+    matching LIBSVM's shrunk working set).
+    """
+    n = Q.shape[0]
+    diag = jnp.maximum(jnp.diagonal(Q), 1e-12)
+    alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
+    g = Q @ alpha - 1.0
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+
+    def cond(state):
+        _, _, it, pg_max = state
+        return (pg_max > tol) & (it < max_iters)
+
+    def body(state):
+        alpha, g, it, _ = state
+        pg = jnp.where(mask, proj_grad(alpha, g, C), 0.0)
+        i = jnp.argmax(jnp.abs(pg))
+        new_ai = jnp.clip(alpha[i] - g[i] / diag[i], 0.0, C)
+        delta = new_ai - alpha[i]
+        alpha = alpha.at[i].set(new_ai)
+        g = g + delta * Q[:, i]
+        # stopping value computed from the *pre-update* pg (cheap, standard)
+        return alpha, g, it + 1, jnp.max(jnp.abs(pg))
+
+    # one priming evaluation so the loop can exit immediately at the optimum
+    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, C), 0.0)))
+    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+    return SolveResult(alpha, g, iters, pg_max)
+
+
+# ---------------------------------------------------------------------------
+# Block greedy CD (beyond-paper batched variant)
+# ---------------------------------------------------------------------------
+
+def _solve_small_qp(Qbb: Array, gb: Array, ab: Array, C: float, sweeps: int) -> Array:
+    """Cyclic CD on the BxB subproblem. g_b is the gradient at entry; we
+    maintain it locally. Returns the new a_b."""
+    B = Qbb.shape[0]
+    diag = jnp.maximum(jnp.diagonal(Qbb), 1e-12)
+
+    def body(t, carry):
+        a, g = carry
+        j = t % B
+        new_aj = jnp.clip(a[j] - g[j] / diag[j], 0.0, C)
+        delta = new_aj - a[j]
+        a = a.at[j].set(new_aj)
+        g = g + delta * Qbb[:, j]
+        return a, g
+
+    a, _ = lax.fori_loop(0, sweeps * B, body, (ab, gb))
+    return a
+
+
+@partial(jax.jit, static_argnames=("block", "sweeps", "max_iters"))
+def solve_box_qp_block(
+    Q: Array,
+    C: float,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 2_000,
+    block: int = 32,
+    sweeps: int = 4,
+    active_mask: Optional[Array] = None,
+) -> SolveResult:
+    """Top-B greedy block CD: each outer iteration moves B coordinates.
+
+    Selection by |projected gradient| (Gauss-Southwell-B). The rank-B gradient
+    update `g += Q[:, idx] @ delta` is a skinny matmul — the MXU-friendly
+    reshaping of the paper's one-at-a-time CD.
+    """
+    n = Q.shape[0]
+    alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
+    g = Q @ alpha - 1.0
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+
+    def cond(state):
+        _, _, it, pg_max = state
+        return (pg_max > tol) & (it < max_iters)
+
+    def body(state):
+        alpha, g, it, _ = state
+        pg = jnp.where(mask, proj_grad(alpha, g, C), 0.0)
+        scores = jnp.abs(pg)
+        _, idx = lax.top_k(scores, block)
+        Qbb = Q[idx][:, idx]
+        ab, gb = alpha[idx], g[idx]
+        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
+        delta = new_ab - ab
+        alpha = alpha.at[idx].set(new_ab)
+        g = g + Q[:, idx] @ delta
+        return alpha, g, it + 1, jnp.max(scores)
+
+    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, C), 0.0)))
+    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+    return SolveResult(alpha, g, iters, pg_max)
+
+
+# ---------------------------------------------------------------------------
+# Matvec-free block CD: kernel columns computed on the fly (large n)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("kernel", "block", "sweeps", "max_iters", "grad_chunks"))
+def solve_box_qp_matvec(
+    X: Array,
+    y: Array,
+    kernel: Kernel,
+    C: float,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 500,
+    block: int = 64,
+    sweeps: int = 4,
+    grad_chunks: int = 16,
+) -> SolveResult:
+    """Block greedy CD where Q columns are recomputed from (X, y) per step.
+
+    Never materializes Q (the TPU adaptation of LIBSVM's kernel cache: we
+    trade FLOPs for HBM, recomputing the B selected columns each outer
+    iteration via one (n x d)x(d x B) matmul + fused kernel transform).
+    """
+    n = X.shape[0]
+    alpha = jnp.zeros(n, X.dtype) if alpha0 is None else alpha0
+
+    # initial gradient g = Q @ alpha - 1 via chunked rows
+    from repro.core.kernels import gram_matvec
+
+    def q_matvec(v):
+        return y * gram_matvec(kernel, X, y * v, num_chunks=grad_chunks)
+
+    g = q_matvec(alpha) - 1.0
+    diag_q = kernel.diag(X)  # y_i^2 = 1 so Q_ii = K_ii
+
+    def cond(state):
+        _, _, it, pg_max = state
+        return (pg_max > tol) & (it < max_iters)
+
+    def body(state):
+        alpha, g, it, _ = state
+        pg = proj_grad(alpha, g, C)
+        scores = jnp.abs(pg)
+        _, idx = lax.top_k(scores, block)
+        Xb, yb = X[idx], y[idx]
+        Kb = kernel.pairwise(X, Xb)                  # (n, B) on the fly
+        Qb = (y[:, None] * yb[None, :]) * Kb
+        Qbb = Qb[idx]
+        ab, gb = alpha[idx], g[idx]
+        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
+        delta = new_ab - ab
+        alpha = alpha.at[idx].set(new_ab)
+        g = g + Qb @ delta
+        return alpha, g, it + 1, jnp.max(scores)
+
+    pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, C)))
+    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+    return SolveResult(alpha, g, iters, pg_max)
+
+
+# ---------------------------------------------------------------------------
+# Shrinking wrapper (LIBSVM-style outer rounds)
+# ---------------------------------------------------------------------------
+
+def solve_with_shrinking(
+    Q: Array,
+    C: float,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 10_000,
+    rounds: int = 3,
+    shrink_margin: float = 10.0,
+    block: int = 0,
+) -> SolveResult:
+    """Outer shrinking rounds around the CD solver.
+
+    Each round: solve on the active set to ``tol``; variables pinned at a
+    bound with |g| > shrink_margin * tol are removed from the active set for
+    the next round; the final round always re-activates everything so the
+    returned KKT residual is on the FULL problem (LIBSVM's un-shrink check).
+    """
+    n = Q.shape[0]
+    alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
+    mask = jnp.ones(n, bool)
+    solver = solve_box_qp if block <= 0 else partial(solve_box_qp_block, block=block)
+    res = None
+    total_iters = 0
+    for r in range(rounds):
+        final = r == rounds - 1
+        m = jnp.ones(n, bool) if final else mask
+        res = solver(Q, C, alpha0=alpha, tol=tol, max_iters=max_iters, active_mask=m)
+        alpha, g = res.alpha, res.grad
+        total_iters += int(res.iters)
+        strongly_lo = (alpha <= 0.0) & (g > shrink_margin * tol)
+        strongly_hi = (alpha >= C) & (g < -shrink_margin * tol)
+        mask = ~(strongly_lo | strongly_hi)
+    return SolveResult(res.alpha, res.grad, jnp.asarray(total_iters), res.pg_max)

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    gaussian_mixture,
+    checkerboard,
+    two_spirals,
+    covtype_like,
+    webspam_like,
+    train_test_split,
+)
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig

@@ -1,0 +1,79 @@
+"""Fused kernel-column block gradient update Pallas kernel.
+
+The conquer-step block CD updates g += Q[:, idx] @ delta with Q columns
+recomputed on the fly.  This kernel fuses, per X tile:
+
+    K_tile = rbf(Xt, Xb)            (bm, B)  MXU + VPU exp
+    g_out  = y_t * (K_tile @ w)     (bm, 1)  skinny MXU matmul
+
+where w = y_b * delta.  The (n, B) column block never hits HBM — only the
+(n,) gradient delta does.  This is the recompute-in-VMEM replacement for
+LIBSVM's kernel cache (DESIGN.md §2).
+
+VMEM per grid step (bm=512, B<=256, d<=512): well under 4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cd_body(x_ref, y_ref, xb_ref, w_ref, o_ref, *, kind: str, gamma: float,
+             degree: int, coef0: float):
+    x = x_ref[...]                                      # (bm, d)
+    xb = xb_ref[...]                                    # (B, d)
+    g = jax.lax.dot_general(x, xb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if kind == "linear":
+        k = g
+    elif kind == "poly":
+        k = (gamma * g + coef0) ** degree
+    else:
+        xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[:, None]
+        bb = jnp.sum(xb.astype(jnp.float32) ** 2, axis=-1)[None, :]
+        k = jnp.exp(-gamma * jnp.maximum(xx + bb - 2.0 * g, 0.0))
+    w = w_ref[...]                                      # (B, 1)
+    o = y_ref[...] * jnp.dot(k, w, preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "interpret"),
+)
+def cd_column_update(
+    X: jax.Array,
+    y: jax.Array,
+    Xb: jax.Array,
+    w: jax.Array,
+    *,
+    kind: str = "rbf",
+    gamma: float = 1.0,
+    degree: int = 3,
+    coef0: float = 0.0,
+    bm: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns dg (n,) = y * (K(X, Xb) @ w).  y: (n,), w: (B,)."""
+    n, d = X.shape
+    B, _ = Xb.shape
+    assert n % bm == 0
+    body = functools.partial(_cd_body, kind=kind, gamma=gamma, degree=degree,
+                             coef0=coef0)
+    out = pl.pallas_call(
+        body,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((B, d), lambda i: (0, 0)),
+            pl.BlockSpec((B, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(X, y[:, None], Xb, w[:, None])
+    return out[:, 0]

@@ -1,0 +1,112 @@
+"""Flash attention (forward) Pallas kernel — fused online-softmax attention.
+
+The dry-run showed every dense train/prefill cell is MEMORY-bound, and the
+dominant bytes are the (B, H, Sq, Sk) score tensors the XLA graph round-trips
+through HBM (~350 GB/layer on qwen3 train_4k).  This kernel is the
+structural fix on the TPU target: scores, softmax statistics, and the
+weighted accumulation all live in VMEM scratch; HBM traffic drops to
+Q/K/V/O (the roofline-analytic adjustment is reported in EXPERIMENTS.md
+§Perf H9 — the CPU dry-run cannot lower Pallas, so the HLO tables keep the
+unfused numbers).
+
+Tiling: grid (B*H, Sq/bq, Sk/bk), k-dim innermost ("arbitrary" semantics);
+per-(q-tile) scratch: acc (bq, hd) f32, running max m and sum l.  Block
+sizes default to (bq, bk) = (512, 512): VMEM per step ~(512*hd*3 + 512*512)
+* 4B ~= 2.3 MiB at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, -1e30)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                       # (bq, 1)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, bq: int = 512, bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, Sq, hd), k/v: (BH, Sk, hd) — heads pre-flattened into batch.
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / np.sqrt(hd)
+    body = functools.partial(_flash_body, scale=scale, causal=causal,
+                             bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        body,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Pure-jnp oracle (naive softmax attention), f32 math."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,73 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, dtype policy, and backend dispatch:
+compiled Pallas on TPU, ``interpret=True`` (Python evaluation of the kernel
+body) elsewhere — the correctness-validation mode this container uses.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kermat as _kermat
+from repro.kernels import kmeans_assign as _assign
+from repro.kernels import cd_update as _cd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(A: jax.Array, mult: int) -> Tuple[jax.Array, int]:
+    n = A.shape[0]
+    pad = (-n) % mult
+    if pad:
+        A = jnp.pad(A, ((0, pad),) + ((0, 0),) * (A.ndim - 1))
+    return A, n
+
+
+def kernel_matrix(X: jax.Array, Y: jax.Array, kernel, bm: int = 256,
+                  bn: int = 256) -> jax.Array:
+    """K(X, Y) via the tiled Pallas kernel. ``kernel`` is a core.kernels.Kernel."""
+    bm = min(bm, max(8, X.shape[0]))
+    bn = min(bn, max(8, Y.shape[0]))
+    Xp, n = _pad_rows(X, bm)
+    Yp, m = _pad_rows(Y, bn)
+    out = _kermat.kermat(
+        Xp, Yp, kind=kernel.kind, gamma=float(kernel.gamma),
+        degree=int(kernel.degree), coef0=float(kernel.coef0),
+        bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return out[:n, :m]
+
+
+def kmeans_assign(X: jax.Array, Xm: jax.Array, W: jax.Array, s: jax.Array,
+                  gamma: float, bm: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Fused assignment. W: (m, k), s: (k,). Returns (assign (n,), scores (n, k))."""
+    kreal = W.shape[1]
+    kpad = max(128, -(-kreal // 128) * 128)
+    Wp = jnp.pad(W, ((0, 0), (0, kpad - kreal)))
+    sp = jnp.pad(s, (0, kpad - kreal), constant_values=jnp.inf)[None, :]
+    bm = min(bm, max(8, X.shape[0]))
+    Xp, n = _pad_rows(X, bm)
+    assign, scores = _assign.kmeans_assign(
+        Xp, Xm, Wp, sp, gamma=float(gamma), bm=bm, interpret=_interpret()
+    )
+    return assign[:n], scores[:n, :kreal]
+
+
+def cd_column_update(X: jax.Array, y: jax.Array, Xb: jax.Array, w: jax.Array,
+                     kernel, bm: int = 512) -> jax.Array:
+    """dg = y * (K(X, Xb) @ w) via the fused Pallas kernel."""
+    bm = min(bm, max(8, X.shape[0]))
+    Xp, n = _pad_rows(X, bm)
+    yp, _ = _pad_rows(y, bm)
+    out = _cd.cd_column_update(
+        Xp, yp, Xb, w, kind=kernel.kind, gamma=float(kernel.gamma),
+        degree=int(kernel.degree), coef0=float(kernel.coef0),
+        bm=bm, interpret=_interpret(),
+    )
+    return out[:n]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kermat_ref(X, Y, *, kind="rbf", gamma=1.0, degree=3, coef0=0.0):
+    g = X.astype(jnp.float32) @ Y.astype(jnp.float32).T
+    if kind == "linear":
+        return g
+    if kind == "poly":
+        return (gamma * g + coef0) ** degree
+    xx = jnp.sum(X.astype(jnp.float32) ** 2, -1)[:, None]
+    yy = jnp.sum(Y.astype(jnp.float32) ** 2, -1)[None, :]
+    return jnp.exp(-gamma * jnp.maximum(xx + yy - 2 * g, 0.0))
+
+
+def kmeans_assign_ref(X, Xm, W, s, *, gamma=1.0):
+    k = kermat_ref(X, Xm, kind="rbf", gamma=gamma)
+    scores = -2.0 * k @ W + s            # (n, kpad); padded s entries are +inf
+    return jnp.argmin(scores, axis=-1).astype(jnp.int32), scores
+
+
+def cd_column_update_ref(X, y, Xb, w, *, kind="rbf", gamma=1.0, degree=3,
+                         coef0=0.0):
+    k = kermat_ref(X, Xb, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    return y * (k @ w)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+For each cell on each requested mesh:
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(**abstract)
+    compiled = lowered.compile()
+    record memory_analysis / cost_analysis / collective schedule
+
+The 512 placeholder host devices exist ONLY here (the env var above precedes
+every jax import, including the transitive ones below).  Results land in
+experiments/dryrun/<arch>__<shape>__<mesh>.json and feed EXPERIMENTS.md
+§Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every runnable cell
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.analysis import (
+    HW, measure_compiled, model_flops, probe_correct, summarize_cell,
+)
+
+
+def _probe_config(cfg, n_periods: int):
+    """Depth-reduced, UNROLLED, single-microbatch variant for the
+    cost-analysis probes (scan bodies are counted once by cost_analysis; a
+    1-microbatch step does the same total arithmetic as the scanned one)."""
+    from repro.models.lm import build_plan
+    if cfg.enc_dec:
+        return dataclasses.replace(cfg, n_layers=n_periods,
+                                   enc_layers=n_periods, scan_layers=False,
+                                   train_microbatches=1)
+    plan = build_plan(cfg)
+    n_layers = len(plan.prefix) + n_periods * len(plan.period)
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False,
+                               train_microbatches=1)
+
+
+def _trips(cfg) -> int:
+    from repro.models.lm import build_plan
+    if cfg.enc_dec:
+        return cfg.n_layers            # enc and dec stacks scale together
+    return build_plan(cfg).n_periods
+
+
+def _probe_measure(cfg, mesh, shape, chunk, n_periods):
+    pcfg = _probe_config(cfg, n_periods)
+    build = build_cell(pcfg, mesh, shape, chunk=chunk)
+    compiled = build.step_fn.lower(*build.abstract_args).compile()
+    return measure_compiled(compiled)
+
+
+def _cache_bytes(cfg, shape) -> float:
+    from repro.models import model as M
+    from repro.models.param import ParamDecl
+    total = 0
+    for d in jax.tree.leaves(M.cache_decls_any(cfg, shape.global_batch,
+                                               shape.seq_len),
+                             is_leaf=lambda x: isinstance(x, ParamDecl)):
+        total += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+    return float(total)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR, chunk: int = 1024,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "family": cfg.family,
+           "params_total": cfg.param_count(),
+           "params_active": cfg.active_param_count()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = 512 if mesh_name == "multi" else 256
+    t0 = time.perf_counter()
+    try:
+        build = build_cell(cfg, mesh, shape, chunk=chunk)
+        lowered = build.step_fn.lower(*build.abstract_args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        # shallow unrolled probes correct the while-loop undercount
+        corrected = None
+        try:
+            p1 = _probe_measure(cfg, mesh, shape, chunk, 1)
+            p2 = _probe_measure(cfg, mesh, shape, chunk, 2)
+            corrected = probe_correct(p1, p2, _trips(cfg))
+        except Exception as e:
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+        hw = HW(chips=chips)
+        param_bytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+        summary = summarize_cell(
+            compiled, model_flops(cfg, shape), hw,
+            corrected=corrected, kind=shape.kind,
+            param_bytes=float(param_bytes),
+            cache_bytes=_cache_bytes(cfg, shape) if shape.kind == "decode" else 0.0)
+        rec.update(status="ok", lower_s=t_lower, compile_s=t_compile,
+                   roofline=summary)
+        mem = summary.get("memory_analysis", {})
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"bottleneck={summary['bottleneck']} "
+                  f"t_bound={summary['t_bound_s']*1e3:.2f}ms "
+                  f"roofline_frac={summary['roofline_frac']:.3f} "
+                  f"temp_bytes={mem.get('temp_size_in_bytes', '?')}",
+                  flush=True)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {mesh_name}: {e}",
+                  flush=True)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    results = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip-existing] {arch} x {shape_name} x {mesh_name}")
+                        continue
+                results.append(run_cell(arch, shape_name, mesh_name,
+                                        out_dir=args.out, chunk=args.chunk))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

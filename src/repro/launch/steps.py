@@ -1,0 +1,221 @@
+"""Step builders: jitted train/prefill/decode programs with full shardings.
+
+Everything the dry-run and the real launchers share lives here:
+  * parameter/optimizer/cache shardings from the decl trees,
+  * batch shardings (batch dim over the data-like mesh axes),
+  * the train step (value_and_grad -> clip -> AdamW, optional microbatch
+    gradient accumulation),
+  * the serve steps (prefill -> cache, greedy decode step).
+
+The lowered programs take ShapeDtypeStructs, so ``.lower()`` allocates
+nothing — exactly what the 512-device dry-run needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunShape
+from repro.launch.mesh import rules_for
+from repro.models import model as M
+from repro.models.param import ParamDecl, abstract_tree, init_tree
+from repro.models.sharding import MeshCtx, decl_shardings
+from repro.optim.adamw import AdamWConfig, adamw_update, opt_state_decls
+from repro.optim.schedule import cosine_schedule
+
+Array = jax.Array
+_is_decl = lambda x: isinstance(x, ParamDecl)
+
+
+def make_ctx(mesh: Mesh) -> MeshCtx:
+    return MeshCtx(mesh, rules_for(mesh))
+
+
+# ---------------------------------------------------------------------------
+# shardings / abstract values
+# ---------------------------------------------------------------------------
+
+def param_artifacts(cfg: ModelConfig, ctx: MeshCtx):
+    decls = M.build_decls_any(cfg)
+    return (decls,
+            abstract_tree(decls, jnp.dtype(cfg.param_dtype)),
+            decl_shardings(ctx, decls))
+
+
+def opt_artifacts(cfg: ModelConfig, opt_cfg: AdamWConfig, ctx: MeshCtx, decls):
+    odecls = opt_state_decls(opt_cfg, decls, jnp.dtype(cfg.param_dtype))
+    return (odecls,
+            abstract_tree(odecls, jnp.float32),
+            decl_shardings(ctx, odecls))
+
+
+def batch_shardings(ctx: MeshCtx, specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, sds in specs.items():
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[k] = ctx.sharding(sds.shape, axes)
+    return out
+
+
+def cache_artifacts(cfg: ModelConfig, ctx: MeshCtx, B: int, S: int):
+    cdecls = M.cache_decls_any(cfg, B, S)
+    return (cdecls,
+            abstract_tree(cdecls, jnp.dtype(cfg.activ_dtype)),
+            decl_shardings(ctx, cdecls))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainBuild:
+    step_fn: Any                 # jitted train step
+    abstract_args: Tuple         # (params, opt, batch) ShapeDtypeStructs
+    param_shardings: Any
+    opt_shardings: Any
+    batch_shardings: Any
+    decls: Any
+    opt_decls: Any
+
+
+def build_train(cfg: ModelConfig, mesh: Mesh, shape: RunShape,
+                opt_cfg: Optional[AdamWConfig] = None,
+                chunk: int = 1024,
+                microbatches: int = 0,
+                total_steps: int = 100_000) -> TrainBuild:
+    opt_cfg = opt_cfg or AdamWConfig()
+    if microbatches <= 0:
+        microbatches = max(1, cfg.train_microbatches)
+    # a microbatch must still cover every data-parallel device, or batch
+    # sharding drops to replication (measured: jamba train on the multi-pod
+    # mesh ballooned to 318 GiB/chip with 16 microbatches of 16 rows < 32
+    # data devices) — clamp to global_batch / n_data
+    from repro.launch.mesh import flat_axis_size
+    n_data = flat_axis_size(mesh, rules_for(mesh).get("batch"))
+    microbatches = min(microbatches, max(1, shape.global_batch // max(n_data, 1)))
+    while shape.global_batch % microbatches != 0:
+        microbatches -= 1
+    ctx = make_ctx(mesh)
+    decls, p_abs, p_shard = param_artifacts(cfg, ctx)
+    odecls, o_abs, o_shard = opt_artifacts(cfg, opt_cfg, ctx, decls)
+    specs = M.batch_specs(cfg, shape)
+    b_shard = batch_shardings(ctx, specs)
+    schedule = cosine_schedule(opt_cfg.lr, warmup=2000, total=total_steps)
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, ctx=ctx, chunk=chunk)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # lax.scan accumulation: the scan FORCES microbatch sequencing,
+            # which is what actually bounds the activation peak (measured:
+            # qwen3 train 54.9 -> 14.7 GiB with mb=4; an unrolled python loop
+            # lets the scheduler interleave microbatches and the peak stays
+            # at 45 GiB).  The dry-run's cost probes run with microbatches=1
+            # so per-step totals stay correctly counted (§Perf note).
+            def split(x):
+                Bm = x.shape[0] // microbatches
+                return x.reshape(microbatches, Bm, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def one(acc, b):
+                (l, met), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return acc, met
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            grads, mets = jax.lax.scan(one, zeros, mb)
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+        else:
+            (l, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+        lr = schedule(opt_state["step"])
+        params, opt_state, opt_m = adamw_update(opt_cfg, grads, opt_state,
+                                                params, lr)
+        return params, opt_state, {**metrics, **opt_m}
+
+    step = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return TrainBuild(step, (p_abs, o_abs, specs), p_shard, o_shard, b_shard,
+                      decls, odecls)
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeBuild:
+    step_fn: Any
+    abstract_args: Tuple
+    param_shardings: Any
+    cache_shardings: Any
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, shape: RunShape,
+                  chunk: int = 1024) -> ServeBuild:
+    ctx = make_ctx(mesh)
+    decls, p_abs, p_shard = param_artifacts(cfg, ctx)
+    specs = M.batch_specs(cfg, shape)
+    b_shard = batch_shardings(ctx, specs)
+    B, S = shape.global_batch, shape.seq_len
+    cdecls, c_abs, c_shard = cache_artifacts(cfg, ctx, B, S)
+
+    def prefill_step(params, batch):
+        logits, cache = M.forward_prefill(cfg, params, batch, S_max=S,
+                                          ctx=ctx, chunk=chunk)
+        # whisper prefill emits an S-sized cache already; LM emits raw states
+        return logits, cache
+
+    step = jax.jit(prefill_step,
+                   in_shardings=(p_shard, b_shard),
+                   out_shardings=None)
+    return ServeBuild(step, (p_abs, specs), p_shard, c_shard)
+
+
+def build_decode(cfg: ModelConfig, mesh: Mesh, shape: RunShape) -> ServeBuild:
+    """One greedy decode step against a seq_len-deep cache."""
+    ctx = make_ctx(mesh)
+    decls, p_abs, p_shard = param_artifacts(cfg, ctx)
+    B, S = shape.global_batch, shape.seq_len
+    cdecls, c_abs, c_shard = cache_artifacts(cfg, ctx, B, S)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = ctx.sharding((B, 1), ("batch", None))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = M.decode_step_any(cfg, params, cache, tokens, pos, ctx=ctx)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    step = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+        out_shardings=(tok_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    return ServeBuild(step, (p_abs, c_abs, tok_sds, pos_sds), p_shard, c_shard)
+
+
+def build_cell(cfg: ModelConfig, mesh: Mesh, shape: RunShape, chunk: int = 1024):
+    """The lowering entry point for one (arch x shape) cell."""
+    if shape.kind == "train":
+        return build_train(cfg, mesh, shape, chunk=chunk)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape, chunk=chunk)
+    return build_decode(cfg, mesh, shape)

@@ -1,0 +1,113 @@
+"""LM training driver (fault-tolerant).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 200 --batch 8 --seq 128
+
+Fault tolerance in this loop:
+  * atomic keep-K checkpoints of (params, opt_state) + the integer data
+    cursor — restart resumes bit-exact (the data pipeline is a pure function
+    of (seed, step));
+  * SIGTERM/SIGINT triggers a final blocking checkpoint (preemption grace);
+  * the mesh is rebuilt from whatever devices exist at restart and the
+    checkpoint is re-placed under the new shardings (elastic posture —
+    PartitionSpecs are axis-name based, not device-index based).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import SHAPES, RunShape, get_config
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train
+from repro.models.param import init_tree
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_host_mesh()
+    shape = RunShape("cli_train", args.seq, args.batch, "train")
+    opt_cfg = AdamWConfig(lr=args.lr)
+    build = build_train(cfg, mesh, shape, opt_cfg=opt_cfg,
+                        chunk=min(1024, args.seq),
+                        microbatches=args.microbatches,
+                        total_steps=args.steps)
+
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab, global_batch=args.batch, seq_len=args.seq,
+        seed=args.seed))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start_step = 0
+    if mgr.latest_step() is not None:
+        start_step = mgr.latest_step()
+        target = {"params": build.abstract_args[0], "opt": build.abstract_args[1]}
+        shardings = {"params": build.param_shardings, "opt": build.opt_shardings}
+        state = mgr.restore(target, shardings=shardings)
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start_step}", flush=True)
+    else:
+        params = init_tree(build.decls, jax.random.PRNGKey(args.seed),
+                           jnp.dtype(cfg.param_dtype))
+        params = jax.device_put(params, build.param_shardings)
+        opt = adamw_init(opt_cfg, params)
+        opt = jax.device_put(opt, build.opt_shardings)
+
+    stop = {"now": False}
+
+    def handle(sig, frame):
+        stop["now"] = True
+        print("preemption signal: checkpointing and exiting", flush=True)
+
+    signal.signal(signal.SIGTERM, handle)
+    signal.signal(signal.SIGINT, handle)
+
+    t_start = time.perf_counter()
+    tokens_per_step = args.batch * args.seq
+    for step in range(start_step, args.steps):
+        batch_tok, batch_tgt = pipe.global_batch_at(jnp.asarray(step))
+        batch = {"tokens": batch_tok, "targets": batch_tgt}
+        params, opt, metrics = build.step_fn(params, opt, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t_start
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e} "
+                  f"tok/s={(step - start_step + 1) * tokens_per_step / dt:.0f}",
+                  flush=True)
+        if (step + 1) % args.ckpt_every == 0 or stop["now"] or step == args.steps - 1:
+            mgr.save(step + 1, {"params": params, "opt": opt},
+                     blocking=stop["now"])
+        if stop["now"]:
+            mgr.wait()
+            sys.exit(0)
+    mgr.wait()
+    print("training complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

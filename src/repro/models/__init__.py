@@ -1,0 +1,1 @@
+from repro.models import layers, lm, encdec, model, moe, param, sharding, ssm, xlstm

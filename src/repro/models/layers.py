@@ -1,0 +1,243 @@
+"""Transformer building blocks: norms, RoPE, GQA/MQA attention, gated MLPs.
+
+All layer parameter groups are declared STACKED over a leading layer axis so
+the model assembly can `lax.scan` over layers (small HLO => fast 512-way SPMD
+compiles; required for this container's single-core dry-runs and good
+practice at scale).
+
+Attention is q-chunked (scan over query blocks, f32 softmax): peak score
+memory O(B * chunk * S) instead of O(B * S^2), which is what lets the
+prefill_32k cells fit.  Decode attends one token against a (B, Smax, Hkv, hd)
+cache with a length mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDecl
+from repro.models.sharding import MeshCtx, maybe_constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# norms & embeddings
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int, dtype=jnp.float32) -> Array:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10_000 ** (2 * dim / d))
+    ang = pos * inv
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd), positions: (..., S). NeoX-style half rotation."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_decls(cfg, L: int) -> Dict[str, ParamDecl]:
+    D, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv
+    d = {
+        "wq": ParamDecl((L, D, Hq * hd), ("layers", "embed", "heads")),
+        "wk": ParamDecl((L, D, Hkv * hd), ("layers", "embed", "heads")),
+        "wv": ParamDecl((L, D, Hkv * hd), ("layers", "embed", "heads")),
+        "wo": ParamDecl((L, Hq * hd, D), ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDecl((L, Hq * hd), ("layers", "heads"), init="zeros")
+        d["bk"] = ParamDecl((L, Hkv * hd), ("layers", "heads"), init="zeros")
+        d["bv"] = ParamDecl((L, Hkv * hd), ("layers", "heads"), init="zeros")
+    if cfg.qk_norm:
+        d["q_scale"] = ParamDecl((L, hd), ("layers", None), init="ones")
+        d["k_scale"] = ParamDecl((L, hd), ("layers", None), init="ones")
+    return d
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, D = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_scale"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_scale"], cfg.norm_eps)
+    if positions is not None:                  # rope (None for whisper)
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool, chunk: int = 1024,
+    q_offset: int = 0,
+    ctx: Optional[MeshCtx] = None,
+) -> Array:
+    """Scan over query chunks; full K/V per chunk; f32 softmax.
+
+    q: (B, Sq, Hq, hd), k/v: (B, Sk, Hkv, hd) with Hq = G * Hkv.
+    Peak memory O(B * chunk * Hq * Sk) — the piece that makes 32k prefill fit.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    chunk = min(chunk, Sq)
+    pad_q = (-Sq) % chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nch = (Sq + pad_q) // chunk
+
+    qc = jnp.moveaxis(q.reshape(B, nch, chunk, Hkv, G, hd), 1, 0)
+    kpos = jnp.arange(Sk)
+
+    def one(carry, args):
+        qi, i = args                                   # (B, chunk, Hkv, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + i * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+        return carry, o
+
+    _, out = jax.lax.scan(one, None, (qc, jnp.arange(nch)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq + pad_q, Hq, hd)
+    return out[:, :Sq]
+
+
+def attn_apply(
+    p: Dict[str, Array], x: Array, cfg, positions: Array, *,
+    causal: bool = True, chunk: int = 1024, ctx: Optional[MeshCtx] = None,
+) -> Array:
+    """Full-sequence attention (train / prefill)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # NOTE §Perf H3: no explicit q/k constraints here — the projections are
+    # already head-sharded by the weight sharding; extra constraints forced
+    # GSPMD into 0.25GiB resharding all-gathers per layer.
+    out = chunked_attention(q, k, v, causal=causal, chunk=chunk, ctx=ctx)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def attn_prefill(p, x, cfg, positions, *, chunk=1024, ctx=None):
+    """Like attn_apply but also returns (k, v) for cache construction."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk, ctx=ctx)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    # keep the emitted cache sharded as it accumulates through the scan
+    # (otherwise the stacked ys materialize batch-sharded only)
+    kv_axes = (("batch", None, "heads", None) if cfg.n_kv >= 16
+               else ("batch", "kv_seq", None, None))
+    k = maybe_constrain(ctx, k, *kv_axes)
+    v = maybe_constrain(ctx, v, *kv_axes)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+
+
+def attn_decode(
+    p: Dict[str, Array], x: Array, cfg, pos: Array,
+    cache_k: Array, cache_v: Array, *, ctx: Optional[MeshCtx] = None,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, Smax, Hkv, hd);
+    pos: scalar current position. Returns (out, cache_k, cache_v)."""
+    B, _, D = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    G = Hq // Hkv
+    qh = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, cache_k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    Smax = cache_k.shape[1]
+    mask = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w.astype(cache_v.dtype), cache_v)
+    o = o.reshape(B, 1, Hq * hd)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_decls(cfg, L: int, d_ff: Optional[int] = None) -> Dict[str, ParamDecl]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w1": ParamDecl((L, D, F), ("layers", "embed", "mlp")),
+            "w3": ParamDecl((L, D, F), ("layers", "embed", "mlp")),
+            "w2": ParamDecl((L, F, D), ("layers", "mlp", "embed")),
+        }
+    return {   # plain gelu (whisper)
+        "w1": ParamDecl((L, D, F), ("layers", "embed", "mlp")),
+        "b1": ParamDecl((L, F), ("layers", "mlp"), init="zeros"),
+        "w2": ParamDecl((L, F, D), ("layers", "mlp", "embed")),
+        "b2": ParamDecl((L, D), ("layers", None), init="zeros"),
+    }
+
+
+def mlp_apply(p: Dict[str, Array], x: Array, cfg, ctx: Optional[MeshCtx] = None) -> Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+        h = maybe_constrain(ctx, h, "batch", None, "mlp")
+        return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"]

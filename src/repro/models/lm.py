@@ -1,0 +1,455 @@
+"""Decoder-only LM assembly: pattern-driven layer stacks, scanned over periods.
+
+A config compiles to a ``StackPlan``: an optional prefix of explicit layers
+plus a repeating *period* of (mixer, ffn) slots that is `lax.scan`-ned over
+``n_periods`` (stacked parameters).  This keeps the HLO size independent of
+depth — the property that makes 512-way SPMD dry-run compiles tractable — and
+expresses every assigned arch:
+
+    dense        period [(attn, dense)]
+    moe          period [(attn, moe)] (+ dense prefix layers, DeepSeek)
+    jamba hybrid period of 8: 7 mamba + 1 attn, alternating dense/moe FFN
+    xlstm        period [(mlstm, none), (slstm, none)]
+
+Three execution modes share the slot code: "train" (full seq), "prefill"
+(full seq + emit per-layer cache state), "decode" (one token + carry state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as LY
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.param import ParamDecl
+from repro.models.sharding import MeshCtx, maybe_constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# stack plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    mixer: str                     # attn | mamba | mlstm | slstm
+    ffn: str                       # dense | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    prefix: Tuple[LayerPlan, ...]
+    period: Tuple[LayerPlan, ...]
+    n_periods: int
+
+
+def build_plan(cfg) -> StackPlan:
+    prefix = tuple(LayerPlan(m, f) for m, f in cfg.prefix_pattern)
+    if cfg.period_pattern is not None:
+        period = tuple(LayerPlan(m, f) for m, f in cfg.period_pattern)
+    else:
+        period = (LayerPlan("attn", "moe" if cfg.moe is not None else "dense"),)
+    rest = cfg.n_layers - len(prefix)
+    assert rest % len(period) == 0, (cfg.n_layers, len(prefix), len(period))
+    return StackPlan(prefix, period, rest // len(period))
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def _slot_decls(cfg, plan: LayerPlan, L: int) -> Dict[str, Any]:
+    D = cfg.d_model
+    d: Dict[str, Any] = {
+        "norm1": ParamDecl((L, D), ("layers", None), init="ones"),
+    }
+    if plan.mixer == "attn":
+        d["attn"] = LY.attn_decls(cfg, L)
+    elif plan.mixer == "mamba":
+        d["mamba"] = SSM.mamba_decls(cfg, L)
+    elif plan.mixer == "mlstm":
+        d["mlstm"] = XL.mlstm_decls(cfg, L)
+    elif plan.mixer == "slstm":
+        d["slstm"] = XL.slstm_decls(cfg, L)
+    else:
+        raise ValueError(plan.mixer)
+    if plan.ffn == "dense":
+        d["norm2"] = ParamDecl((L, D), ("layers", None), init="ones")
+        d["mlp"] = LY.mlp_decls(cfg, L)
+    elif plan.ffn == "moe":
+        d["norm2"] = ParamDecl((L, D), ("layers", None), init="ones")
+        d["moe"] = MOE.moe_decls(cfg, L)
+    return d
+
+
+def build_decls(cfg) -> Dict[str, Any]:
+    plan = build_plan(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    # untied: the lookup table is replicated over vocab (rows) and sharded on
+    # the embedding dim -> the gather is LOCAL (GSPMD otherwise emits a
+    # (B,S,D)-sized all-reduce per step; measured in §Perf H2).  Tied tables
+    # stay 2D-sharded: the logits matmul needs vocab-sharded output.
+    embed_axes = ("vocab", "embed") if cfg.tie_embeddings else (None, "embed")
+    decls: Dict[str, Any] = {
+        "embed": ParamDecl((V, D), embed_axes, init="embed", scale=D ** -0.5),
+        "final_norm": ParamDecl((D,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        decls["unembed"] = ParamDecl((D, V), ("embed", "vocab"))
+    if plan.prefix:
+        decls["prefix"] = [
+            _slot_decls(cfg, p, 1) for p in plan.prefix
+        ]
+    decls["stack"] = {
+        f"slot{i}": _slot_decls(cfg, p, plan.n_periods)
+        for i, p in enumerate(plan.period)
+    }
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# slot application (three modes)
+# ---------------------------------------------------------------------------
+
+def _zero_aux(cfg) -> Dict[str, Array]:
+    if cfg.moe is None:
+        return {}
+    z = jnp.zeros((), jnp.float32)
+    return {"moe_lb": z, "moe_z": z, "moe_drop_frac": z}
+
+
+def apply_slot(
+    cfg, plan: LayerPlan, p: Dict[str, Any], h: Array, *,
+    mode: str, positions: Optional[Array] = None, pos: Optional[Array] = None,
+    state: Any = None, ctx: Optional[MeshCtx] = None, chunk: int = 1024,
+):
+    """Returns (h, aux, new_state). ``state`` semantics per mode:
+    train: ignored/None out; prefill: None in, filled cache out;
+    decode: state in, updated state out."""
+    aux = _zero_aux(cfg)
+    hin = LY.rmsnorm(h, p["norm1"], cfg.norm_eps)
+    new_state = None
+
+    if plan.mixer == "attn":
+        if mode == "train":
+            mix = LY.attn_apply(p["attn"], hin, cfg, positions, chunk=chunk, ctx=ctx)
+        elif mode == "prefill":
+            mix, (k, v) = LY.attn_prefill(p["attn"], hin, cfg, positions,
+                                          chunk=chunk, ctx=ctx)
+            new_state = {"k": k, "v": v}
+        else:
+            mix, ck, cv = LY.attn_decode(p["attn"], hin, cfg, pos,
+                                         state["k"], state["v"], ctx=ctx)
+            new_state = {"k": ck, "v": cv}
+    elif plan.mixer == "mamba":
+        if mode == "train":
+            mix = SSM.mamba_apply(p["mamba"], hin, cfg, ctx=ctx)
+        elif mode == "prefill":
+            mix, new_state = SSM.mamba_apply(p["mamba"], hin, cfg, ctx=ctx,
+                                             return_state=True)
+        else:
+            mix, new_state = SSM.mamba_decode(p["mamba"], hin, cfg, state, ctx=ctx)
+    elif plan.mixer == "mlstm":
+        if mode in ("train", "prefill"):
+            mix = XL.mlstm_apply(p["mlstm"], hin, cfg, ctx=ctx)
+            if mode == "prefill":
+                new_state = _mlstm_prefill_state(cfg, p["mlstm"], hin)
+        else:
+            mix, new_state = XL.mlstm_decode(p["mlstm"], hin, cfg, state, ctx=ctx)
+    elif plan.mixer == "slstm":
+        if mode in ("train", "prefill"):
+            mix = XL.slstm_apply(p["slstm"], hin, cfg, ctx=ctx)
+            if mode == "prefill":
+                new_state = _slstm_prefill_state(cfg, p["slstm"], hin)
+        else:
+            mix, new_state = XL.slstm_decode(p["slstm"], hin, cfg, state, ctx=ctx)
+    else:
+        raise ValueError(plan.mixer)
+    h = h + mix
+
+    if plan.ffn != "none":
+        hn = LY.rmsnorm(h, p["norm2"], cfg.norm_eps)
+        if plan.ffn == "dense":
+            f = LY.mlp_apply(p["mlp"], hn, cfg, ctx=ctx)
+        else:
+            f, aux = MOE.moe_apply(p["moe"], hn, cfg, ctx=ctx)
+            aux = {**_zero_aux(cfg), **aux}
+        h = h + f
+    return h, aux, new_state
+
+
+# prefill states for recurrent mixers (mamba returns its state in-line)
+def _mlstm_prefill_state(cfg, p, hin):
+    B, S, _ = hin.shape
+    c = min(cfg.xlstm.chunk, S)
+    q, k, v, ig, logf, _ = XL._mlstm_qkvif(p, hin, cfg)
+    st = XL.init_mlstm_state(cfg, B)
+    # sequential per-token state update done chunk-wise via the same math as
+    # mlstm_apply's carry; reuse decode recurrence over a scan for exactness
+    def step(carry, args):
+        C, n, m = carry
+        ki, vi, igi, lfi = args
+        m_new = jnp.maximum(lfi + m, igi)
+        w_old = jnp.exp(lfi + m - m_new)
+        w_in = jnp.exp(igi - m_new)
+        C = w_old[..., None, None] * C + w_in[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", vi.astype(jnp.float32), ki.astype(jnp.float32))
+        n = w_old[..., None] * n + w_in[..., None] * ki.astype(jnp.float32)
+        return (C, n, m_new), None
+
+    (C, n, m), _ = jax.lax.scan(
+        step, (st.C.astype(jnp.float32), st.n.astype(jnp.float32), st.m),
+        (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+         jnp.moveaxis(ig, 1, 0), jnp.moveaxis(logf, 1, 0)))
+    return XL.MLSTMState(C.astype(hin.dtype), n.astype(hin.dtype), m)
+
+
+def _slstm_prefill_state(cfg, p, hin):
+    B, S, _ = hin.shape
+    st = XL.init_slstm_state(cfg, B)
+
+    def step(s, xt):
+        s, _ = XL._slstm_cell(p, xt, s, cfg)
+        return s, None
+
+    st, _ = jax.lax.scan(step, st, jnp.moveaxis(hin, 1, 0))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens, prefix_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * np.sqrt(cfg.d_model).astype(np.float32)
+    h = h.astype(_adtype(cfg))
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _adtype(cfg):
+    return jnp.dtype(cfg.activ_dtype)
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)   # "full": save only layer boundaries
+
+
+def scan_or_unroll(use_scan: bool, body, carry, xs, length: int):
+    """lax.scan or an unrolled python loop (identical semantics).
+
+    The unrolled form exists for the roofline probes: XLA's cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so the dry-run
+    derives corrected totals from shallow unrolled probe compiles."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def forward(
+    cfg, params, tokens: Array, *,
+    prefix_embeds: Optional[Array] = None,
+    ctx: Optional[MeshCtx] = None,
+    chunk: int = 1024,
+    mode: str = "train",
+) -> Tuple[Array, Dict[str, Array], Any]:
+    """Returns (logits, aux, cache_or_None). tokens: (B, S)."""
+    plan = build_plan(cfg)
+    h = _embed(cfg, params, tokens, prefix_embeds)
+    h = maybe_constrain(ctx, h, "batch", None, None)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    aux = _zero_aux(cfg)
+    prefill_states: Dict[str, Any] = {}
+
+    for i, p_plan in enumerate(plan.prefix):
+        pp = jax.tree.map(lambda a: a[0], params["prefix"][i])
+        h, a, st = apply_slot(cfg, p_plan, pp, h, mode=mode,
+                              positions=positions, ctx=ctx, chunk=chunk)
+        aux = {k: aux[k] + a[k] for k in aux}
+        if mode == "prefill":
+            prefill_states[f"prefix{i}"] = jax.tree.map(lambda x: x[None], st) \
+                if st is not None else None
+
+    def body(carry, xs):
+        h, aux = carry
+        states = {}
+        for i, p_plan in enumerate(plan.period):
+            h, a, st = apply_slot(cfg, p_plan, xs[f"slot{i}"], h, mode=mode,
+                                  positions=positions, ctx=ctx, chunk=chunk)
+            aux = {k: aux[k] + a[k] for k in aux}
+            states[f"slot{i}"] = st
+        if mode == "prefill":
+            return (h, aux), states
+        return (h, aux), None
+
+    scan_body = _remat(cfg, body) if mode == "train" else body
+    (h, aux), states = scan_or_unroll(cfg.scan_layers, scan_body, (h, aux),
+                                      params["stack"], plan.n_periods)
+    if mode == "prefill":
+        prefill_states["stack"] = states
+
+    h = LY.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    logits = maybe_constrain(ctx, logits, "batch", None, "vocab")
+    cache = prefill_states if mode == "prefill" else None
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg, params, batch: Dict[str, Array], *,
+            ctx: Optional[MeshCtx] = None, chunk: int = 1024,
+            z_loss: float = 1e-4) -> Tuple[Array, Dict[str, Array]]:
+    """Cross-entropy with vocab-sharded logits (one-hot contraction, no
+    all-gather of the logit tensor) + router aux losses."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    prefix = batch.get("prefix_embeds")
+    logits, aux, _ = forward(cfg, params, tokens, prefix_embeds=prefix,
+                             ctx=ctx, chunk=chunk, mode="train")
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:, :]     # loss on text positions only
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logits.dtype)
+    tgt = jnp.sum(onehot * logits, axis=-1)
+    nll = lse - tgt
+    loss = jnp.mean(nll)
+    metrics = {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    if z_loss > 0:
+        zl = z_loss * jnp.mean(lse ** 2)
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    if cfg.moe is not None:
+        loss = loss + 1e-2 * aux["moe_lb"] + cfg.moe.router_z_loss * aux["moe_z"]
+        metrics.update({k: aux[k] for k in aux})
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg, B: int, S_max: int) -> Dict[str, Any]:
+    """Cache structure as ParamDecls (shape + dtype + logical sharding axes).
+
+    KV caches shard batch over the data axes and kv-heads over the model axis
+    (divisibility-guarded: MQA's single head stays replicated); recurrent
+    states shard their channel dim over the model axis."""
+    plan = build_plan(cfg)
+    dt = _adtype(cfg)
+    P = ParamDecl
+
+    def slot_state(p_plan: LayerPlan, L: int):
+        if p_plan.mixer == "attn":
+            hkv, hd = cfg.n_kv, cfg.hd
+            # >=16 kv heads shard over the model axis directly; fewer (GQA 8,
+            # MQA 1) shard the sequence dim instead (§Perf H8)
+            axes = (("layers", "batch", None, "heads", None) if hkv >= 16
+                    else ("layers", "batch", "kv_seq", None, None))
+            kv = P((L, B, S_max, hkv, hd), axes, dtype=dt)
+            return {"k": kv, "v": kv}
+        if p_plan.mixer == "mamba":
+            di, N, dc, _ = SSM.mamba_dims(cfg)
+            return SSM.MambaState(
+                P((L, B, dc - 1, di), ("layers", "batch", None, "heads"), dtype=dt),
+                P((L, B, di, N), ("layers", "batch", "heads", None), dtype=dt))
+        if p_plan.mixer == "mlstm":
+            _, H, hd = XL.mlstm_dims(cfg)
+            return XL.MLSTMState(
+                P((L, B, H, hd, hd), ("layers", "batch", "heads", None, None), dtype=dt),
+                P((L, B, H, hd), ("layers", "batch", "heads", None), dtype=dt),
+                P((L, B, H), ("layers", "batch", "heads"), dtype=jnp.float32))
+        if p_plan.mixer == "slstm":
+            D = cfg.d_model
+            s = P((L, B, D), ("layers", "batch", "heads"), dtype=dt)
+            return XL.SLSTMState(s, s, s,
+                                 P((L, B, D), ("layers", "batch", "heads"),
+                                   dtype=jnp.float32))
+        raise ValueError(p_plan.mixer)
+
+    cache: Dict[str, Any] = {"stack": {
+        f"slot{i}": slot_state(p, plan.n_periods)
+        for i, p in enumerate(plan.period)
+    }}
+    for i, p_plan in enumerate(plan.prefix):
+        cache[f"prefix{i}"] = slot_state(p_plan, 1)
+    return cache
+
+
+def init_cache(cfg, B: int, S_max: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_decls(cfg, B, S_max),
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def decode_step(
+    cfg, params, cache: Dict[str, Any], tokens: Array, pos: Array, *,
+    ctx: Optional[MeshCtx] = None,
+) -> Tuple[Array, Dict[str, Any]]:
+    """One decode step. tokens: (B, 1); pos: scalar int32 (current position).
+    Returns (logits (B, 1, V), updated cache)."""
+    plan = build_plan(cfg)
+    h = _embed(cfg, params, tokens)
+    h = maybe_constrain(ctx, h, "batch", None, None)
+    new_cache: Dict[str, Any] = {}
+
+    for i, p_plan in enumerate(plan.prefix):
+        pp = jax.tree.map(lambda a: a[0], params["prefix"][i])
+        st = jax.tree.map(lambda a: a[0], cache[f"prefix{i}"])
+        h, _, st2 = apply_slot(cfg, p_plan, pp, h, mode="decode", pos=pos,
+                               state=st, ctx=ctx)
+        new_cache[f"prefix{i}"] = jax.tree.map(lambda a: a[None], st2)
+
+    def body(h, xs):
+        p_slice, c_slice = xs
+        new_states = {}
+        for i, p_plan in enumerate(plan.period):
+            h, _, st = apply_slot(cfg, p_plan, p_slice[f"slot{i}"], h,
+                                  mode="decode", pos=pos,
+                                  state=c_slice[f"slot{i}"], ctx=ctx)
+            new_states[f"slot{i}"] = st
+        return h, new_states
+
+    h, new_stack = scan_or_unroll(cfg.scan_layers, body, h,
+                                  (params["stack"], cache["stack"]),
+                                  plan.n_periods)
+    new_cache["stack"] = new_stack
+
+    h = LY.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    logits = maybe_constrain(ctx, logits, "batch", None, "vocab")
+    return logits, new_cache

@@ -1,0 +1,86 @@
+"""Unified model dispatch (decoder-only LM vs encoder-decoder) + input specs.
+
+``batch_specs(cfg, shape)`` is the single source of truth for what each
+(arch x run-shape) cell feeds the lowered program — ShapeDtypeStructs only
+(dry-run rule: no allocation).  Modality frontends are stubs per the brief:
+whisper gets precomputed frame embeddings, internvl2 gets precomputed patch
+embeddings (counted inside seq_len).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models.sharding import MeshCtx
+
+Array = jax.Array
+
+
+def build_decls_any(cfg):
+    return ED.build_decls(cfg) if cfg.enc_dec else LM.build_decls(cfg)
+
+
+def loss_fn(cfg, params, batch: Dict[str, Array], *, ctx: Optional[MeshCtx] = None,
+            chunk: int = 1024):
+    if cfg.enc_dec:
+        return ED.loss(cfg, params, batch, ctx=ctx, chunk=chunk)
+    return LM.lm_loss(cfg, params, batch, ctx=ctx, chunk=chunk)
+
+
+def forward_prefill(cfg, params, batch: Dict[str, Array], S_max: int, *,
+                    ctx: Optional[MeshCtx] = None, chunk: int = 1024):
+    """Prefill program: full-sequence forward that builds the serving cache."""
+    if cfg.enc_dec:
+        return ED.prefill(cfg, params, batch["frames"], batch["tokens"], S_max,
+                          ctx=ctx, chunk=chunk)
+    logits, _, cache = LM.forward(cfg, params, batch["tokens"],
+                                  prefix_embeds=batch.get("prefix_embeds"),
+                                  ctx=ctx, chunk=chunk, mode="prefill")
+    return logits[:, -1:], cache
+
+
+def cache_decls_any(cfg, B: int, S_max: int):
+    if cfg.enc_dec:
+        return ED.cache_decls(cfg, B, S_max)
+    return LM.cache_decls(cfg, B, S_max)
+
+
+def decode_step_any(cfg, params, cache, tokens: Array, pos: Array, *,
+                    ctx: Optional[MeshCtx] = None):
+    if cfg.enc_dec:
+        return ED.decode_step(cfg, params, cache, tokens, pos, ctx=ctx)
+    return LM.decode_step(cfg, params, cache, tokens, pos, ctx=ctx)
+
+
+def batch_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a run-shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    adt = jnp.dtype(cfg.activ_dtype)
+    D = cfg.d_model
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            specs = {
+                "frames": jax.ShapeDtypeStruct((B, cfg.enc_frames, D), adt),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        elif cfg.num_patches > 0:
+            text = S - cfg.num_patches
+            assert text > 0, (S, cfg.num_patches)
+            specs = {
+                "prefix_embeds": jax.ShapeDtypeStruct((B, cfg.num_patches, D), adt),
+                "tokens": jax.ShapeDtypeStruct((B, text), i32),
+            }
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

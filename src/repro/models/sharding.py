@@ -1,0 +1,70 @@
+"""Mesh context: logical-axis -> mesh-axis resolution with divisibility guards.
+
+Model code names activation/parameter dims logically ("batch", "heads",
+"mlp", ...).  ``MeshCtx`` resolves them against a concrete mesh, silently
+dropping a mesh axis when the dim is not divisible by it (e.g. MQA's single
+KV head cannot shard over the 16-way model axis — it stays replicated).
+This keeps one model definition valid on any mesh shape (elastic posture).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, axis: MeshAxis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def resolve_spec(mesh: Mesh, rules: Mapping[str, MeshAxis],
+                 shape: Sequence[int], axes: Sequence[Optional[str]]) -> PartitionSpec:
+    out = []
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name is not None else None
+        if mesh_axis is not None and dim % _axis_size(mesh, mesh_axis) != 0:
+            mesh_axis = None                      # divisibility guard
+        out.append(mesh_axis)
+    return PartitionSpec(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    rules: Mapping[str, MeshAxis]
+
+    def spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> PartitionSpec:
+        return resolve_spec(self.mesh, self.rules, shape, axes)
+
+    def constrain(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """with_sharding_constraint via logical axis names (None = replicated)."""
+        spec = self.spec(x.shape, axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+
+def maybe_constrain(ctx: Optional[MeshCtx], x: jax.Array, *axes) -> jax.Array:
+    return ctx.constrain(x, *axes) if ctx is not None else x
+
+
+def decl_shardings(ctx: MeshCtx, decls):
+    """NamedShardings for a ParamDecl tree, divisibility-guarded."""
+    from repro.models.param import ParamDecl
+
+    def one(d: ParamDecl):
+        return ctx.sharding(d.shape, d.axes)
+
+    return jax.tree.map(one, decls,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))

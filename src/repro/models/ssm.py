@@ -1,0 +1,165 @@
+"""Mamba (selective SSM) block — Jamba's sequence mixer.
+
+Training/prefill uses a parallel associative scan over the sequence
+(O(S log S) depth, exact); decode carries (conv window, ssm state) and costs
+O(1) per token — which is why the hybrid arch runs the long_500k cell while
+pure-attention archs skip it.
+
+TP sharding: the inner dimension (d_inner = expand * d_model) is sharded over
+the "heads"/model axis; the scan itself is local to each shard (state is
+per-channel), so the layer needs no collectives beyond the in/out projections
+— the TPU-friendly property of channel-factored SSMs.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDecl
+from repro.models.sharding import MeshCtx, maybe_constrain
+
+Array = jax.Array
+
+
+def mamba_dims(cfg) -> Tuple[int, int, int, int]:
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, mc.d_state, mc.d_conv, dt_rank
+
+
+def mamba_decls(cfg, L: int) -> Dict[str, ParamDecl]:
+    D = cfg.d_model
+    di, N, dc, dtr = mamba_dims(cfg)
+    return {
+        "in_proj": ParamDecl((L, D, 2 * di), ("layers", "embed", "heads")),
+        "conv_w": ParamDecl((L, dc, di), ("layers", None, "heads"),
+                            init="normal", scale=0.1),
+        "conv_b": ParamDecl((L, di), ("layers", "heads"), init="zeros"),
+        "x_proj": ParamDecl((L, di, dtr + 2 * N), ("layers", "heads", None)),
+        "dt_proj": ParamDecl((L, dtr, di), ("layers", None, "heads"),
+                             init="normal", scale=0.1),
+        "dt_bias": ParamDecl((L, di), ("layers", "heads"), init="zeros"),
+        "A_log": ParamDecl((L, di, N), ("layers", "heads", None), init="ones"),
+        "D_skip": ParamDecl((L, di), ("layers", "heads"), init="ones"),
+        "out_proj": ParamDecl((L, di, D), ("layers", "heads", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: Array   # (B, d_conv - 1, d_inner) rolling input window
+    ssm: Array    # (B, d_inner, d_state)
+
+
+def init_mamba_state(cfg, B: int, dtype=jnp.float32) -> MambaState:
+    di, N, dc, _ = mamba_dims(cfg)
+    return MambaState(jnp.zeros((B, dc - 1, di), dtype),
+                      jnp.zeros((B, di, N), dtype))
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S. x: (B, S, di), w: (dc, di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(dc))
+    return out + b
+
+
+def _ssm_scan(deltaA: Array, deltaBx: Array) -> Array:
+    """h_t = deltaA_t * h_{t-1} + deltaBx_t via associative scan over axis 1."""
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (deltaA, deltaBx), axis=1)
+    return h
+
+
+def mamba_apply(p: Dict[str, Array], x: Array, cfg,
+                ctx: Optional[MeshCtx] = None,
+                seq_chunk: int = 4096,
+                return_state: bool = False):
+    """Full-sequence forward. x: (B, S, D).
+
+    The selective scan runs CHUNKED over the sequence (lax.scan over chunks
+    carrying the (B, di, N) state; parallel associative scan within a chunk):
+    the (B, S, di, N) discretized tensors never materialize for the full
+    sequence — peak memory O(B * chunk * di * N), which is what lets the
+    jamba prefill_32k/train cells fit HBM (§Perf follow-up to H7).
+    """
+    B, S, D = x.shape
+    di, N, dc, dtr = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    xc = maybe_constrain(ctx, xc, "batch", None, "heads")
+
+    dbc = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"])
+    dt, Bc, Cc = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"])
+                            + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di, N)
+
+    c = min(seq_chunk, S)
+    if S % c != 0:
+        c = S
+    nch = S // c
+
+    def chunked(a):   # (B, S, ...) -> (nch, B, c, ...)
+        return jnp.moveaxis(a.reshape(B, nch, c, *a.shape[2:]), 1, 0)
+
+    def step(h_prev, args):
+        d_c, bc_c, xc_c, cc_c = args                           # (B, c, ...)
+        dA = jnp.exp(d_c.astype(jnp.float32)[..., None] * A)   # (B,c,di,N)
+        dBx = (d_c * xc_c).astype(jnp.float32)[..., None] * \
+            bc_c.astype(jnp.float32)[:, :, None, :]
+        # fold the carried state into the first element of the chunk
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h_prev)
+        h = _ssm_scan(dA, dBx)                                 # (B,c,di,N)
+        y = jnp.einsum("bsin,bsn->bsi", h, cc_c.astype(jnp.float32))
+        return h[:, -1], y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, (chunked(delta), chunked(Bc),
+                                         chunked(xc), chunked(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + p["D_skip"] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        window = xin[:, -(dc - 1):, :]
+        state = MambaState(window.astype(x.dtype), h_last.astype(x.dtype))
+        return out, state
+    return out
+
+
+def mamba_decode(p: Dict[str, Array], x: Array, cfg, state: MambaState,
+                 ctx: Optional[MeshCtx] = None) -> Tuple[Array, MambaState]:
+    """One-token decode. x: (B, 1, D). O(1) state update."""
+    B, _, D = x.shape
+    di, N, dc, dtr = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    xin, z = jnp.split(xz, 2, axis=-1)                          # (B, di)
+    window = jnp.concatenate([state.conv, xin[:, None, :]], axis=1)  # (B, dc, di)
+    xc = jnp.einsum("bci,ci->bi", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = window[:, 1:, :]
+
+    dbc = jnp.einsum("bi,ir->br", xc, p["x_proj"])
+    dt, Bc, Cc = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(jnp.einsum("br,ri->bi", dt, p["dt_proj"])
+                            + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(delta.astype(jnp.float32)[..., None] * A)       # (B, di, N)
+    dBx = (delta * xc).astype(jnp.float32)[..., None] * \
+        Bc.astype(jnp.float32)[:, None, :]
+    h = state.ssm.astype(jnp.float32) * dA + dBx
+    y = jnp.einsum("bin,bn->bi", h, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D_skip"] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, MambaState(new_conv.astype(state.conv.dtype),
+                           h.astype(state.ssm.dtype))

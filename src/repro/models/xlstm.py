@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence) [Beck et al., 2405.04517].
+
+mLSTM is computed in its chunkwise-parallel form (exact): a lax.scan over
+sequence chunks carries the stabilized (C, n, m) state; within a chunk the
+contribution is a small causal quadratic — O(S*c) memory, O(1)-state decode.
+sLSTM is a true recurrence (h_{t-1} feeds the gates) and runs as a lax.scan
+over time steps; decode is a single step of the same cell.
+
+Both are attention-free: the xlstm arch runs the long_500k decode cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDecl
+from repro.models.sharding import MeshCtx, maybe_constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg) -> Tuple[int, int, int]:
+    di = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    di = -(-di // cfg.n_heads) * cfg.n_heads
+    return di, cfg.n_heads, di // cfg.n_heads
+
+
+def mlstm_decls(cfg, L: int) -> Dict[str, ParamDecl]:
+    D = cfg.d_model
+    di, H, hd = mlstm_dims(cfg)
+    return {
+        "wup": ParamDecl((L, D, 2 * di), ("layers", "embed", "heads")),
+        "wq": ParamDecl((L, di, di), ("layers", "heads", None)),
+        "wk": ParamDecl((L, di, di), ("layers", "heads", None)),
+        "wv": ParamDecl((L, di, di), ("layers", "heads", None)),
+        "wif": ParamDecl((L, di, 2 * H), ("layers", "heads", None),
+                         init="normal", scale=0.02),
+        "bif": ParamDecl((L, 2 * H), ("layers", None), init="zeros"),
+        "wdown": ParamDecl((L, di, D), ("layers", "heads", "embed")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: Array   # (B, H, hd, hd)
+    n: Array   # (B, H, hd)
+    m: Array   # (B, H)
+
+
+def init_mlstm_state(cfg, B: int, dtype=jnp.float32) -> MLSTMState:
+    _, H, hd = mlstm_dims(cfg)
+    return MLSTMState(jnp.zeros((B, H, hd, hd), dtype),
+                      jnp.zeros((B, H, hd), dtype),
+                      jnp.full((B, H), -1e30, dtype))
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, D = x.shape
+    di, H, hd = mlstm_dims(cfg)
+    uz = jnp.einsum("bsd,de->bse", x, p["wup"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    q = jnp.einsum("bsi,ij->bsj", u, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsi,ij->bsj", u, p["wk"]).reshape(B, S, H, hd) / np.sqrt(hd)
+    v = jnp.einsum("bsi,ij->bsj", u, p["wv"]).reshape(B, S, H, hd)
+    gates = jnp.einsum("bsi,ig->bsg", u, p["wif"]) + p["bif"]
+    ig, fg = jnp.split(gates.astype(jnp.float32), 2, axis=-1)   # (B, S, H)
+    logf = jax.nn.log_sigmoid(fg)
+    return q, k, v, ig, logf, z
+
+
+def mlstm_apply(p: Dict[str, Array], x: Array, cfg,
+                ctx: Optional[MeshCtx] = None,
+                state: Optional[MLSTMState] = None) -> Array:
+    """Full-sequence chunkwise mLSTM. x: (B, S, D)."""
+    B, S, D = x.shape
+    di, H, hd = mlstm_dims(cfg)
+    c = min(cfg.xlstm.chunk, S)
+    assert S % c == 0, (S, c)
+    nch = S // c
+    q, k, v, ig, logf, z = _mlstm_qkvif(p, x, cfg)
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+
+    # chunk views, scan axis leading: (nch, B, c, H, ...)
+    def chunked(a):
+        return jnp.moveaxis(a.reshape(B, nch, c, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, igc, logfc = map(chunked, (q, k, v, ig, logf))
+
+    def step(carry, args):
+        C, n, m = carry                                # (B,H,hd,hd),(B,H,hd),(B,H)
+        qi, ki, vi, igi, lfi = args                    # (B,c,H,...)
+        F = jnp.cumsum(lfi, axis=1)                    # (B,c,H) inclusive
+        a_t = F                                         # cum log-forget at t
+        b_s = igi - F                                   # i_s - F_s
+        # intra-chunk gate logits D[t,s] = F_t + i_s - F_s  (s <= t)
+        Dlog = a_t[:, :, None, :] + b_s[:, None, :, :]  # (B,c,c,H)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        Dlog = jnp.where(causal[None, :, :, None], Dlog, -jnp.inf)
+        g_t = a_t + m[:, None, :]                       # state logit (B,c,H)
+        m_t = jnp.maximum(jnp.max(Dlog, axis=2), g_t)   # (B,c,H)
+        m_t = jnp.maximum(m_t, -1e30)
+        w_intra = jnp.exp(Dlog - m_t[:, :, None, :])    # (B,c,c,H)
+        w_state = jnp.exp(g_t - m_t)                    # (B,c,H)
+
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki).astype(jnp.float32)
+        wts = w_intra * scores                          # (B,c,c,H)
+        num_intra = jnp.einsum("btsh,bshd->bthd", wts, vi.astype(jnp.float32))
+        num_state = jnp.einsum("bhde,bthe->bthd",
+                               C.astype(jnp.float32), qi.astype(jnp.float32))
+        num = num_intra + w_state[..., None] * num_state
+        den_intra = jnp.sum(wts, axis=2)                # (B,c,H)
+        den_state = jnp.einsum("bhd,bthd->bth", n.astype(jnp.float32),
+                               qi.astype(jnp.float32))
+        den = den_intra + w_state * den_state
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = (num / denom[..., None]).astype(x.dtype)    # (B,c,H,hd)
+
+        # ---- state update to chunk end -------------------------------
+        Fc = F[:, -1:, :]                               # (B,1,H) total log-forget
+        m_new = jnp.maximum(Fc[:, 0] + m, jnp.max(igi + (Fc - F), axis=1))
+        w_old = jnp.exp(Fc[:, 0] + m - m_new)           # (B,H)
+        w_s = jnp.exp(igi + (Fc - F) - m_new[:, None, :])   # (B,c,H)
+        C_new = w_old[..., None, None] * C.astype(jnp.float32) + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_s, vi.astype(jnp.float32),
+                       ki.astype(jnp.float32))
+        n_new = w_old[..., None] * n.astype(jnp.float32) + \
+            jnp.einsum("bsh,bshd->bhd", w_s, ki.astype(jnp.float32))
+        return (C_new.astype(C.dtype), n_new.astype(n.dtype),
+                m_new.astype(m.dtype)), h
+
+    (_, _, _), hs = jax.lax.scan(step, tuple(state), (qc, kc, vc, igc, logfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)
+    out = h * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", out, p["wdown"])
+
+
+def mlstm_decode(p: Dict[str, Array], x: Array, cfg, state: MLSTMState,
+                 ctx: Optional[MeshCtx] = None) -> Tuple[Array, MLSTMState]:
+    """One-token decode via the exact recurrence. x: (B, 1, D)."""
+    B, _, D = x.shape
+    di, H, hd = mlstm_dims(cfg)
+    q, k, v, ig, logf, z = _mlstm_qkvif(p, x, cfg)
+    qi, ki, vi = q[:, 0], k[:, 0], v[:, 0]              # (B,H,hd)
+    igi, lfi = ig[:, 0], logf[:, 0]                     # (B,H)
+    C, n, m = state
+    m_new = jnp.maximum(lfi + m, igi)
+    w_old = jnp.exp(lfi + m - m_new)
+    w_in = jnp.exp(igi - m_new)
+    Cf = w_old[..., None, None] * C.astype(jnp.float32) + \
+        w_in[..., None, None] * jnp.einsum("bhd,bhe->bhde",
+                                           vi.astype(jnp.float32),
+                                           ki.astype(jnp.float32))
+    nf = w_old[..., None] * n.astype(jnp.float32) + \
+        w_in[..., None] * ki.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", Cf, qi.astype(jnp.float32))
+    den = jnp.einsum("bhd,bhd->bh", nf, qi.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = (num / denom[..., None]).astype(x.dtype).reshape(B, 1, di)
+    out = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", out, p["wdown"])
+    return out, MLSTMState(Cf.astype(C.dtype), nf.astype(n.dtype),
+                           m_new.astype(m.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_decls(cfg, L: int) -> Dict[str, ParamDecl]:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    F = int(cfg.xlstm.proj_factor_s * D)
+    return {
+        "wx": ParamDecl((L, D, 4 * D), ("layers", "embed", "heads")),
+        "rh": ParamDecl((L, H, hd, 4 * hd), ("layers", "heads", None, None),
+                        init="normal", scale=0.05),
+        "b": ParamDecl((L, 4 * D), ("layers", None), init="zeros"),
+        "f_w1": ParamDecl((L, D, F), ("layers", "embed", "mlp")),
+        "f_w2": ParamDecl((L, F, D), ("layers", "mlp", "embed")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: Array   # (B, D)
+    n: Array   # (B, D)
+    h: Array   # (B, D)
+    m: Array   # (B, D)
+
+
+def init_slstm_state(cfg, B: int, dtype=jnp.float32) -> SLSTMState:
+    D = cfg.d_model
+    return SLSTMState(jnp.zeros((B, D), dtype), jnp.zeros((B, D), dtype),
+                      jnp.zeros((B, D), dtype), jnp.full((B, D), -1e30, dtype))
+
+
+def _slstm_cell(p, xt: Array, state: SLSTMState, cfg) -> Tuple[SLSTMState, Array]:
+    """One sLSTM step. xt: (B, D)."""
+    B, D = xt.shape
+    H = cfg.n_heads
+    hd = D // H
+    hprev = state.h.reshape(B, H, hd)
+    # block-diagonal recurrence per head, regrouped to the (B, 4D) gate layout
+    rec = jnp.einsum("bhe,hef->bhf", hprev, p["rh"])            # (B,H,4hd)
+    rec = rec.reshape(B, H, 4, hd).transpose(0, 2, 1, 3).reshape(B, 4 * D)
+    gates = (jnp.einsum("bd,dg->bg", xt, p["wx"]) + rec + p["b"]).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(gates, 4, axis=-1)               # (B, D) each
+    zt = jnp.tanh(zt)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state.m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + state.m - m_new)
+    c_new = f_s * state.c.astype(jnp.float32) + i_s * zt
+    n_new = f_s * state.n.astype(jnp.float32) + i_s
+    h_new = jax.nn.sigmoid(ot) * (c_new / jnp.maximum(n_new, 1e-6))
+    st = SLSTMState(c_new.astype(state.c.dtype), n_new.astype(state.n.dtype),
+                    h_new.astype(state.h.dtype), m_new.astype(state.m.dtype))
+    return st, h_new.astype(xt.dtype)
+
+
+def slstm_apply(p: Dict[str, Array], x: Array, cfg,
+                ctx: Optional[MeshCtx] = None,
+                state: Optional[SLSTMState] = None) -> Array:
+    """Sequential scan over time. x: (B, S, D)."""
+    B, S, D = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(st, xt):
+        st, h = _slstm_cell(p, xt, st, cfg)
+        return st, h
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                                  # (B, S, D)
+    out = h + jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["f_w1"])) @ p["f_w2"]
+    return out
+
+
+def slstm_decode(p: Dict[str, Array], x: Array, cfg, state: SLSTMState,
+                 ctx: Optional[MeshCtx] = None) -> Tuple[Array, SLSTMState]:
+    st, h = _slstm_cell(p, x[:, 0], state, cfg)
+    h = h[:, None, :]
+    out = h + jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["f_w1"])) @ p["f_w2"]
+    return out, st

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_decls
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    compress_ef,
+    compressed_psum,
+    decompress,
+)

@@ -1,0 +1,210 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+    compute    = HLO_FLOPs_total / (chips * peak_FLOPs)
+    memory     = HLO_bytes_total / (chips * HBM_bw)
+    collective = collective_bytes_per_device / link_bw
+
+Sources: ``compiled.cost_analysis()`` supplies flops and bytes for the
+PER-DEVICE partitioned module (SPMD): totals are per-device x chips, so the
+chips cancel — we compute the terms directly from per-device numbers.
+collective bytes are parsed from the partitioned HLO text (shapes there are
+already per-device): sum of output bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, with a 2x multiplier on
+all-reduce (ring AR moves ~2x payload per device).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    chips: int = 256
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.:  %ag = bf16[16,1024,512]{2,1,0} all-gather(%x), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device collective payload bytes from partitioned HLO text."""
+    per_kind: Dict[str, float] = {k: 0.0 for k in _MULT}
+    counts: Dict[str, int] = {k: 0 for k in _MULT}
+    for line in hlo_text.splitlines():
+        if ("all-gather" not in line and "all-reduce" not in line
+                and "reduce-scatter" not in line and "all-to-all" not in line
+                and "collective-permute" not in line):
+            continue
+        if "-done(" in line:
+            continue                     # count the -start only
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            per_kind[kind] += _shape_bytes(dtype, dims) * _MULT[kind]
+            counts[kind] += 1
+            continue
+        m = _TUPLE_COLL_RE.search(line)
+        if m:
+            kind = m.group(2)
+            tot = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
+            # tuple shapes of -start ops list (input, output): halve
+            per_kind[kind] += 0.5 * tot * _MULT[kind]
+            counts[kind] += 1
+    total = float(sum(per_kind.values()))
+    return {"total_bytes": total, "per_kind": per_kind, "counts": counts}
+
+
+def roofline_terms(cost: Dict[str, float], coll_bytes: float,
+                   hw: HW = HW()) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_ / hw.hbm_bw
+    t_coll = coll_bytes / hw.link_bw
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "coll_bytes_per_device": coll_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+        "t_bound_s": dom[0],
+    }
+
+
+def measure_compiled(compiled, hlo_text: Optional[str] = None) -> Dict[str, float]:
+    """Raw per-device (flops, bytes, collective bytes) of one compiled program.
+
+    CAVEAT (measured, see EXPERIMENTS.md): XLA cost_analysis counts a
+    while-loop body ONCE regardless of trip count, so for scanned layer
+    stacks these are UNDER-counts.  The dry-run corrects them with shallow
+    unrolled probe compiles (probe_correct below)."""
+    cost = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": coll["total_bytes"],
+        "coll_counts": coll["counts"],
+        "coll_per_kind": coll["per_kind"],
+    }
+
+
+def probe_correct(probe1: Dict[str, float], probe2: Dict[str, float],
+                  trips: int) -> Dict[str, float]:
+    """Linear depth extrapolation from unrolled depth-1/depth-2 probes:
+    body = p2 - p1;   total(L) = p1 + body * (L - 1)."""
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        body = max(probe2[k] - probe1[k], 0.0)
+        out[k] = probe1[k] + body * (trips - 1)
+    return out
+
+
+def summarize_cell(compiled, model_flops_total: float, hw: HW = HW(),
+                   hlo_text: Optional[str] = None,
+                   corrected: Optional[Dict[str, float]] = None,
+                   kind: str = "train",
+                   param_bytes: float = 0.0,
+                   cache_bytes: float = 0.0) -> Dict[str, Any]:
+    """Full roofline record for one compiled cell.
+
+    ``corrected`` (from probe_correct) overrides the raw scanned-module
+    counts for the three terms; the raw counts are kept for reference."""
+    raw = measure_compiled(compiled, hlo_text)
+    use = dict(raw)
+    if corrected is not None:
+        use.update(corrected)
+    terms = roofline_terms({"flops": use["flops"], "bytes accessed": use["bytes"]},
+                           use["coll_bytes"], hw)
+    hlo_flops_total = terms["flops_per_device"] * hw.chips
+
+    # kind-aware ideal time: training/prefill are compute-referenced
+    # (model FLOPs at fleet peak); decode is bandwidth-referenced (params +
+    # cache must stream from HBM once per token).
+    t_ideal_compute = model_flops_total / (hw.chips * hw.peak_flops)
+    t_ideal_bw = (param_bytes + cache_bytes) / hw.chips / hw.hbm_bw
+    t_ideal = t_ideal_bw if kind == "decode" else t_ideal_compute
+    terms.update({
+        "raw_counts": raw,
+        "collectives": {"counts": raw["coll_counts"],
+                        "per_kind": raw["coll_per_kind"]},
+        "model_flops_total": model_flops_total,
+        "hlo_flops_total": hlo_flops_total,
+        "useful_flop_frac": (model_flops_total / hlo_flops_total
+                             if hlo_flops_total > 0 else 0.0),
+        "t_ideal_s": t_ideal,
+        "ideal_reference": "hbm_bw" if kind == "decode" else "compute_peak",
+        "roofline_frac": (t_ideal / terms["t_bound_s"]
+                          if terms["t_bound_s"] > 0 else 0.0),
+    })
+    try:
+        mem = compiled.memory_analysis()
+        terms["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:                                    # pragma: no cover
+        terms["memory_analysis"] = {"error": str(e)}
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N active params, D tokens);
+    2*N*D for inference (per forward)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch

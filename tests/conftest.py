@@ -1,0 +1,18 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override belongs
+# ONLY to repro.launch.dryrun). Force determinism-friendly settings.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration tests")

@@ -1,0 +1,79 @@
+"""Baseline solvers: sanity + the paper's qualitative orderings."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import (
+    train_cascade,
+    train_exact,
+    train_llsvm,
+    train_ltpu,
+    train_rff,
+)
+from repro.core import Kernel, accuracy, gram, kkt_residual
+from repro.data import gaussian_mixture, train_test_split
+
+KERN = Kernel("rbf", gamma=8.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y = gaussian_mixture(jax.random.PRNGKey(0), 1200, d=8, modes_per_class=4,
+                            spread=0.15)
+    return train_test_split(jax.random.PRNGKey(1), X, y)
+
+
+def test_exact_solver_kkt_and_accuracy(data):
+    Xtr, ytr, Xte, yte = data
+    m = train_exact(Xtr, ytr, KERN, C=4.0, tol=1e-4)
+    K = gram(KERN, Xtr, Xtr)
+    Q = (ytr[:, None] * ytr[None, :]) * K
+    assert float(kkt_residual(Q, m.alpha, 4.0)) <= 1e-3
+    assert accuracy(yte, m.predict(Xte)) > 0.95
+
+
+def test_cascade_trains_and_predicts(data):
+    Xtr, ytr, Xte, yte = data
+    m = train_cascade(Xtr, ytr, KERN, C=4.0, levels=3, tol=1e-3)
+    assert accuracy(yte, m.predict(Xte)) > 0.9
+    assert len(m.sv_index) < Xtr.shape[0]
+
+
+def test_llsvm_accuracy_grows_with_landmarks(data):
+    Xtr, ytr, Xte, yte = data
+    accs = []
+    for b in (8, 64):
+        m = train_llsvm(Xtr, ytr, KERN, C=4.0, num_landmarks=b)
+        accs.append(accuracy(yte, m.predict(Xte)))
+    assert accs[1] >= accs[0] - 0.01      # more landmarks, no worse
+    assert accs[1] > 0.85
+
+
+def test_rff_approximates_rbf(data):
+    Xtr, ytr, Xte, yte = data
+    m = train_rff(Xtr, ytr, KERN, C=4.0, num_features=512)
+    assert accuracy(yte, m.predict(Xte)) > 0.85
+    # feature inner products approximate the kernel
+    Z = m.features(Xtr[:200])
+    Kapprox = Z @ Z.T
+    Ktrue = gram(KERN, Xtr[:200], Xtr[:200])
+    err = float(jnp.mean(jnp.abs(Kapprox - Ktrue)))
+    assert err < 0.1
+
+
+def test_ltpu_trains(data):
+    Xtr, ytr, Xte, yte = data
+    m = train_ltpu(Xtr, ytr, KERN, num_units=128)
+    assert accuracy(yte, m.predict(Xte)) > 0.85
+
+
+def test_exact_beats_approximate_baselines(data):
+    """The paper's headline ordering: the exact solution's accuracy is an
+    upper envelope for the approximate solvers at modest capacity."""
+    Xtr, ytr, Xte, yte = data
+    exact = train_exact(Xtr, ytr, KERN, C=4.0, tol=1e-3)
+    acc_exact = accuracy(yte, exact.predict(Xte))
+    acc_ll = accuracy(yte, train_llsvm(Xtr, ytr, KERN, 4.0, num_landmarks=16).predict(Xte))
+    acc_rff = accuracy(yte, train_rff(Xtr, ytr, KERN, 4.0, num_features=64).predict(Xte))
+    assert acc_exact >= max(acc_ll, acc_rff) - 0.005

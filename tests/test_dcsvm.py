@@ -1,0 +1,145 @@
+"""Integration tests for multilevel DC-SVM (paper Algorithm 1 + Theorems)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCSVMConfig,
+    Kernel,
+    accuracy,
+    fit,
+    gram,
+    kkt_residual,
+    objective_value,
+    predict_early,
+    predict_exact,
+    solve_with_shrinking,
+)
+from repro.core.bounds import d_pi, theorem1_bound
+from repro.data import gaussian_mixture, checkerboard, train_test_split
+
+
+KERN = Kernel("rbf", gamma=8.0)
+
+
+def _dataset(n=1200, key=0):
+    X, y = gaussian_mixture(jax.random.PRNGKey(key), n, d=8, modes_per_class=4,
+                            spread=0.15)
+    return train_test_split(jax.random.PRNGKey(key + 1), X, y)
+
+
+def _full_Q(X, y, kern=KERN):
+    K = gram(kern, X, X)
+    return (y[:, None] * y[None, :]) * K
+
+
+def test_dcsvm_reaches_exact_objective():
+    Xtr, ytr, _, _ = _dataset()
+    C = 4.0
+    Q = _full_Q(Xtr, ytr)
+    exact = solve_with_shrinking(Q, C, tol=1e-4, max_iters=300_000)
+    f_exact = 0.5 * exact.alpha @ Q @ exact.alpha - exact.alpha.sum()
+
+    cfg = DCSVMConfig(kernel=KERN, C=C, k=4, levels=2, m=300, tol=1e-4)
+    model = fit(cfg, Xtr, ytr)
+    f_dc = 0.5 * model.alpha @ Q @ model.alpha - model.alpha.sum()
+    # paper's criterion: relative objective error under 1e-3 at matched tol
+    assert abs(float(f_dc - f_exact)) <= 1e-3 * abs(float(f_exact))
+    assert float(kkt_residual(Q, model.alpha, C)) <= 1e-3
+
+
+def test_theorem1_bound_holds():
+    """0 <= f(a_bar) - f(a*) <= 0.5 C^2 D(pi)  (paper Thm 1 / Fig 1)."""
+    Xtr, ytr, _, _ = _dataset(800, key=5)
+    C = 2.0
+    Q = _full_Q(Xtr, ytr)
+    exact = solve_with_shrinking(Q, C, tol=1e-5, max_iters=300_000)
+    f_star = float(0.5 * exact.alpha @ Q @ exact.alpha - exact.alpha.sum())
+
+    # a_bar: solve each cluster independently (single level, no conquer)
+    cfg = DCSVMConfig(kernel=KERN, C=C, k=4, levels=1, m=300, tol=1e-5,
+                      early_stop_level=1)
+    model = fit(cfg, Xtr, ytr)
+    f_bar = float(0.5 * model.alpha @ Q @ model.alpha - model.alpha.sum())
+    bound = theorem1_bound(KERN, Xtr, jnp.asarray(model.partition.assign), C)
+    gap = f_bar - f_star
+    assert gap >= -1e-3 * abs(f_star)          # f(a_bar) >= f(a*)
+    assert gap <= bound + 1e-3 * abs(f_star)   # Thm 1 upper bound
+
+
+def test_sv_propagation_across_levels():
+    """Theorem 2 in practice: lower-level SVs approximately contain the final
+    SV set (high recall of final SVs among level-1 SVs)."""
+    Xtr, ytr, _, _ = _dataset(1000, key=9)
+    C = 4.0
+    sv_sets = {}
+
+    def cb(level, alpha, st):
+        sv_sets[level] = set(np.nonzero(np.asarray(alpha) > 0)[0].tolist())
+
+    cfg = DCSVMConfig(kernel=KERN, C=C, k=4, levels=2, m=300, tol=1e-4)
+    fit(cfg, Xtr, ytr, callback=cb)
+    final = sv_sets[0]
+    lvl1 = sv_sets[1]
+    recall = len(final & lvl1) / max(len(final), 1)
+    assert recall > 0.9
+
+
+def test_early_stop_returns_partitioned_model():
+    Xtr, ytr, Xte, yte = _dataset(1000, key=3)
+    cfg = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=2, m=300, tol=1e-3,
+                      early_stop_level=1)
+    model = fit(cfg, Xtr, ytr)
+    assert model.is_early and model.partition is not None
+    acc = accuracy(yte, predict_early(model, Xte))
+    assert acc > 0.9
+
+
+def test_multilevel_warm_start_speeds_final_solve():
+    """The conquer step with warm start takes far fewer CD iterations than
+    solving from zero (the paper's core speed claim)."""
+    Xtr, ytr, _, _ = _dataset(1200, key=13)
+    C = 4.0
+    Q = _full_Q(Xtr, ytr)
+    cold = solve_with_shrinking(Q, C, tol=1e-4, max_iters=300_000)
+
+    iters_final = {}
+
+    def cb(level, alpha, st):
+        if level == 0:
+            iters_final["iters"] = st["iters"]
+
+    cfg = DCSVMConfig(kernel=KERN, C=C, k=4, levels=2, m=300, tol=1e-4)
+    fit(cfg, Xtr, ytr, callback=cb)
+    assert iters_final["iters"] < int(cold.iters) * 0.5
+
+
+def test_checkerboard_accuracy():
+    """Non-linearly-separable data: kernel machinery actually matters."""
+    X, y = checkerboard(jax.random.PRNGKey(21), 1600, cells=3)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(22), X, y)
+    kern = Kernel("rbf", gamma=40.0)
+    cfg = DCSVMConfig(kernel=kern, C=16.0, k=4, levels=1, m=400, tol=1e-3)
+    model = fit(cfg, Xtr, ytr)
+    assert accuracy(yte, predict_exact(model, Xte)) > 0.90
+
+
+def test_polynomial_kernel_path():
+    Xtr, ytr, Xte, yte = _dataset(800, key=31)
+    kern = Kernel("poly", gamma=1.0, degree=3)
+    cfg = DCSVMConfig(kernel=kern, C=1.0, k=4, levels=1, m=300, tol=1e-3)
+    model = fit(cfg, Xtr, ytr)
+    Q = _full_Q(Xtr, ytr, kern)
+    assert float(kkt_residual(Q, model.alpha, 1.0)) <= 1e-2
+    assert accuracy(yte, predict_exact(model, Xte)) > 0.85
+
+
+def test_objective_value_matches_dense():
+    Xtr, ytr, _, _ = _dataset(400, key=41)
+    cfg = DCSVMConfig(kernel=KERN, C=2.0)
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (Xtr.shape[0],))) * 0.1
+    Q = _full_Q(Xtr, ytr)
+    f_dense = float(0.5 * a @ Q @ a - a.sum())
+    f_chunk = float(objective_value(cfg, Xtr, ytr, a))
+    assert abs(f_dense - f_chunk) < 1e-3 * (1 + abs(f_dense))

@@ -1,0 +1,75 @@
+"""Flash-attention Pallas kernel: shape/dtype sweeps vs the naive oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+def _qkv(key, BH, Sq, Sk, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(k1, (BH, Sq, hd), dtype)
+    k = jax.random.normal(k2, (BH, Sk, hd), dtype)
+    v = jax.random.normal(k3, (BH, Sk, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("BH,Sq,Sk,hd,bq,bk", [
+    (2, 128, 128, 32, 64, 64),
+    (1, 256, 256, 64, 64, 128),
+    (3, 64, 192, 16, 32, 64),     # rectangular (cross-attention shape)
+    (2, 128, 128, 128, 128, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(BH, Sq, Sk, hd, bq, bk, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal assumes square here")
+    q, k, v = _qkv(BH + Sq, BH, Sq, Sk, hd)
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = _qkv(7, 2, 128, 128, 64, jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    assert got.dtype == jnp.bfloat16
+
+
+def test_flash_online_softmax_stability():
+    """Large score magnitudes: online max-subtraction must not overflow."""
+    q, k, v = _qkv(9, 1, 128, 128, 32)
+    q = q * 30.0
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_matches_model_attention():
+    """Equivalence with the model library's chunked attention (GQA folded)."""
+    from repro.models.layers import chunked_attention
+    B, S, Hq, Hkv, hd = 2, 128, 4, 2, 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    want = chunked_attention(q, k, v, causal=True, chunk=64)
+    # fold GQA: repeat kv heads, flatten (B, H) into batch
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    got = flash_attention(qf, kf, vf, causal=True, bq=64, bk=64, interpret=True)
+    got = got.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

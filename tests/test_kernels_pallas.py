@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs jnp oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import Kernel
+from repro.kernels import ops, ref
+
+
+def _data(key, n, m, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    X = jax.random.uniform(k1, (n, d), dtype=jnp.float32).astype(dtype)
+    Y = jax.random.uniform(k2, (m, d), dtype=jnp.float32).astype(dtype)
+    return X, Y
+
+
+KERNELS = [
+    Kernel("rbf", gamma=4.0),
+    Kernel("poly", gamma=0.5, degree=3, coef0=1.0),
+    Kernel("linear"),
+]
+SHAPES = [(64, 64, 8), (256, 128, 32), (100, 300, 17), (512, 256, 3)]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kermat_matches_ref(kern, shape):
+    n, m, d = shape
+    X, Y = _data(n + m + d, n, m, d, jnp.float32)
+    got = ops.kernel_matrix(X, Y, kern, bm=64, bn=64)
+    want = ref.kermat_ref(X, Y, kind=kern.kind, gamma=kern.gamma,
+                          degree=kern.degree, coef0=kern.coef0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kermat_dtypes(dtype):
+    X, Y = _data(0, 128, 128, 16, dtype)
+    kern = Kernel("rbf", gamma=2.0)
+    got = ops.kernel_matrix(X, Y, kern, bm=64, bn=64)
+    want = ref.kermat_ref(X.astype(jnp.float32), Y.astype(jnp.float32),
+                          kind="rbf", gamma=2.0)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32  # f32 accumulation policy
+
+
+@pytest.mark.parametrize("n,m,k,d", [(256, 64, 4, 8), (300, 128, 16, 32), (64, 32, 3, 5)])
+def test_kmeans_assign_matches_ref(n, m, k, d):
+    key = jax.random.PRNGKey(n + k)
+    X, Xm = _data(n, n, m, d, jnp.float32)
+    assign_init = jax.random.randint(key, (m,), 0, k)
+    H = jax.nn.one_hot(assign_init, k)
+    W = H / jnp.maximum(H.sum(0), 1.0)
+    Kmm = ref.kermat_ref(Xm, Xm, gamma=4.0)
+    s = jnp.einsum("mk,mn,nk->k", W, Kmm, W)
+    got_a, got_s = ops.kmeans_assign(X, Xm, W, s, gamma=4.0, bm=64)
+    want_a, want_s = ref.kmeans_assign_ref(
+        X, Xm, W, jnp.asarray(s)[None, :], gamma=4.0)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s[:, :k]),
+                               rtol=1e-4, atol=1e-4)
+    # argmin may differ only on exact ties — require score-equivalence
+    gs = np.asarray(want_s[:, :k])
+    np.testing.assert_allclose(gs[np.arange(n), np.asarray(got_a)],
+                               gs.min(axis=1), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+@pytest.mark.parametrize("n,B,d", [(256, 32, 8), (512, 64, 16), (100, 16, 7)])
+def test_cd_column_update_matches_ref(kern, n, B, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + B), 3)
+    X = jax.random.uniform(k1, (n, d))
+    y = jnp.sign(jax.random.normal(k2, (n,)))
+    Xb = X[:B]
+    w = jax.random.normal(k3, (B,))
+    got = ops.cd_column_update(X, y, Xb, w, kern, bm=64)
+    want = ref.cd_column_update_ref(X, y, Xb, w, kind=kern.kind,
+                                    gamma=kern.gamma, degree=kern.degree,
+                                    coef0=kern.coef0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_core_gram_pallas_path_consistent():
+    """core.kernels.gram(use_pallas=True) must agree with the jnp path."""
+    from repro.core.kernels import gram
+    X, Y = _data(1, 200, 150, 12, jnp.float32)
+    kern = Kernel("rbf", gamma=8.0)
+    a = gram(kern, X, Y, use_pallas=True)
+    b = gram(kern, X, Y, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)

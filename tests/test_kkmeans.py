@@ -1,0 +1,93 @@
+"""Tests for two-step kernel kmeans + balanced partitioning."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    Partition,
+    assign_points,
+    balanced_assign,
+    gram,
+    kernel_kmeans,
+    two_step_kernel_kmeans,
+)
+from repro.core.bounds import d_pi
+from repro.data import gaussian_mixture
+
+
+def test_kernel_kmeans_recovers_separated_blobs():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    centers = jnp.array([[0.0, 0.0], [5.0, 5.0], [0.0, 5.0], [5.0, 0.0]])
+    lab = jax.random.randint(k1, (400,), 0, 4)
+    X = centers[lab] + 0.1 * jax.random.normal(k2, (400, 2))
+    kern = Kernel("rbf", gamma=1.0)
+    K = gram(kern, X, X)
+    assign, W, s = kernel_kmeans(K, 4, jax.random.PRNGKey(1), iters=30)
+    # perfect clustering up to label permutation: each true blob maps to one cluster
+    assign = np.asarray(assign)
+    lab = np.asarray(lab)
+    for b in range(4):
+        vals = assign[lab == b]
+        assert (vals == vals[0]).all()
+
+
+def test_two_step_assignment_matches_full_on_sample():
+    X, y = gaussian_mixture(jax.random.PRNGKey(2), 600, d=6, modes_per_class=3)
+    kern = Kernel("rbf", gamma=4.0)
+    part = two_step_kernel_kmeans(kern, X, k=6, key=jax.random.PRNGKey(3), m=200,
+                                  balanced=False)
+    # routing model assigns consistently with the stored partition
+    a2, _ = assign_points(kern, part.model, X)
+    assert (np.asarray(a2) == part.assign).mean() > 0.999
+
+
+def test_balanced_assign_exact_capacity():
+    rng = np.random.default_rng(0)
+    D = rng.random((128, 4))
+    out = balanced_assign(D, capacity=32)
+    counts = np.bincount(out, minlength=4)
+    assert (counts == 32).all()
+
+
+def test_balanced_assign_prefers_near_centers():
+    # two tight groups, two centers: balanced assignment should match argmin
+    D = np.array([[0.1, 5.0]] * 8 + [[5.0, 0.1]] * 8)
+    out = balanced_assign(D, capacity=8)
+    assert (out[:8] == 0).all() and (out[8:] == 1).all()
+
+
+def test_partition_gather_scatter_roundtrip():
+    X, _ = gaussian_mixture(jax.random.PRNGKey(4), 300, d=4)
+    kern = Kernel("rbf", gamma=2.0)
+    part = two_step_kernel_kmeans(kern, X, k=5, key=jax.random.PRNGKey(5), m=100)
+    v = jnp.arange(300, dtype=jnp.float32)
+    vc = jnp.where(jnp.asarray(part.mask), part.gather(v), 0.0)
+    back = part.scatter(vc, 300)
+    assert np.allclose(np.asarray(back), np.asarray(v))
+
+
+def test_kkmeans_partition_beats_random_on_dpi():
+    """The reason kernel kmeans is the right divide step (paper Fig. 1):
+    D(pi) from kernel kmeans is far below D(pi) of a random partition."""
+    X, _ = gaussian_mixture(jax.random.PRNGKey(6), 800, d=8, modes_per_class=4,
+                            spread=0.08)
+    kern = Kernel("rbf", gamma=16.0)
+    part = two_step_kernel_kmeans(kern, X, k=8, key=jax.random.PRNGKey(7), m=300)
+    d_kk = float(d_pi(kern, X, jnp.asarray(part.assign)))
+    rng = np.random.default_rng(0)
+    rand_assign = rng.integers(0, 8, size=800)
+    d_rand = float(d_pi(kern, X, jnp.asarray(rand_assign)))
+    assert d_kk < 0.5 * d_rand
+
+
+def test_empty_cluster_reseeding():
+    # k larger than natural cluster count still yields k populated clusters
+    X = jnp.concatenate([jnp.zeros((50, 2)), jnp.ones((50, 2))], 0)
+    X = X + 0.01 * jax.random.normal(jax.random.PRNGKey(8), X.shape)
+    kern = Kernel("rbf", gamma=1.0)
+    part = two_step_kernel_kmeans(kern, X, k=4, key=jax.random.PRNGKey(9), m=100)
+    counts = np.bincount(part.assign, minlength=4)
+    assert (counts > 0).all()

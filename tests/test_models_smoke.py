@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness asserts; decode-path consistency for each family."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models import lm as LM
+from repro.models import model as M
+from repro.models.param import init_tree
+
+B, S = 2, 32
+
+
+def _params(cfg, seed=0):
+    return init_tree(M.build_decls_any(cfg), jax.random.PRNGKey(seed),
+                     jnp.dtype(cfg.param_dtype))
+
+
+def _batch(cfg, key=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    if cfg.enc_dec:
+        return {
+            "frames": jax.random.normal(k1, (B, cfg.enc_frames, cfg.d_model)) * 0.1,
+            "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab),
+            "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab),
+        }
+    batch = {"tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab)}
+    batch["targets"] = jax.random.randint(k1, (B, S), 0, cfg.vocab)
+    if cfg.num_patches > 0:
+        batch["prefix_embeds"] = jax.random.normal(
+            k1, (B, cfg.num_patches, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    params = _params(cfg)
+    batch = _batch(cfg)
+
+    def loss(p):
+        return M.loss_fn(cfg, p, batch, chunk=16)[0]
+
+    l, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l)), (arch, float(l))
+    # a cold model's CE should be ~log(vocab)
+    assert float(l) < np.log(cfg.vocab) * 2.5 + 5.0
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_runs(arch):
+    cfg = get_config(arch, reduced=True)
+    params = _params(cfg)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         M.cache_decls_any(cfg, B, S))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = M.decode_step_any(cfg, params, cache, tok,
+                                       jnp.asarray(0, jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "gemma_2b", "jamba_v01_52b",
+                                  "xlstm_125m", "deepseek_moe_16b"])
+def test_prefill_decode_matches_forward(arch):
+    """Cache correctness: prefill S-1 tokens then decode token S-1 must
+    reproduce the full-forward logits at the last position."""
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        # exactness requires no token drops: capacity == all tokens
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts) / cfg.moe.top_k))
+    params = _params(cfg)
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    full_logits, _, _ = LM.forward(cfg, params, tokens, chunk=16, mode="train")
+    want = full_logits[:, -1, :]
+
+    _, cache = M.forward_prefill(cfg, params, {"tokens": tokens[:, : S - 1]},
+                                 S_max=S, chunk=16)
+    # pad attention caches from S-1 to S slots
+    def pad_cache(sds, arr):
+        pads = [(0, a - b) for a, b in zip(sds.shape, arr.shape)]
+        return jnp.pad(arr, pads)
+
+    target = M.cache_decls_any(cfg, B, S)
+    cache = jax.tree.map(pad_cache, target, cache)
+    got_logits, _ = M.decode_step_any(cfg, params, cache, tokens[:, -1:],
+                                      jnp.asarray(S - 1, jnp.int32))
+    got = got_logits[:, 0, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_prefill_decode_consistency():
+    cfg = get_config("whisper_medium", reduced=True)
+    params = _params(cfg)
+    key = jax.random.PRNGKey(4)
+    frames = jax.random.normal(key, (B, cfg.enc_frames, cfg.d_model)) * 0.1
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    from repro.models import encdec as ED
+    enc = ED.encode(cfg, params, frames, chunk=16)
+    full = ED.decode_train(cfg, params, enc, tokens, chunk=16)
+    want = np.asarray(full[:, -1, :], np.float32)
+
+    _, cache = ED.prefill(cfg, params, frames, tokens[:, : S - 1], S_max=S, chunk=16)
+    got_logits, _ = ED.decode_step(cfg, params, cache, tokens[:, -1:],
+                                   jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got_logits[:, 0, :], np.float32),
+                               want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_aux_losses_present():
+    cfg = get_config("phi35_moe_42b", reduced=True)
+    params = _params(cfg)
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(cfg, params, batch, chunk=16)
+    assert "moe_lb" in metrics and np.isfinite(float(metrics["moe_lb"]))
+    assert float(metrics["moe_drop_frac"]) < 0.5
+
+
+def test_full_configs_param_counts():
+    """Full configs match the published sizes (sanity on the exact configs)."""
+    expect = {
+        "jamba_v01_52b": (45e9, 56e9),
+        "qwen3_8b": (7.5e9, 8.5e9),
+        "gemma_2b": (2.2e9, 2.8e9),
+        "yi_6b": (5.5e9, 6.5e9),
+        "deepseek_moe_16b": (15e9, 17.5e9),
+        "phi35_moe_42b": (40e9, 43e9),
+        "whisper_medium": (0.7e9, 0.85e9),
+        "xlstm_125m": (0.1e9, 0.25e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel, balanced_assign, gram, kkt_residual, objective, proj_grad,
+    solve_box_qp, solve_box_qp_block,
+)
+from repro.core.bounds import d_pi
+from repro.optim.grad_compress import compress, decompress
+from repro.kernels import ops, ref
+
+SETTINGS = dict(deadline=None, max_examples=12,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def qp_problem(draw):
+    n = draw(st.integers(8, 48))
+    d = draw(st.integers(2, 8))
+    gamma = draw(st.floats(0.5, 8.0))
+    C = draw(st.floats(0.1, 10.0))
+    seed = draw(st.integers(0, 2**30))
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    X = jax.random.uniform(k1, (n, d))
+    y = jnp.sign(jax.random.normal(k2, (n,)))
+    y = jnp.where(y == 0, 1.0, y)
+    K = Kernel("rbf", gamma=gamma).pairwise(X, X) + 1e-4 * jnp.eye(n)
+    Q = (y[:, None] * y[None, :]) * K
+    return X, y, Q, float(C)
+
+
+@given(qp_problem())
+@settings(**SETTINGS)
+def test_solver_always_feasible_and_kkt(prob):
+    """For ANY box QP from a PSD kernel: the solver output is feasible and
+    satisfies KKT to tolerance."""
+    _, _, Q, C = prob
+    res = solve_box_qp(Q, C, tol=1e-5, max_iters=100_000)
+    assert bool(jnp.all(res.alpha >= -1e-7))
+    assert bool(jnp.all(res.alpha <= C + 1e-6))
+    assert float(kkt_residual(Q, res.alpha, C)) < 1e-3
+
+
+@given(qp_problem())
+@settings(**SETTINGS)
+def test_block_solver_objective_matches_greedy(prob):
+    _, _, Q, C = prob
+    a1 = solve_box_qp(Q, C, tol=1e-5, max_iters=100_000).alpha
+    a2 = solve_box_qp_block(Q, C, tol=1e-5, max_iters=50_000,
+                            block=min(8, Q.shape[0])).alpha
+    f1 = float(0.5 * a1 @ Q @ a1 - a1.sum())
+    f2 = float(0.5 * a2 @ Q @ a2 - a2.sum())
+    assert abs(f1 - f2) < 1e-3 * (1 + abs(f1))
+
+
+@given(qp_problem())
+@settings(**SETTINGS)
+def test_objective_decreases_from_feasible_start(prob):
+    """Solving from any feasible start never increases the objective."""
+    _, _, Q, C = prob
+    n = Q.shape[0]
+    a0 = jnp.clip(jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (n,))), 0, C)
+    g0 = Q @ a0 - 1.0
+    f0 = float(objective(a0, g0))
+    res = solve_box_qp(Q, C, alpha0=a0, tol=1e-5, max_iters=100_000)
+    f1 = float(objective(res.alpha, res.grad))
+    assert f1 <= f0 + 1e-5 * (1 + abs(f0))
+
+
+@given(st.integers(2, 6), st.integers(20, 100), st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_dpi_vanishes_iff_single_cluster(k, n, seed):
+    """D(pi) >= 0 always; == 0 when everything is one cluster."""
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.uniform(key, (n, 4))
+    kern = Kernel("rbf", gamma=2.0)
+    rng = np.random.default_rng(seed)
+    assign = jnp.asarray(rng.integers(0, k, n))
+    D = float(d_pi(kern, X, assign))
+    assert D >= 0.0
+    D_one = float(d_pi(kern, X, jnp.zeros(n, jnp.int32)))
+    assert D_one == pytest.approx(0.0, abs=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(10, 80), st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_balanced_assign_respects_capacity(k, n, seed):
+    rng = np.random.default_rng(seed)
+    D = rng.random((n, k))
+    cap = -(-n // k)
+    out = balanced_assign(D, cap)
+    counts = np.bincount(out, minlength=k)
+    assert counts.max() <= cap
+    assert counts.sum() == n
+
+
+@given(st.integers(1, 2**30), st.integers(10, 400))
+@settings(**SETTINGS)
+def test_compression_error_bound(seed, n):
+    """Blockwise int8 quantization error is bounded by blockmax/127."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10.0
+    q, s = compress(x)
+    x2 = decompress(q, s, x.shape)
+    assert float(jnp.max(jnp.abs(x - x2))) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-5
+
+
+@given(st.integers(8, 80), st.integers(8, 80), st.integers(1, 16),
+       st.sampled_from(["rbf", "poly", "linear"]), st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_pallas_kermat_matches_ref_any_shape(n, m, d, kind, seed):
+    """Pallas kernel == jnp oracle for arbitrary (n, m, d, kernel kind)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    X = jax.random.uniform(k1, (n, d))
+    Y = jax.random.uniform(k2, (m, d))
+    kern = Kernel(kind, gamma=1.5, degree=2, coef0=0.5)
+    got = ops.kernel_matrix(X, Y, kern, bm=32, bn=32)
+    want = ref.kermat_ref(X, Y, kind=kind, gamma=1.5, degree=2, coef0=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_proj_grad_zero_iff_optimal(seed):
+    """proj_grad == 0 implies no coordinate can improve the objective."""
+    key = jax.random.PRNGKey(seed)
+    n, C = 24, 2.0
+    X = jax.random.uniform(key, (n, 3))
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+    y = jnp.where(y == 0, 1.0, y)
+    Q = (y[:, None] * y[None, :]) * (Kernel("rbf", gamma=2.0).pairwise(X, X)
+                                     + 1e-4 * jnp.eye(n))
+    res = solve_box_qp(Q, C, tol=1e-6, max_iters=200_000)
+    # single-coordinate perturbations cannot improve
+    f0 = float(0.5 * res.alpha @ Q @ res.alpha - res.alpha.sum())
+    for i in range(0, n, 5):
+        for eps in (1e-3, -1e-3):
+            a = res.alpha.at[i].set(jnp.clip(res.alpha[i] + eps, 0, C))
+            f = float(0.5 * a @ Q @ a - a.sum())
+            assert f >= f0 - 1e-5 * (1 + abs(f0))

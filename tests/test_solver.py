@@ -1,0 +1,120 @@
+"""Unit tests for the box-QP coordinate-descent solvers."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    gram,
+    kkt_residual,
+    objective,
+    proj_grad,
+    solve_box_qp,
+    solve_box_qp_block,
+    solve_box_qp_matvec,
+    solve_with_shrinking,
+)
+
+
+def make_qp(key, n, d=6, gamma=4.0, jitter=1e-3):
+    k1, k2 = jax.random.split(key)
+    X = jax.random.uniform(k1, (n, d))
+    y = jnp.sign(jax.random.normal(k2, (n,)))
+    K = Kernel("rbf", gamma=gamma).pairwise(X, X) + jitter * jnp.eye(n)
+    Q = (y[:, None] * y[None, :]) * K
+    return X, y, Q
+
+
+def brute_force_alpha(Q, C, iters=200_000, tol=1e-7):
+    """Long-run CD as the reference optimum (convex problem, CD converges)."""
+    res = solve_box_qp(Q, C, tol=tol, max_iters=iters)
+    return res.alpha
+
+
+@pytest.mark.parametrize("n,C", [(40, 1.0), (120, 10.0), (80, 0.1)])
+def test_greedy_cd_reaches_kkt(n, C):
+    _, _, Q = make_qp(jax.random.PRNGKey(n), n)
+    res = solve_box_qp(Q, C, tol=1e-5, max_iters=100_000)
+    assert float(res.pg_max) <= 1e-5 * 1.5
+    assert float(kkt_residual(Q, res.alpha, C)) <= 1e-4
+    assert bool(jnp.all(res.alpha >= 0)) and bool(jnp.all(res.alpha <= C))
+
+
+def test_greedy_cd_matches_reference_objective():
+    _, _, Q = make_qp(jax.random.PRNGKey(7), 100)
+    C = 5.0
+    ref = brute_force_alpha(Q, C)
+    f_ref = 0.5 * ref @ Q @ ref - ref.sum()
+    res = solve_box_qp(Q, C, tol=1e-4, max_iters=100_000)
+    f = 0.5 * res.alpha @ Q @ res.alpha - res.alpha.sum()
+    assert float(f) <= float(f_ref) + 1e-3 * abs(float(f_ref)) + 1e-5
+
+
+@pytest.mark.parametrize("block", [4, 16])
+def test_block_cd_matches_greedy(block):
+    _, _, Q = make_qp(jax.random.PRNGKey(3), 96)
+    C = 2.0
+    a1 = solve_box_qp(Q, C, tol=1e-5, max_iters=100_000).alpha
+    a2 = solve_box_qp_block(Q, C, tol=1e-5, max_iters=20_000, block=block).alpha
+    f1 = 0.5 * a1 @ Q @ a1 - a1.sum()
+    f2 = 0.5 * a2 @ Q @ a2 - a2.sum()
+    assert abs(float(f1 - f2)) <= 1e-3 * (abs(float(f1)) + 1e-6)
+    assert float(kkt_residual(Q, a2, C)) <= 1e-4
+
+
+def test_matvec_solver_matches_dense():
+    X, y, Q = make_qp(jax.random.PRNGKey(11), 128, jitter=0.0)
+    kern = Kernel("rbf", gamma=4.0)
+    C = 2.0
+    a_dense = solve_box_qp(Q, C, tol=1e-5, max_iters=100_000).alpha
+    res = solve_box_qp_matvec(X, y, kern, C, tol=1e-5, max_iters=5_000, block=16)
+    f1 = 0.5 * a_dense @ Q @ a_dense - a_dense.sum()
+    f2 = 0.5 * res.alpha @ Q @ res.alpha - res.alpha.sum()
+    assert abs(float(f1 - f2)) <= 2e-3 * (abs(float(f1)) + 1e-6)
+
+
+def test_warm_start_reduces_iterations():
+    _, _, Q = make_qp(jax.random.PRNGKey(5), 150)
+    C = 1.0
+    cold = solve_box_qp(Q, C, tol=1e-5, max_iters=200_000)
+    # perturb the solution slightly: warm restart should converge much faster
+    warm0 = jnp.clip(cold.alpha + 0.01 * jax.random.normal(jax.random.PRNGKey(0), cold.alpha.shape), 0.0, C)
+    warm = solve_box_qp(Q, C, alpha0=warm0, tol=1e-5, max_iters=200_000)
+    assert int(warm.iters) < int(cold.iters)
+
+
+def test_shrinking_returns_full_problem_kkt():
+    _, _, Q = make_qp(jax.random.PRNGKey(9), 200)
+    C = 3.0
+    res = solve_with_shrinking(Q, C, tol=1e-4, max_iters=100_000, rounds=3)
+    # the final round unshrinks: the residual must hold on the FULL problem
+    assert float(kkt_residual(Q, res.alpha, C)) <= 1e-3
+
+
+def test_active_mask_freezes_coordinates():
+    _, _, Q = make_qp(jax.random.PRNGKey(13), 60)
+    C = 1.0
+    mask = jnp.arange(60) < 30
+    res = solve_box_qp(Q, C, tol=1e-5, max_iters=50_000, active_mask=mask)
+    assert bool(jnp.all(res.alpha[30:] == 0.0))
+
+
+def test_objective_helper_consistent():
+    _, _, Q = make_qp(jax.random.PRNGKey(1), 50)
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (50,)))
+    g = Q @ a - 1.0
+    f_direct = 0.5 * a @ Q @ a - a.sum()
+    assert abs(float(objective(a, g) - f_direct)) < 1e-4 * (1 + abs(float(f_direct)))
+
+
+def test_vmapped_solver_batches_independent_problems():
+    keys = jax.random.split(jax.random.PRNGKey(17), 4)
+    Qs = jnp.stack([make_qp(k, 48)[2] for k in keys])
+    C = 1.5
+    batched = jax.vmap(lambda Q: solve_box_qp(Q, C, tol=1e-5, max_iters=50_000).alpha)(Qs)
+    for i in range(4):
+        single = solve_box_qp(Qs[i], C, tol=1e-5, max_iters=50_000).alpha
+        f_b = 0.5 * batched[i] @ Qs[i] @ batched[i] - batched[i].sum()
+        f_s = 0.5 * single @ Qs[i] @ single - single.sum()
+        assert abs(float(f_b - f_s)) < 1e-3 * (1 + abs(float(f_s)))
