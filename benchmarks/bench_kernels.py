@@ -1,6 +1,9 @@
 """Pallas kernel micro-benchmarks: interpret-mode correctness + jnp-ref
 timing on this CPU container (TPU wall-clock is out of scope here; the
 per-kernel roofline lives in EXPERIMENTS.md §Roofline).
+
+Also benchmarks the conquer solver XLA vs Pallas vs cached path and emits
+the BENCH_conquer.json artifact (wall time + column-cache hit rate).
 """
 from __future__ import annotations
 
@@ -10,17 +13,68 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, emit_json, timed
 from repro.core.kernels import Kernel
+from repro.core.solver import solve_box_qp_matvec
+from repro.data import gaussian_mixture
 from repro.kernels import ops, ref
 
 
-def run() -> list:
+def bench_conquer(dry_run: bool = False) -> list:
+    """Conquer-path comparison: solve_box_qp_matvec on the XLA reference path
+    vs the fused Pallas path vs the column-cached path, same problem, same
+    tolerance.  Emits BENCH_conquer.json."""
+    n, d, block, tol = (192, 8, 16, 1e-5) if dry_run else (1024, 32, 32, 1e-5)
+    X, y = gaussian_mixture(jax.random.PRNGKey(0), n, d=d, modes_per_class=4,
+                            spread=0.15)
+    kern = Kernel("rbf", gamma=2.0)
+    C = 4.0
+    max_iters = 400 if dry_run else 2000
+
+    def solve(**kw):
+        return solve_box_qp_matvec(X, y, kern, C, tol=tol,
+                                   max_iters=max_iters, block=block, **kw)
+
+    variants = {
+        "xla": dict(),
+        "pallas": dict(use_pallas=True),
+        "pallas_cache": dict(use_pallas=True, cache_cap=n),
+    }
+    rows, results = [], {}
+    alphas = {}
+    for name, kw in variants.items():
+        solve(**kw).alpha.block_until_ready()     # warm (compile)
+        res, t = timed(solve, **kw)
+        alphas[name] = res.alpha
+        entry = {"wall_s": t, "iters": int(res.iters),
+                 "pg_max": float(res.pg_max)}
+        derived = f"iters={int(res.iters)}"
+        if res.cache_hits is not None:
+            hits, misses = int(res.cache_hits), int(res.cache_misses)
+            entry["cache_hits"] = hits
+            entry["cache_misses"] = misses
+            entry["cache_hit_rate"] = hits / max(hits + misses, 1)
+            derived += f";hit_rate={entry['cache_hit_rate']:.3f}"
+        results[name] = entry
+        rows.append((f"conquer.{name}.{n}x{d}", t * 1e6, derived))
+
+    max_dev = max(float(jnp.max(jnp.abs(alphas[k] - alphas["xla"])))
+                  for k in variants)
+    results["alpha_max_dev_vs_xla"] = max_dev
+    results["problem"] = {"n": n, "d": d, "block": block, "tol": tol, "C": C,
+                          "kernel": "rbf", "gamma": 2.0, "dry_run": dry_run}
+    emit_json("BENCH_conquer.json", results)
+    assert max_dev < 1e-4, max_dev
+    return rows
+
+
+def run(dry_run: bool = False) -> list:
     rows = []
     key = jax.random.PRNGKey(0)
     kern = Kernel("rbf", gamma=8.0)
     ref_jit = jax.jit(lambda X, Y: ref.kermat_ref(X, Y, gamma=8.0))
-    for n, m, d in ((1024, 1024, 64), (2048, 512, 128)):
+    shapes = ((256, 256, 16),) if dry_run else ((1024, 1024, 64), (2048, 512, 128))
+    for n, m, d in shapes:
         X = jax.random.uniform(jax.random.fold_in(key, n), (n, d))
         Y = jax.random.uniform(jax.random.fold_in(key, m), (m, d))
         want = ref_jit(X, Y)              # warm both paths (compile)
@@ -32,7 +86,8 @@ def run() -> list:
                      f"ref_us={t_ref*1e6:.0f};maxerr={err:.2e}"))
         assert err < 1e-4
 
-    X = jax.random.uniform(key, (2048, 32))
+    na = 512 if dry_run else 2048
+    X = jax.random.uniform(key, (na, 32))
     Xm = jax.random.uniform(jax.random.fold_in(key, 1), (256, 32))
     W = jax.nn.one_hot(jax.random.randint(key, (256,), 0, 16), 16)
     W = W / jnp.maximum(W.sum(0), 1.0)
@@ -41,16 +96,25 @@ def run() -> list:
     (a_got, s_got), t = timed(ops.kmeans_assign, X, Xm, W, s, 8.0)
     a_ref, _ = ref.kmeans_assign_ref(X, Xm, W, jnp.asarray(s)[None, :], gamma=8.0)
     agree = float(jnp.mean((a_got == a_ref).astype(jnp.float32)))
-    rows.append(("kernels.kmeans_assign.2048x256x16", t * 1e6,
+    rows.append((f"kernels.kmeans_assign.{na}x256x16", t * 1e6,
                  f"agree={agree:.4f}"))
 
-    y = jnp.sign(jax.random.normal(key, (2048,)))
+    y = jnp.sign(jax.random.normal(key, (na,)))
     w = jax.random.normal(jax.random.fold_in(key, 2), (64,))
     got, t = timed(ops.cd_column_update, X, y, X[:64], w, kern)
     want = ref.cd_column_update_ref(X, y, X[:64], w, gamma=8.0)
     err = float(jnp.max(jnp.abs(got - want)))
-    rows.append(("kernels.cd_update.2048x64", t * 1e6, f"maxerr={err:.2e}"))
+    rows.append((f"kernels.cd_update.{na}x64", t * 1e6, f"maxerr={err:.2e}"))
     assert err < 1e-3
+
+    v = jax.random.normal(jax.random.fold_in(key, 3), (na,))
+    got, t = timed(ops.kernel_matvec, X, X, v, kern)
+    want = ref.kernel_matvec_ref(X, X, v, gamma=8.0)
+    err = float(jnp.max(jnp.abs(got - want))) / max(float(jnp.max(jnp.abs(want))), 1.0)
+    rows.append((f"kernels.kernel_matvec.{na}x{na}", t * 1e6, f"relerr={err:.2e}"))
+    assert err < 1e-4
+
+    rows.extend(bench_conquer(dry_run))
     return rows
 
 

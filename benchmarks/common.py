@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: datasets, timing, CSV row emission."""
+"""Shared benchmark utilities: datasets, timing, CSV row + JSON artifact emission."""
 from __future__ import annotations
 
+import json
+import sys
 import time
 from typing import Callable, List, Tuple
 
@@ -17,6 +19,15 @@ Row = Tuple[str, float, str]
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def emit_json(path: str, payload: dict) -> None:
+    """Write a structured benchmark artifact (e.g. BENCH_conquer.json)."""
+    payload = dict(payload, backend=jax.default_backend())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 def timed(fn: Callable, *args, **kw):

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -19,6 +20,8 @@ ALL = ["fig1", "fig2", "fig3", "table1", "table3", "table6", "kernels"]
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny shapes / few iterations: CI smoke, not timing")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or ALL
     failures = []
@@ -27,7 +30,10 @@ def main() -> None:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
-            rows = mod.run()
+            kw = {}
+            if args.dry_run and "dry_run" in inspect.signature(mod.run).parameters:
+                kw["dry_run"] = True
+            rows = mod.run(**kw)
             emit(rows)
             print(f"# bench_{name}: ok in {time.perf_counter()-t0:.1f}s",
                   file=sys.stderr, flush=True)

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Per-PR gate: tier-1 tests + a benchmarks smoke pass so regressions in the
+# fused conquer path (and its BENCH_conquer.json artifact) are caught early.
+#
+#   scripts/ci.sh            # full tier-1 + kernels bench smoke
+#   scripts/ci.sh --fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# tier-1 (ROADMAP.md)
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
+    # kernel and on the conquer solver, writes BENCH_conquer.json
+    python -m benchmarks.run --only kernels --dry-run
+fi

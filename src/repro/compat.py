@@ -1,0 +1,23 @@
+"""Version shims for the jax pinned in this container.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+``check_vma`` kwarg was still called ``check_rep``).  Import ``shard_map``
+from here so both APIs work.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kw):
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        # the experimental tracer has no replication rule for while_loop /
+        # pallas_call; checking is a debug aid, not a semantics change
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

@@ -1,5 +1,13 @@
 # DC-SVM core: the paper's primary contribution as a composable JAX module.
-from repro.core.kernels import Kernel, gram, gram_matvec, offdiag_mass, sqdist
+from repro.core import colcache
+from repro.core.kernels import (
+    Kernel,
+    gram,
+    gram_matvec,
+    offdiag_mass,
+    resolve_use_pallas,
+    sqdist,
+)
 from repro.core.solver import (
     SolveResult,
     kkt_residual,

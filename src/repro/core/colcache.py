@@ -1,0 +1,107 @@
+"""Device-resident LRU cache of Q rows for the conquer-step block CD.
+
+The TPU analog of LIBSVM's kernel cache (DESIGN.md §2): a fixed-capacity
+``(cap, n)`` buffer of Q rows plus int32 index tables, all plain JAX arrays,
+so lookup / touch / evict-insert run INSIDE the jitted CD ``while_loop`` —
+no host round-trips and no dynamic shapes.  A block of Gauss-Southwell
+selections is served from the cache only when *every* selected row is
+resident (``lax.cond`` then skips the kernel recompute entirely); otherwise
+the whole block is recomputed on the MXU and refilled into the cache,
+evicting the least-recently-used slots.
+
+Invariants:
+  * ``owner[s]``    training index whose Q row occupies slot ``s`` (-1 empty)
+  * ``slot_of[i]``  slot holding row i, or -1; when stale slots exist (a row
+                    re-inserted before its old slot was evicted) ``slot_of``
+                    always points at the freshest copy
+  * ``stamp[s]``    tick of the last touch — the LRU eviction key
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+class ColumnCache(NamedTuple):
+    cols: Array      # (cap, n) cached Q rows (f32)
+    owner: Array     # (cap,)   int32 training index per slot, -1 = empty
+    slot_of: Array   # (n,)     int32 slot per training index, -1 = uncached
+    stamp: Array     # (cap,)   int32 last-use tick (LRU key)
+    tick: Array      # ()       int32 logical clock
+    hits: Array      # ()       int32 rows served from the cache
+    misses: Array    # ()       int32 rows recomputed
+
+
+def init(cap: int, n: int, dtype=jnp.float32) -> ColumnCache:
+    return ColumnCache(
+        cols=jnp.zeros((cap, n), dtype),
+        owner=jnp.full((cap,), -1, jnp.int32),
+        slot_of=jnp.full((n,), -1, jnp.int32),
+        stamp=jnp.full((cap,), jnp.int32(-2 ** 30)),
+        tick=jnp.zeros((), jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        misses=jnp.zeros((), jnp.int32),
+    )
+
+
+def lookup(cache: ColumnCache, idx: Array) -> Tuple[Array, Array]:
+    """Slots (B,) and hit mask (B,) for a block of row indices."""
+    slots = cache.slot_of[idx]
+    return slots, slots >= 0
+
+
+def _touch(cache: ColumnCache, idx: Array, slots: Array, hit: Array) -> ColumnCache:
+    stamp = cache.stamp.at[slots].set(cache.tick)
+    return cache._replace(stamp=stamp)
+
+
+def _insert(cache: ColumnCache, idx: Array, slots: Array, hit: Array,
+            rows: Array) -> ColumnCache:
+    cap = cache.owner.shape[0]
+    n = cache.slot_of.shape[0]
+    # Slots already owned by idx are now duplicates-to-be: age them to the
+    # front of the eviction order so re-inserts reuse their own slots first.
+    stamp = cache.stamp.at[jnp.where(hit, slots, cap)].set(
+        -2 ** 30, mode="drop")
+    _, victims = lax.top_k(-stamp, idx.shape[0])
+    victims = victims.astype(jnp.int32)
+    evicted = cache.owner[victims]
+    ev_safe = jnp.where(evicted >= 0, evicted, 0)
+    # un-map evicted owners, but only where they still point at the victim
+    # slot (stale duplicates keep slot_of aimed at their fresh copy)
+    still_mapped = (evicted >= 0) & (cache.slot_of[ev_safe] == victims)
+    slot_of = cache.slot_of.at[jnp.where(still_mapped, ev_safe, n)].set(
+        -1, mode="drop")
+    cols = cache.cols.at[victims].set(rows.astype(cache.cols.dtype))
+    owner = cache.owner.at[victims].set(idx.astype(jnp.int32))
+    slot_of = slot_of.at[idx].set(victims)
+    stamp = stamp.at[victims].set(cache.tick)
+    return cache._replace(cols=cols, owner=owner, slot_of=slot_of, stamp=stamp)
+
+
+def update(cache: ColumnCache, idx: Array, rows: Array, served: Array,
+           slots: Array, hit: Array) -> ColumnCache:
+    """Refresh LRU state after serving block ``idx``.
+
+    ``served`` (scalar bool): the block came straight from the cache — touch
+    the slots.  Otherwise ``rows`` were recomputed — evict the LRU slots and
+    insert them.  Hit/miss counters account whole blocks (serving is
+    all-or-nothing, matching the ``lax.cond`` in the solver).
+    """
+    nb = jnp.int32(idx.shape[0])
+    cache = cache._replace(
+        tick=cache.tick + 1,
+        hits=cache.hits + jnp.where(served, nb, 0),
+        misses=cache.misses + jnp.where(served, 0, nb),
+    )
+    return lax.cond(
+        served,
+        lambda c: _touch(c, idx, slots, hit),
+        lambda c: _insert(c, idx, slots, hit, rows),
+        cache,
+    )

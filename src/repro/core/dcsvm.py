@@ -28,7 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import Kernel, gram, gram_matvec
+from repro.core.kernels import Kernel, gram, gram_matvec, resolve_use_pallas
 from repro.core.kkmeans import Partition, two_step_kernel_kmeans
 from repro.core import solver as S
 
@@ -50,10 +50,16 @@ class DCSVMConfig:
     adaptive: bool = True          # sample kmeans points from lower-level SVs
     refine: bool = True            # refine pass on level-1 SVs before final solve
     balanced: bool = True
-    use_pallas: bool = False
+    use_pallas: Optional[bool] = None  # None = auto (Pallas on TPU, XLA elsewhere)
     early_stop_level: int = 0      # 0 = exact solve; l >= 1 = stop after level l
     gram_budget: int = 2**27       # max floats for a level's stacked cluster Grams
     full_gram_threshold: int = 16384   # above this, level 0 uses the matvec solver
+    col_cache_cap: int = 0         # kernel-column LRU slots for the matvec solver.
+                                   # 0 (default) = fully fused recompute path; opt
+                                   # in by sizing it >= the expected active set
+                                   # (~#SV) — block serving is all-or-nothing, so
+                                   # an undersized cache pays its (cap, n) memory
+                                   # for ~zero hits (DESIGN.md §2)
     shrink_rounds: int = 3
     seed: int = 0
 
@@ -78,13 +84,14 @@ class DCSVMModel:
 # ---------------------------------------------------------------------------
 
 def _solve_clusters(
-    cfg: DCSVMConfig, Xc: Array, yc: Array, ac: Array, mask: Array
+    cfg: DCSVMConfig, Xc: Array, yc: Array, ac: Array, mask: Array,
+    use_pallas: bool = False,
 ) -> Array:
     """Solve k independent sub-QPs. Xc: (k, nc, d), yc/ac/mask: (k, nc)."""
     k, nc, _ = Xc.shape
 
     def one(Xi, yi, ai, mi):
-        Ki = cfg.kernel.pairwise(Xi, Xi)
+        Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
         Qi = (yi[:, None] * yi[None, :]) * Ki
         # zero pad rows/cols so pad slots cannot leak into real gradients
         mm = mi[:, None] & mi[None, :]
@@ -109,10 +116,11 @@ def _solve_clusters(
     return jax.lax.map(one, (Xc, yc, ac, mask))
 
 
-def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array) -> Array:
+def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array,
+                  use_pallas: bool = False) -> Array:
     """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs)."""
     Xs, ys, as_ = X[idx], y[idx], alpha[idx]
-    Ks = gram(cfg.kernel, Xs, Xs, use_pallas=cfg.use_pallas)
+    Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas)
     Qs = (ys[:, None] * ys[None, :]) * Ks
     if cfg.block > 0:
         res = S.solve_box_qp_block(
@@ -124,20 +132,25 @@ def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array
     return alpha.at[idx].set(res.alpha)
 
 
-def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array):
+def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
+                use_pallas: bool = False):
     """Top-level (level 0) solve on the whole problem, warm-started."""
     n = X.shape[0]
     if n <= cfg.full_gram_threshold:
-        K = gram(cfg.kernel, X, X, use_pallas=cfg.use_pallas)
+        K = gram(cfg.kernel, X, X, use_pallas=use_pallas)
         Q = (y[:, None] * y[None, :]) * K
         res = S.solve_with_shrinking(
             Q, cfg.C, alpha0=alpha, tol=cfg.tol, max_iters=cfg.max_iters,
             rounds=cfg.shrink_rounds, block=cfg.block,
         )
     else:
+        # the (cap, n) cache buffer counts against the same memory budget as
+        # the stacked cluster Grams
+        cache_cap = min(cfg.col_cache_cap, n, cfg.gram_budget // max(n, 1))
         res = S.solve_box_qp_matvec(
             X, y, cfg.kernel, cfg.C, alpha0=alpha, tol=cfg.tol,
             max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
+            use_pallas=use_pallas, cache_cap=cache_cap,
         )
     return res
 
@@ -157,6 +170,7 @@ def fit(
     X = jnp.asarray(X)
     y = jnp.asarray(y, X.dtype)
     n = X.shape[0]
+    use_pallas = resolve_use_pallas(cfg.use_pallas)
     key = jax.random.PRNGKey(cfg.seed)
     alpha = jnp.zeros(n, X.dtype)
     sv_idx: Optional[np.ndarray] = None
@@ -176,7 +190,7 @@ def fit(
             sample_idx = rng.choice(sv_idx, size=take, replace=False)
         partition = two_step_kernel_kmeans(
             cfg.kernel, X, kl, sub, m=cfg.m, iters=cfg.kmeans_iters,
-            sample_idx=sample_idx, balanced=cfg.balanced, use_pallas=cfg.use_pallas,
+            sample_idx=sample_idx, balanced=cfg.balanced, use_pallas=use_pallas,
         )
         t_cluster = time.perf_counter() - t0
 
@@ -185,7 +199,7 @@ def fit(
         yc = partition.gather(y)
         mask = jnp.asarray(partition.mask)
         ac = jnp.where(mask, partition.gather(alpha), 0.0)
-        ac = _solve_clusters(cfg, Xc, yc, ac, mask)
+        ac = _solve_clusters(cfg, Xc, yc, ac, mask, use_pallas=use_pallas)
         alpha = partition.scatter(ac, n)
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
@@ -202,14 +216,20 @@ def fit(
     # ---- level 0: refine + full solve -----------------------------------
     t0 = time.perf_counter()
     if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < n:
-        alpha = _solve_subset(cfg, X, y, alpha, jnp.asarray(sv_idx))
-    res = _solve_full(cfg, X, y, alpha)
+        alpha = _solve_subset(cfg, X, y, alpha, jnp.asarray(sv_idx),
+                              use_pallas=use_pallas)
+    res = _solve_full(cfg, X, y, alpha, use_pallas=use_pallas)
     alpha = res.alpha
     alpha.block_until_ready()
     st = dict(level=0, clusters=1, cluster_time=0.0,
               train_time=time.perf_counter() - t0,
               n_sv=int(np.sum(np.asarray(alpha) > 0)),
               iters=int(res.iters), pg_max=float(res.pg_max))
+    if res.cache_hits is not None:
+        hits, misses = int(res.cache_hits), int(res.cache_misses)
+        st["cache_hits"] = hits
+        st["cache_misses"] = misses
+        st["cache_hit_rate"] = hits / max(hits + misses, 1)
     stats.append(st)
     if callback is not None:
         callback(0, alpha, st)
@@ -218,6 +238,10 @@ def fit(
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
                     num_chunks: int = 8) -> Array:
-    """f(alpha) on the FULL problem, computed without materializing Q."""
-    Kv = gram_matvec(cfg.kernel, X, y * alpha, num_chunks=num_chunks)
+    """f(alpha) on the FULL problem, computed without materializing Q.
+
+    On the Pallas path the Q @ alpha matvec streams through the fused
+    ``kernel_matvec`` kernel instead of the chunked ``lax.map``."""
+    Kv = gram_matvec(cfg.kernel, X, y * alpha, num_chunks=num_chunks,
+                     use_pallas=resolve_use_pallas(cfg.use_pallas))
     return 0.5 * jnp.vdot(alpha, y * Kv) - jnp.sum(alpha)

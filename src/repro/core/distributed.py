@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-shard_map = jax.shard_map
+from repro.compat import shard_map
 
 from repro.core.kernels import Kernel
 from repro.core.solver import SolveResult, _solve_small_qp, proj_grad

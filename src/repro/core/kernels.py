@@ -2,8 +2,10 @@
 
 A ``Kernel`` is a small dataclass carrying the kernel hyper-parameters plus
 pure-jnp pairwise evaluation.  All heavy Gram computation goes through
-``gram(kernel, X, Y)`` which tiles the computation; the Pallas fast path
-(``repro.kernels.rbf``) is selected via ``use_pallas`` when shapes allow.
+``gram(kernel, X, Y)`` / ``gram_matvec`` which tile the computation; the
+Pallas fast paths (``repro.kernels.ops.kernel_matrix`` / ``kernel_matvec``)
+are selected via ``use_pallas`` (``resolve_use_pallas(None)`` auto-picks
+compiled Pallas on TPU and jnp/XLA elsewhere).
 
 The paper uses the RBF kernel K(x,z) = exp(-gamma ||x-z||^2) for the main
 experiments and the degree-3 polynomial kernel K(x,z) = (gamma x'z + coef0)^d
@@ -89,12 +91,30 @@ def gram_blocks(kernel: Kernel, Xc: Array) -> Array:
     return jax.vmap(lambda Xi: kernel.pairwise(Xi, Xi))(Xc)
 
 
-@partial(jax.jit, static_argnames=("kernel", "num_chunks"))
-def gram_matvec(kernel: Kernel, X: Array, v: Array, num_chunks: int = 8) -> Array:
-    """K(X, X) @ v computed in row chunks — O(n^2 d) compute, O(n^2/chunks) memory.
+def resolve_use_pallas(flag: Optional[bool]) -> bool:
+    """Backend policy: ``None`` auto-detects (compiled Pallas on TPU, jnp/XLA
+    elsewhere — interpret-mode Pallas is a correctness tool, not a fast path
+    on CPU)."""
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
 
+
+@partial(jax.jit, static_argnames=("kernel", "num_chunks", "use_pallas"))
+def gram_matvec(kernel: Kernel, X: Array, v: Array, num_chunks: int = 8,
+                use_pallas: bool = False) -> Array:
+    """K(X, X) @ v computed without materializing the Gram matrix.
+
+    ``use_pallas=True`` streams (bm, bn) kernel tiles through VMEM and
+    accumulates the matvec in-register (one fused ``kernel_matvec`` call);
+    otherwise row chunks via ``lax.map`` — O(n^2 d) compute either way, but
+    the fused path's HBM traffic is O(n d) instead of O(n^2 / chunks).
     Used for the top-level conquer step when the full Gram does not fit.
     """
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.kernel_matvec(X, X, v, kernel)
     n = X.shape[0]
     pad = (-n) % num_chunks
     Xp = jnp.pad(X, ((0, pad), (0, 0))) if pad else X

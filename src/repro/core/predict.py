@@ -21,44 +21,76 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dcsvm import DCSVMModel
-from repro.core.kernels import Kernel, gram
+from repro.core.kernels import Kernel, gram, resolve_use_pallas
 from repro.core.kkmeans import assign_points
 
 Array = jax.Array
 
 
-def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096) -> Array:
-    """f(x) over all support vectors, chunked over SVs (eq. 10 when alpha is
-    a level-l solution)."""
+@partial(jax.jit, static_argnames=("kern", "chunk"))
+def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, w: Array,
+                   chunk: int) -> Array:
+    """sum_s w_s K(Xq, Xs) as ONE compiled scan over SV chunks (no per-chunk
+    Python dispatch).  Zero-padded SV rows carry zero weights."""
+    ns, d = Xs.shape
+    chunk = min(chunk, ns)
+    pad = (-ns) % chunk
+    Xsp = jnp.pad(Xs, ((0, pad), (0, 0)))
+    wp = jnp.pad(w, (0, pad))
+
+    def step(acc, xw):
+        Xc, wc = xw
+        return acc + kern.pairwise(Xq, Xc) @ wc, None
+
+    out, _ = jax.lax.scan(
+        step, jnp.zeros(Xq.shape[0], Xq.dtype),
+        (Xsp.reshape(-1, chunk, d), wp.reshape(-1, chunk)))
+    return out
+
+
+def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
+                   use_pallas: Optional[bool] = None) -> Array:
+    """f(x) over all support vectors (eq. 10 when alpha is a level-l
+    solution).  Pallas path: one streaming ``kernel_matvec`` call — the
+    (nq, |S|) kernel block never hits HBM; otherwise a single fused scan
+    over SV chunks."""
     sv = model.sv_index
     if len(sv) == 0:
         return jnp.zeros(Xq.shape[0], Xq.dtype)
+    if use_pallas is None:
+        use_pallas = model.config.use_pallas
     Xs = model.X[jnp.asarray(sv)]
     w = (model.alpha * model.y)[jnp.asarray(sv)]
     kern = model.config.kernel
-    out = jnp.zeros(Xq.shape[0], Xq.dtype)
-    for s in range(0, len(sv), chunk):
-        e = min(s + chunk, len(sv))
-        out = out + gram(kern, Xq, Xs[s:e]) @ w[s:e]
-    return out
+    if resolve_use_pallas(use_pallas):
+        from repro.kernels import ops as kops
+
+        return kops.kernel_matvec(Xq, Xs, w, kern).astype(Xq.dtype)
+    return _decision_scan(kern, Xq, Xs, w, chunk)
 
 
 def predict_exact(model: DCSVMModel, Xq: Array) -> Array:
     return jnp.sign(decision_exact(model, Xq))
 
 
-def decision_early(model: DCSVMModel, Xq: Array) -> Array:
+def decision_early(model: DCSVMModel, Xq: Array,
+                   use_pallas: Optional[bool] = None) -> Array:
     """Paper eq. 11: nearest-cluster routing + local-model scoring.
 
     Vectorized MoE-style dispatch (the same compute shape as our MoE layer):
     route every query to its cluster, sort queries by cluster id, batch each
     cluster's queries against ONLY that cluster's members — one vmapped
-    einsum, total work O(nq * (n/k) * d) = the paper's 1/k serving win.
+    kernel matvec, total work O(nq * (n/k) * d) = the paper's 1/k serving
+    win.  On the Pallas path each cluster's scoring streams through the
+    fused ``kernel_matvec`` kernel (vmapped over clusters).
     """
     part = model.partition
     assert part is not None, "early prediction requires a partitioned model"
     kern = model.config.kernel
-    cid, _ = assign_points(kern, part.model, Xq)
+    if use_pallas is None:
+        use_pallas = model.config.use_pallas
+    use_pallas = resolve_use_pallas(use_pallas)
+    cid, _ = assign_points(kern, part.model, Xq, use_pallas=use_pallas)
     nq = Xq.shape[0]
     k = part.k
 
@@ -81,8 +113,14 @@ def decision_early(model: DCSVMModel, Xq: Array) -> Array:
     Xm = model.X[members]                                    # (k, nc, d)
     wm = jnp.where(mmask, (model.alpha * model.y)[members], 0.0)
 
-    def one(qc, Xc, wc):
-        return kern.pairwise(qc, Xc) @ wc                    # (cap,)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        def one(qc, Xc, wc):
+            return kops.kernel_matvec(qc, Xc, wc, kern)      # (cap,)
+    else:
+        def one(qc, Xc, wc):
+            return kern.pairwise(qc, Xc) @ wc                # (cap,)
 
     scores = jax.vmap(one)(qbuf, Xm, wm)                     # (k, cap)
     vals = jnp.where(keep, scores[sc_safe, pos_safe], 0.0)

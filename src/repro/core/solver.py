@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import colcache
 from repro.core.kernels import Kernel
 
 Array = jax.Array
@@ -43,12 +44,16 @@ class SolveResult(NamedTuple):
     grad: Array          # g = Q a - e at the returned alpha
     iters: Array         # number of outer iterations executed
     pg_max: Array        # final max |projected gradient|
+    cache_hits: Optional[Array] = None    # column-cache rows served (matvec solver)
+    cache_misses: Optional[Array] = None  # column-cache rows recomputed
 
 
 def objective(alpha: Array, grad: Array) -> Array:
-    """f(a) = 1/2 a'Qa - e'a given g = Qa - e  =>  f = 1/2 a'(g - e)... no:
+    """f(a) = 1/2 a'Qa - e'a evaluated from the maintained gradient.
 
-    a'Qa = a'(g + e) so f = 1/2 a'(g + e) - e'a = 1/2 a'g - 1/2 e'a.
+    With g = Qa - e we have a'g = a'Qa - e'a, hence
+
+        f(a) = 1/2 (a'g + e'a) - e'a = 1/2 a'g - 1/2 e'a.
     """
     return 0.5 * jnp.vdot(alpha, grad) - 0.5 * jnp.sum(alpha)
 
@@ -184,7 +189,8 @@ def solve_box_qp_block(
 # Matvec-free block CD: kernel columns computed on the fly (large n)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("kernel", "block", "sweeps", "max_iters", "grad_chunks"))
+@partial(jax.jit, static_argnames=("kernel", "block", "sweeps", "max_iters",
+                                   "grad_chunks", "use_pallas", "cache_cap"))
 def solve_box_qp_matvec(
     X: Array,
     y: Array,
@@ -196,44 +202,117 @@ def solve_box_qp_matvec(
     block: int = 64,
     sweeps: int = 4,
     grad_chunks: int = 16,
+    use_pallas: bool = False,
+    cache_cap: int = 0,
 ) -> SolveResult:
     """Block greedy CD where Q columns are recomputed from (X, y) per step.
 
-    Never materializes Q (the TPU adaptation of LIBSVM's kernel cache: we
-    trade FLOPs for HBM, recomputing the B selected columns each outer
-    iteration via one (n x d)x(d x B) matmul + fused kernel transform).
+    Never materializes Q.  Three gradient-update paths:
+
+    * ``use_pallas=False, cache_cap=0`` — XLA reference: the (n, B) column
+      block via ``kernel.pairwise`` each outer iteration.
+    * ``use_pallas=True, cache_cap=0`` — fully fused: rank-B update through
+      ``repro.kernels.ops.cd_column_update`` (the (n, B) kernel block lives
+      only in VMEM, per tile) and gradient init through the streaming
+      ``kernel_matvec`` kernel.
+    * ``cache_cap>0`` — device-resident LRU column cache (``core.colcache``):
+      a block whose B rows are all cached is served from HBM with no kernel
+      compute at all (``lax.cond`` skips it); otherwise the B rows are
+      recomputed (Pallas ``kermat`` on the fused path) and refilled into the
+      cache.  Hit/miss row counts are returned on ``SolveResult``.
     """
     n = X.shape[0]
     alpha = jnp.zeros(n, X.dtype) if alpha0 is None else alpha0
 
-    # initial gradient g = Q @ alpha - 1 via chunked rows
+    # initial gradient g = Q @ alpha - 1: streaming Pallas matvec on the
+    # fused path, chunked lax.map otherwise
     from repro.core.kernels import gram_matvec
 
-    def q_matvec(v):
-        return y * gram_matvec(kernel, X, y * v, num_chunks=grad_chunks)
+    if use_pallas:
+        from repro.kernels import ops as kops
 
-    g = q_matvec(alpha) - 1.0
-    diag_q = kernel.diag(X)  # y_i^2 = 1 so Q_ii = K_ii
+    # accumulation dtype: at least f32 (Pallas kernels accumulate in f32),
+    # f64 preserved when x64 is enabled
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+
+    def q_matvec(v):
+        return y * gram_matvec(kernel, X, y * v, num_chunks=grad_chunks,
+                               use_pallas=use_pallas)
+
+    g = (q_matvec(alpha) - 1.0).astype(acc)
+
+    def select(alpha, g):
+        pg = proj_grad(alpha, g, C)
+        scores = jnp.abs(pg)
+        _, idx = lax.top_k(scores, block)
+        return idx, jnp.max(scores)
+
+    def solve_block(Qbb, alpha, g, idx):
+        ab, gb = alpha[idx], g[idx]
+        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
+        return new_ab, new_ab - ab
+
+    def q_rows(idx):
+        """(B, n) rows of Q for the selected block (Q is symmetric)."""
+        Xb, yb = X[idx], y[idx]
+        if use_pallas:
+            Kb = kops.kernel_matrix(Xb, X, kernel)
+        else:
+            Kb = kernel.pairwise(Xb, X)
+        return ((yb[:, None] * y[None, :]) * Kb).astype(acc)
+
+    if cache_cap > 0:
+        cap = max(cache_cap, block)  # must hold at least one full block
+
+        def body(state):
+            alpha, g, cache, it, _ = state
+            idx, pg_max = select(alpha, g)
+            slots, hit = colcache.lookup(cache, idx)
+            served = jnp.all(hit)
+            Qrows = lax.cond(
+                served,
+                lambda: cache.cols[jnp.where(hit, slots, 0)],
+                lambda: q_rows(idx),
+            )
+            cache = colcache.update(cache, idx, Qrows, served, slots, hit)
+            new_ab, delta = solve_block(Qrows[:, idx], alpha, g, idx)
+            alpha = alpha.at[idx].set(new_ab)
+            g = g + delta @ Qrows
+            return alpha, g, cache, it + 1, pg_max
+
+        def cond(state):
+            _, _, _, it, pg_max = state
+            return (pg_max > tol) & (it < max_iters)
+
+        pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, C)))
+        alpha, g, cache, iters, pg_max = lax.while_loop(
+            cond, body, (alpha, g, colcache.init(cap, n, dtype=acc), 0, pg0))
+        return SolveResult(alpha, g, iters, pg_max, cache.hits, cache.misses)
+
+    def body(state):
+        alpha, g, it, _ = state
+        idx, pg_max = select(alpha, g)
+        Xb, yb = X[idx], y[idx]
+        if use_pallas:
+            # fused: dg = y * (K(X, Xb) @ (yb * delta)); the (n, B) block
+            # never leaves VMEM — only the (B, B) working-set block is formed
+            Kbb = kernel.pairwise(Xb, Xb)
+            Qbb = ((yb[:, None] * yb[None, :]) * Kbb).astype(acc)
+            new_ab, delta = solve_block(Qbb, alpha, g, idx)
+            alpha = alpha.at[idx].set(new_ab)
+            g = g + kops.cd_column_update(X, y, Xb, yb * delta, kernel)
+        else:
+            Kb = kernel.pairwise(X, Xb)              # (n, B) on the fly
+            Qb = ((y[:, None] * yb[None, :]) * Kb).astype(acc)
+            Qbb = Qb[idx]                            # slice, don't recompute
+            new_ab, delta = solve_block(Qbb, alpha, g, idx)
+            alpha = alpha.at[idx].set(new_ab)
+            g = g + Qb @ delta
+        return alpha, g, it + 1, pg_max
 
     def cond(state):
         _, _, it, pg_max = state
         return (pg_max > tol) & (it < max_iters)
-
-    def body(state):
-        alpha, g, it, _ = state
-        pg = proj_grad(alpha, g, C)
-        scores = jnp.abs(pg)
-        _, idx = lax.top_k(scores, block)
-        Xb, yb = X[idx], y[idx]
-        Kb = kernel.pairwise(X, Xb)                  # (n, B) on the fly
-        Qb = (y[:, None] * yb[None, :]) * Kb
-        Qbb = Qb[idx]
-        ab, gb = alpha[idx], g[idx]
-        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
-        delta = new_ab - ab
-        alpha = alpha.at[idx].set(new_ab)
-        g = g + Qb @ delta
-        return alpha, g, it + 1, jnp.max(scores)
 
     pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, C)))
     alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
@@ -266,14 +345,16 @@ def solve_with_shrinking(
     mask = jnp.ones(n, bool)
     solver = solve_box_qp if block <= 0 else partial(solve_box_qp_block, block=block)
     res = None
-    total_iters = 0
+    # iteration counts accumulate on device; converting per round would force
+    # a host sync between rounds and serialize dispatch
+    total_iters = jnp.zeros((), jnp.int32)
     for r in range(rounds):
         final = r == rounds - 1
         m = jnp.ones(n, bool) if final else mask
         res = solver(Q, C, alpha0=alpha, tol=tol, max_iters=max_iters, active_mask=m)
         alpha, g = res.alpha, res.grad
-        total_iters += int(res.iters)
+        total_iters = total_iters + res.iters
         strongly_lo = (alpha <= 0.0) & (g > shrink_margin * tol)
         strongly_hi = (alpha >= C) & (g < -shrink_margin * tol)
         mask = ~(strongly_lo | strongly_hi)
-    return SolveResult(res.alpha, res.grad, jnp.asarray(total_iters), res.pg_max)
+    return SolveResult(res.alpha, res.grad, total_iters, res.pg_max)

@@ -8,7 +8,9 @@ recomputed on the fly.  This kernel fuses, per X tile:
 
 where w = y_b * delta.  The (n, B) column block never hits HBM — only the
 (n,) gradient delta does.  This is the recompute-in-VMEM replacement for
-LIBSVM's kernel cache (DESIGN.md §2).
+LIBSVM's kernel cache; the optional device-resident column cache that
+serves fully-resident blocks without any recompute lives in
+``repro.core.colcache`` (see DESIGN.md §2 for the tradeoff).
 
 VMEM per grid step (bm=512, B<=256, d<=512): well under 4 MiB.
 """

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import kermat as _kermat
+from repro.kernels import kermatvec as _kermatvec
 from repro.kernels import kmeans_assign as _assign
 from repro.kernels import cd_update as _cd
 
@@ -42,6 +43,26 @@ def kernel_matrix(X: jax.Array, Y: jax.Array, kernel, bm: int = 256,
         bm=bm, bn=bn, interpret=_interpret(),
     )
     return out[:n, :m]
+
+
+def kernel_matvec(X: jax.Array, Z: jax.Array, v: jax.Array, kernel,
+                  bm: int = 256, bn: int = 256) -> jax.Array:
+    """out (n,) = K(X, Z) @ v via the streaming Pallas kernel.
+
+    Zero-padded Z rows carry zero v weights, so they contribute nothing to
+    the accumulated output for every kernel kind.
+    """
+    bm = min(bm, max(8, X.shape[0]))
+    bn = min(bn, max(8, Z.shape[0]))
+    Xp, n = _pad_rows(X, bm)
+    Zp, _ = _pad_rows(Z, bn)
+    vp, _ = _pad_rows(v, bn)
+    out = _kermatvec.kernel_matvec(
+        Xp, Zp, vp, kind=kernel.kind, gamma=float(kernel.gamma),
+        degree=int(kernel.degree), coef0=float(kernel.coef0),
+        bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return out[:n]
 
 
 def kmeans_assign(X: jax.Array, Xm: jax.Array, W: jax.Array, s: jax.Array,

@@ -26,3 +26,8 @@ def cd_column_update_ref(X, y, Xb, w, *, kind="rbf", gamma=1.0, degree=3,
                          coef0=0.0):
     k = kermat_ref(X, Xb, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
     return y * (k @ w)
+
+
+def kernel_matvec_ref(X, Z, v, *, kind="rbf", gamma=1.0, degree=3, coef0=0.0):
+    k = kermat_ref(X, Z, kind=kind, gamma=gamma, degree=degree, coef0=coef0)
+    return k @ v.astype(jnp.float32)

@@ -1,0 +1,190 @@
+"""End-to-end Pallas/XLA parity for the streaming conquer engine.
+
+Covers the ISSUE-1 acceptance criteria: ``solve_box_qp_matvec`` with
+``use_pallas=True`` (fused cd_column_update + kernel_matvec) and with the
+device-resident column cache must match the XLA reference path to 1e-5,
+and the serving paths (decision_exact / decision_early) must agree across
+backends.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCSVMConfig,
+    Kernel,
+    colcache,
+    fit,
+    gram_matvec,
+    objective_value,
+    solve_box_qp_matvec,
+    solve_with_shrinking,
+)
+from repro.core.predict import decision_early, decision_exact
+from repro.data import gaussian_mixture, train_test_split
+
+KERNELS = [
+    Kernel("rbf", gamma=4.0),
+    Kernel("poly", gamma=1.0, degree=3, coef0=1.0),
+    Kernel("linear"),
+]
+
+
+def _problem(n=160, d=7, key=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    # centered data keeps the poly/linear Grams well-conditioned
+    X = (jax.random.uniform(k1, (n, d)) - 0.5) * 2.0
+    y = jnp.sign(jax.random.normal(k2, (n,)))
+    return X, y
+
+
+# (n, d) per kernel sized so the Gram is generically full-rank and the dual
+# optimum unique — otherwise both backends converge to *different* optima of
+# a singular QP and alpha-level parity is meaningless (poly rank is
+# C(d+deg, deg), linear rank is d)
+PARITY_SHAPES = {"rbf": (160, 7), "poly": (64, 7), "linear": (32, 40)}
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+def test_matvec_solver_pallas_parity(kern):
+    """use_pallas=True vs False: alphas within 1e-5 (acceptance criterion)."""
+    n, d = PARITY_SHAPES[kern.kind]
+    X, y = _problem(n=n, d=d)
+    C = 2.0
+    r_x = solve_box_qp_matvec(X, y, kern, C, tol=1e-6, max_iters=4000, block=16)
+    r_p = solve_box_qp_matvec(X, y, kern, C, tol=1e-6, max_iters=4000, block=16,
+                              use_pallas=True)
+    np.testing.assert_allclose(np.asarray(r_p.alpha), np.asarray(r_x.alpha),
+                               atol=1e-5)
+    assert float(r_p.pg_max) <= 1e-6 * 1.5
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_matvec_solver_cache_parity(use_pallas):
+    """Column cache on/off must not change the solution; counters must add up."""
+    X, y = _problem(key=3)
+    C = 2.0
+    base = solve_box_qp_matvec(X, y, kern := Kernel("rbf", gamma=4.0), C,
+                               tol=1e-6, max_iters=4000, block=16)
+    res = solve_box_qp_matvec(X, y, kern, C, tol=1e-6, max_iters=4000, block=16,
+                              use_pallas=use_pallas, cache_cap=X.shape[0])
+    np.testing.assert_allclose(np.asarray(res.alpha), np.asarray(base.alpha),
+                               atol=1e-5)
+    hits, misses = int(res.cache_hits), int(res.cache_misses)
+    assert hits + misses == int(res.iters) * 16
+    # cap = n: once the active set is resident the solver must start hitting
+    assert hits > 0
+
+
+def test_matvec_solver_warm_start_pallas():
+    """Warm-started fused path converges immediately at the optimum."""
+    X, y = _problem(key=5)
+    kern = Kernel("rbf", gamma=4.0)
+    C = 1.0
+    ref = solve_box_qp_matvec(X, y, kern, C, tol=1e-6, max_iters=4000, block=16)
+    warm = solve_box_qp_matvec(X, y, kern, C, alpha0=ref.alpha, tol=1e-5,
+                               max_iters=4000, block=16, use_pallas=True)
+    assert int(warm.iters) == 0
+    np.testing.assert_allclose(np.asarray(warm.alpha), np.asarray(ref.alpha))
+
+
+def test_gram_matvec_pallas_parity():
+    X, _ = _problem(n=130, d=9, key=7)
+    v = jax.random.normal(jax.random.PRNGKey(8), (130,))
+    for kern in KERNELS:
+        a = gram_matvec(kern, X, v, num_chunks=4)
+        b = gram_matvec(kern, X, v, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_objective_value_pallas_parity():
+    X, y = _problem(n=120, key=9)
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(10), (120,))) * 0.1
+    cfg_x = DCSVMConfig(kernel=Kernel("rbf", gamma=4.0), C=2.0, use_pallas=False)
+    cfg_p = dataclasses.replace(cfg_x, use_pallas=True)
+    fx = float(objective_value(cfg_x, X, y, a))
+    fp = float(objective_value(cfg_p, X, y, a))
+    assert abs(fx - fp) < 1e-4 * (1 + abs(fx))
+
+
+def test_colcache_lru_semantics():
+    """Unit-level: insert fills LRU slots, touch refreshes, eviction unmaps."""
+    cache = colcache.init(cap=4, n=10)
+    idx = jnp.array([1, 2])
+    slots, hit = colcache.lookup(cache, idx)
+    assert not bool(jnp.any(hit))
+    rows = jnp.arange(20, dtype=jnp.float32).reshape(2, 10)
+    cache = colcache.update(cache, idx, rows, jnp.asarray(False), slots, hit)
+    assert int(cache.misses) == 2 and int(cache.hits) == 0
+
+    # both rows now resident, served block counts as hits and touches stamps
+    slots, hit = colcache.lookup(cache, idx)
+    assert bool(jnp.all(hit))
+    served_rows = cache.cols[slots]
+    np.testing.assert_array_equal(np.asarray(served_rows), np.asarray(rows))
+    cache = colcache.update(cache, idx, served_rows, jnp.asarray(True), slots, hit)
+    assert int(cache.hits) == 2
+
+    # insert 2+2 more rows: cap=4 forces eviction of the original two
+    for a, b in ((3, 4), (5, 6)):
+        idx2 = jnp.array([a, b])
+        slots2, hit2 = colcache.lookup(cache, idx2)
+        cache = colcache.update(cache, idx2, rows, jnp.asarray(False), slots2, hit2)
+    _, hit = colcache.lookup(cache, jnp.array([1, 2]))
+    assert not bool(jnp.any(hit)), "LRU rows must be evicted and unmapped"
+    _, hit2 = colcache.lookup(cache, jnp.array([3, 4, 5, 6]))
+    assert bool(jnp.all(hit2))
+
+
+def test_fit_backend_parity_and_cache_stats():
+    """fit() through the matvec conquer path: XLA vs Pallas backends agree and
+    the level-0 stats surface cache hit counters."""
+    X, y = gaussian_mixture(jax.random.PRNGKey(0), 700, d=8, modes_per_class=4,
+                            spread=0.15)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    kern = Kernel("rbf", gamma=8.0)
+    cfg_x = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=1, m=200, tol=1e-4,
+                        use_pallas=False, full_gram_threshold=64, block=32,
+                        col_cache_cap=512)
+    cfg_p = dataclasses.replace(cfg_x, use_pallas=True)
+    m_x = fit(cfg_x, Xtr, ytr)
+    m_p = fit(cfg_p, Xtr, ytr)
+    st = m_x.level_stats[-1]
+    assert {"cache_hits", "cache_misses", "cache_hit_rate"} <= set(st)
+    assert 0.0 <= st["cache_hit_rate"] <= 1.0
+    # same conquer trajectory to CD tolerance on both backends
+    assert float(jnp.max(jnp.abs(m_x.alpha - m_p.alpha))) < 5e-4
+
+    d_x = decision_exact(m_x, Xte, use_pallas=False)
+    d_p = decision_exact(m_x, Xte, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decision_early_pallas_parity():
+    X, y = gaussian_mixture(jax.random.PRNGKey(2), 600, d=8, modes_per_class=4,
+                            spread=0.15)
+    Xtr, ytr, Xte, _ = train_test_split(jax.random.PRNGKey(3), X, y)
+    cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=8.0), C=4.0, k=4, levels=1,
+                      m=200, tol=1e-3, early_stop_level=1, use_pallas=False)
+    model = fit(cfg, Xtr, ytr)
+    d_x = decision_early(model, Xte, use_pallas=False)
+    d_p = decision_early(model, Xte, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_shrinking_iters_accumulate_on_device():
+    """Satellite: solve_with_shrinking returns a device scalar equal to the
+    sum of per-round iteration counts (no per-round host sync)."""
+    X, y = _problem(n=100, key=13)
+    K = Kernel("rbf", gamma=4.0).pairwise(X, X) + 1e-3 * jnp.eye(100)
+    Q = (y[:, None] * y[None, :]) * K
+    res = solve_with_shrinking(Q, 2.0, tol=1e-4, max_iters=50_000, rounds=3)
+    assert isinstance(res.iters, jax.Array)
+    assert res.iters.dtype == jnp.int32
+    assert int(res.iters) > 0

@@ -83,6 +83,34 @@ def test_cd_column_update_matches_ref(kern, n, B, d):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+@pytest.mark.parametrize("n,m,d", [(128, 128, 16), (100, 300, 17), (512, 96, 5)])
+def test_kernel_matvec_matches_ref(kern, n, m, d):
+    """Streaming K(X, Z) @ v kernel vs jnp oracle, incl. non-tile-multiple
+    shapes (ops.py pads; padded Z rows carry zero v weight)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + m + d), 3)
+    X = jax.random.uniform(k1, (n, d))
+    Z = jax.random.uniform(k2, (m, d))
+    v = jax.random.normal(k3, (m,))
+    got = ops.kernel_matvec(X, Z, v, kern, bm=64, bn=64)
+    want = ref.kernel_matvec_ref(X, Z, v, kind=kern.kind, gamma=kern.gamma,
+                                 degree=kern.degree, coef0=kern.coef0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_matvec_f32_accumulation():
+    X, Z = _data(0, 256, 256, 16, jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(1), (256,), dtype=jnp.float32)
+    kern = Kernel("rbf", gamma=2.0)
+    got = ops.kernel_matvec(X, Z, v, kern, bm=64, bn=64)
+    assert got.dtype == jnp.float32  # accumulator policy
+    want = ref.kernel_matvec_ref(X.astype(jnp.float32), Z.astype(jnp.float32),
+                                 v, kind="rbf", gamma=2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
 def test_core_gram_pallas_path_consistent():
     """core.kernels.gram(use_pallas=True) must agree with the jnp path."""
     from repro.core.kernels import gram

@@ -108,6 +108,21 @@ def test_objective_helper_consistent():
     assert abs(float(objective(a, g) - f_direct)) < 1e-4 * (1 + abs(float(f_direct)))
 
 
+@pytest.mark.parametrize("n,seed", [(16, 0), (64, 1), (200, 2)])
+def test_objective_identity_pinned(n, seed):
+    """Pin objective(a, g) against the explicit 1/2 a'Qa - e'a in f64: the
+    identity f = 1/2 a'g - 1/2 e'a with g = Qa - e must hold exactly."""
+    rng = np.random.default_rng(seed)
+    Q = rng.standard_normal((n, n)).astype(np.float32)
+    Q = (Q + Q.T) / 2  # any symmetric matrix, PSD not required for the identity
+    a = rng.uniform(0.0, 3.0, size=n).astype(np.float32)
+    g = Q @ a - 1.0
+    f_explicit = 0.5 * a @ Q @ a - a.sum()
+    f_helper = float(objective(jnp.asarray(a), jnp.asarray(g)))
+    np.testing.assert_allclose(f_helper, f_explicit,
+                               rtol=1e-5, atol=1e-4 * (1 + abs(f_explicit)))
+
+
 def test_vmapped_solver_batches_independent_problems():
     keys = jax.random.split(jax.random.PRNGKey(17), 4)
     Qs = jnp.stack([make_qp(k, 48)[2] for k in keys])
