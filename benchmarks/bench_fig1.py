@@ -36,9 +36,11 @@ def run(n: int = 2000) -> list:
         from repro.core.dcsvm import _solve_clusters
         part = Partition.build(rand_assign, k, model.partition.model)
         mask = jnp.asarray(part.mask)
-        ac = jnp.where(mask, part.gather(jnp.zeros(Xtr.shape[0])), 0.0)
-        ac = _solve_clusters(cfg, part.gather(Xtr), part.gather(ytr), ac, mask)
-        a_rand = part.scatter(ac, Xtr.shape[0])
+        # _solve_clusters takes class-stacked (k, n_classes, nc) labels/duals
+        yc = part.gather(ytr)[:, None, :]
+        ac = jnp.where(mask, part.gather(jnp.zeros(Xtr.shape[0])), 0.0)[:, None, :]
+        ac = _solve_clusters(cfg, part.gather(Xtr), yc, ac, mask)
+        a_rand = part.scatter(ac[:, 0, :], Xtr.shape[0])
         f_rand = float(0.5 * a_rand @ Q @ a_rand - a_rand.sum())
         bound_rand = theorem1_bound(kern, Xtr, jnp.asarray(rand_assign), C)
 

@@ -1,0 +1,63 @@
+"""Serving-engine benchmark: exact vs early vs bcm request strategies.
+
+Trains a one-vs-all DC-SVM on a 3-class synthetic mixture, exports the
+compacted serving model, and drives the batched request loop per strategy —
+the paper's Table-1 comparison recast as a throughput/latency benchmark.
+Emits ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, emit_json
+from repro.core import DCSVMConfig, Kernel, accuracy_multiclass, fit_ova
+from repro.data import gaussian_mixture_multiclass, train_test_split
+from repro.launch.serve_svm import (
+    export_serving_model,
+    run_request_loop,
+    serve_batch,
+)
+
+STRATEGIES = ["exact", "early", "bcm"]
+
+
+def run(dry_run: bool = False) -> List[Row]:
+    n = 800 if dry_run else 6000
+    batch = 64 if dry_run else 256
+    num_batches = 5 if dry_run else 50
+    kern = Kernel("rbf", gamma=8.0)
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), n, n_classes=3,
+                                       d=8)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    cfg = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=2,
+                      m=min(600, Xtr.shape[0]), tol=1e-3)
+    model = fit_ova(cfg, Xtr, ytr)
+    sm = export_serving_model(model)
+
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, Xte.shape[0], size=(num_batches, batch))
+    batches = jnp.asarray(np.asarray(Xte)[idx])
+
+    rows: List[Row] = []
+    payload = {
+        "n_train": int(Xtr.shape[0]),
+        "n_classes": 3,
+        "n_sv": int(len(model.sv_union)),
+        "batch": batch,
+        "dry_run": dry_run,
+        "strategies": {},
+    }
+    for strategy in STRATEGIES:
+        pred, _ = serve_batch(sm, Xte, kern, strategy)
+        acc = accuracy_multiclass(yte, pred)
+        rep = run_request_loop(sm, kern, strategy, batches)
+        rep["accuracy"] = acc
+        payload["strategies"][strategy] = rep
+        rows.append((f"serve_{strategy}", rep["lat_ms_mean"] * 1e3,
+                     f"qps={rep['qps']:.0f} acc={acc:.4f}"))
+    emit_json("BENCH_serve.json", payload)
+    return rows

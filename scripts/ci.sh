@@ -1,18 +1,27 @@
 #!/usr/bin/env bash
 # Per-PR gate: tier-1 tests + a benchmarks smoke pass so regressions in the
-# fused conquer path (and its BENCH_conquer.json artifact) are caught early.
+# fused conquer path / serving engine (and their BENCH_*.json artifacts) are
+# caught early.
 #
-#   scripts/ci.sh            # full tier-1 + kernels bench smoke
+#   scripts/ci.sh            # full tier-1 + kernels/serve bench smoke
 #   scripts/ci.sh --fast     # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# guard: no tracked bytecode / cache artifacts may (re)appear in git
+if git ls-files | grep -E '(__pycache__|\.py[cod]$|\.pytest_cache|\.egg-info|BENCH_.*\.json$)' >/dev/null; then
+    echo "ERROR: tracked bytecode/cache artifacts found:" >&2
+    git ls-files | grep -E '(__pycache__|\.py[cod]$|\.pytest_cache|\.egg-info|BENCH_.*\.json$)' >&2
+    exit 1
+fi
 
 # tier-1 (ROADMAP.md)
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
-    # kernel and on the conquer solver, writes BENCH_conquer.json
-    python -m benchmarks.run --only kernels --dry-run
+    # kernel and on the conquer solver, writes BENCH_conquer.json +
+    # BENCH_serve.json
+    python -m benchmarks.run --only kernels,serve --dry-run
 fi

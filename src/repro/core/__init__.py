@@ -28,13 +28,23 @@ from repro.core.kkmeans import (
     two_step_kernel_kmeans,
 )
 from repro.core.dcsvm import DCSVMConfig, DCSVMModel, fit, objective_value
+from repro.core.multiclass import MulticlassModel, fit_ova, labels_to_ova
 from repro.core.predict import (
     accuracy,
+    accuracy_multiclass,
+    bucketed_cluster_scores,
     decision_bcm,
+    decision_bcm_ova,
     decision_early,
+    decision_early_ova,
     decision_exact,
+    decision_exact_ova,
+    early_capacity,
     predict_bcm,
+    predict_bcm_ova,
     predict_early,
+    predict_early_ova,
     predict_exact,
+    predict_exact_ova,
 )
 from repro.core import bounds

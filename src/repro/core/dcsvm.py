@@ -83,96 +83,146 @@ class DCSVMModel:
 # per-level solve: all clusters at once
 # ---------------------------------------------------------------------------
 
+def _map_classes(fn, args, fits_budget: bool):
+    """Apply ``fn`` over the leading class axis of ``args``: vmapped when the
+    batched per-class intermediates fit the Gram budget, otherwise a
+    sequential ``lax.map`` sweep (one class's Q live at a time)."""
+    if fits_budget:
+        return jax.vmap(fn)(*args)
+    return jax.lax.map(lambda t: fn(*t), args)
+
+
 def _solve_clusters(
     cfg: DCSVMConfig, Xc: Array, yc: Array, ac: Array, mask: Array,
     use_pallas: bool = False,
 ) -> Array:
-    """Solve k independent sub-QPs. Xc: (k, nc, d), yc/ac/mask: (k, nc)."""
+    """Solve the independent sub-QPs of one level.  Xc: (k, nc, d),
+    mask: (k, nc); yc/ac are class-stacked (k, n_classes, nc) — binary is
+    one class row.  The Gram is label-independent, so one Gram per cluster
+    serves every class and all k * n_classes sub-QPs run in a single
+    vmapped CD call."""
     k, nc, _ = Xc.shape
+    n_cls = yc.shape[1]
 
-    def one(Xi, yi, ai, mi):
+    def one(Xi, Yi, Ai, mi):
         Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
-        Qi = (yi[:, None] * yi[None, :]) * Ki
         # zero pad rows/cols so pad slots cannot leak into real gradients
         mm = mi[:, None] & mi[None, :]
-        Qi = jnp.where(mm, Qi, 0.0)
-        Qi = Qi + jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Qi.dtype)
-        ai = jnp.where(mi, ai, 0.0)
-        if cfg.block > 0 and cfg.block < nc:
-            res = S.solve_box_qp_block(
-                Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                block=cfg.block, sweeps=cfg.sweeps, active_mask=mi,
-            )
-        else:
-            res = S.solve_box_qp(
-                Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                active_mask=mi,
-            )
-        return res.alpha
+        Kz = jnp.where(mm, Ki, 0.0)
+        eye_pad = jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Ki.dtype)
 
-    if k * nc * nc <= cfg.gram_budget:
-        return jax.vmap(one)(Xc, yc, ac, mask)
-    # sequential sweep bounds peak memory at one cluster Gram
-    return jax.lax.map(one, (Xc, yc, ac, mask))
+        def per_class(yi, ai):
+            Qi = (yi[:, None] * yi[None, :]) * Kz + eye_pad
+            ai = jnp.where(mi, ai, 0.0)
+            if cfg.block > 0 and cfg.block < nc:
+                res = S.solve_box_qp_block(
+                    Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                    block=cfg.block, sweeps=cfg.sweeps, active_mask=mi,
+                )
+            else:
+                res = S.solve_box_qp(
+                    Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                    active_mask=mi,
+                )
+            return res.alpha
+
+        return jax.vmap(per_class)(Yi, Ai)                   # (n_cls, nc)
+
+    # sequential sweep bounds peak memory at one cluster's Grams
+    return _map_classes(one, (Xc, yc, ac, mask),
+                        k * n_cls * nc * nc <= cfg.gram_budget)
 
 
 def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array,
                   use_pallas: bool = False) -> Array:
-    """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs)."""
-    Xs, ys, as_ = X[idx], y[idx], alpha[idx]
+    """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs).
+
+    ``y``/``alpha`` are class-stacked (n_classes, n); the subset Gram is
+    shared across classes (per-class Q batches fall back to a sequential
+    sweep when they would blow the Gram budget)."""
+    Xs = X[idx]
     Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas)
-    Qs = (ys[:, None] * ys[None, :]) * Ks
-    if cfg.block > 0:
-        res = S.solve_box_qp_block(
-            Qs, cfg.C, alpha0=as_, tol=cfg.tol, max_iters=cfg.max_iters,
-            block=min(cfg.block, Qs.shape[0]), sweeps=cfg.sweeps,
-        )
-    else:
-        res = S.solve_box_qp(Qs, cfg.C, alpha0=as_, tol=cfg.tol, max_iters=cfg.max_iters)
-    return alpha.at[idx].set(res.alpha)
+    ys, as_ = y[:, idx], alpha[:, idx]
+
+    def per_class(yi, ai):
+        Qs = (yi[:, None] * yi[None, :]) * Ks
+        if cfg.block > 0:
+            res = S.solve_box_qp_block(
+                Qs, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                block=min(cfg.block, Qs.shape[0]), sweeps=cfg.sweeps,
+            )
+        else:
+            res = S.solve_box_qp(Qs, cfg.C, alpha0=ai, tol=cfg.tol,
+                                 max_iters=cfg.max_iters)
+        return res.alpha
+
+    new = _map_classes(per_class, (ys, as_),
+                       y.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget)
+    return alpha.at[:, idx].set(new)
 
 
 def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
                 use_pallas: bool = False):
-    """Top-level (level 0) solve on the whole problem, warm-started."""
+    """Top-level (level 0) solve on the whole problem, warm-started.
+
+    ``y``/``alpha`` are class-stacked (n_classes, n): the dense path shares
+    one Gram across all classes and solves the class QPs in a single
+    vmapped call — unless the n_classes (n, n) Q batch would blow the Gram
+    budget, in which case classes run as a sequential sweep (one Q live at
+    a time); the matvec path vmaps the matvec solver over the class axis
+    (the per-class cache budget is split accordingly)."""
     n = X.shape[0]
+    n_cls = y.shape[0]
     if n <= cfg.full_gram_threshold:
         K = gram(cfg.kernel, X, X, use_pallas=use_pallas)
-        Q = (y[:, None] * y[None, :]) * K
-        res = S.solve_with_shrinking(
-            Q, cfg.C, alpha0=alpha, tol=cfg.tol, max_iters=cfg.max_iters,
-            rounds=cfg.shrink_rounds, block=cfg.block,
-        )
-    else:
-        # the (cap, n) cache buffer counts against the same memory budget as
-        # the stacked cluster Grams
-        cache_cap = min(cfg.col_cache_cap, n, cfg.gram_budget // max(n, 1))
-        res = S.solve_box_qp_matvec(
-            X, y, cfg.kernel, cfg.C, alpha0=alpha, tol=cfg.tol,
+
+        def per_class(yi, ai):
+            Q = (yi[:, None] * yi[None, :]) * K
+            return S.solve_with_shrinking(
+                Q, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                rounds=cfg.shrink_rounds, block=cfg.block,
+            )
+
+        return _map_classes(per_class, (y, alpha),
+                            n_cls * n * n <= cfg.gram_budget)
+
+    # the (cap, n) cache buffer(s) count against the same memory budget as
+    # the stacked cluster Grams
+    cache_cap = min(cfg.col_cache_cap, n, cfg.gram_budget // max(n * n_cls, 1))
+
+    def per_class_mv(yi, ai):
+        return S.solve_box_qp_matvec(
+            X, yi, cfg.kernel, cfg.C, alpha0=ai, tol=cfg.tol,
             max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
             use_pallas=use_pallas, cache_cap=cache_cap,
         )
-    return res
+
+    return jax.vmap(per_class_mv)(y, alpha)
 
 
 # ---------------------------------------------------------------------------
 # Algorithm 1
 # ---------------------------------------------------------------------------
 
-def fit(
+def _fit_algorithm1(
     cfg: DCSVMConfig,
     X: Array,
-    y: Array,
+    Y: Array,
     callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
-) -> DCSVMModel:
-    """Train DC-SVM.  ``callback(level, alpha, stats)`` fires after each level
-    (level 0 = final solve) — benchmarks use it for time/objective curves."""
-    X = jnp.asarray(X)
-    y = jnp.asarray(y, X.dtype)
+):
+    """Shared Algorithm-1 driver for binary and one-vs-all training.
+
+    ``Y`` is the class-stacked (n_classes, n) +/-1 label matrix (binary =
+    one row).  The divide step is label-independent, so one partition and
+    one per-cluster Gram serve every row; all n_classes * k^l sub-QPs of a
+    level run in a single vmapped CD call (``_solve_clusters``).  Returns
+    ``(alpha (n_classes, n), partition, stats, is_early)``; the callback
+    receives the class-stacked alpha.
+    """
     n = X.shape[0]
     use_pallas = resolve_use_pallas(cfg.use_pallas)
     key = jax.random.PRNGKey(cfg.seed)
-    alpha = jnp.zeros(n, X.dtype)
+    alpha = jnp.zeros(Y.shape, X.dtype)
     sv_idx: Optional[np.ndarray] = None
     stats: List[Dict[str, Any]] = []
     partition: Optional[Partition] = None
@@ -196,44 +246,63 @@ def fit(
 
         t0 = time.perf_counter()
         Xc = partition.gather(X)
-        yc = partition.gather(y)
         mask = jnp.asarray(partition.mask)
-        ac = jnp.where(mask, partition.gather(alpha), 0.0)
-        ac = _solve_clusters(cfg, Xc, yc, ac, mask, use_pallas=use_pallas)
-        alpha = partition.scatter(ac, n)
+        # (k, nc, n_classes) gathers -> (k, n_classes, nc) class-stacked batch
+        Yc = jnp.moveaxis(partition.gather(Y.T), -1, 1)
+        ac = jnp.moveaxis(partition.gather(alpha.T), -1, 1)
+        ac = jnp.where(mask[:, None, :], ac, 0.0)
+        ac = _solve_clusters(cfg, Xc, Yc, ac, mask, use_pallas=use_pallas)
+        alpha = partition.scatter(jnp.moveaxis(ac, 1, -1), n).T
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
 
-        sv_idx = np.nonzero(np.asarray(alpha) > 0)[0]
+        sv_idx = np.nonzero(np.any(np.asarray(alpha) > 0, axis=0))[0]
         st = dict(level=l, clusters=kl, cluster_time=t_cluster, train_time=t_train,
                   n_sv=int(len(sv_idx)))
         stats.append(st)
         if callback is not None:
             callback(l, alpha, st)
         if cfg.early_stop_level == l:
-            return DCSVMModel(cfg, X, y, alpha, partition, True, stats)
+            return alpha, partition, stats, True
 
     # ---- level 0: refine + full solve -----------------------------------
     t0 = time.perf_counter()
     if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < n:
-        alpha = _solve_subset(cfg, X, y, alpha, jnp.asarray(sv_idx),
+        alpha = _solve_subset(cfg, X, Y, alpha, jnp.asarray(sv_idx),
                               use_pallas=use_pallas)
-    res = _solve_full(cfg, X, y, alpha, use_pallas=use_pallas)
+    res = _solve_full(cfg, X, Y, alpha, use_pallas=use_pallas)
     alpha = res.alpha
     alpha.block_until_ready()
     st = dict(level=0, clusters=1, cluster_time=0.0,
               train_time=time.perf_counter() - t0,
-              n_sv=int(np.sum(np.asarray(alpha) > 0)),
-              iters=int(res.iters), pg_max=float(res.pg_max))
+              n_sv=int(np.sum(np.any(np.asarray(alpha) > 0, axis=0))),
+              iters=int(np.sum(np.asarray(res.iters))),
+              pg_max=float(np.max(np.asarray(res.pg_max))))
     if res.cache_hits is not None:
-        hits, misses = int(res.cache_hits), int(res.cache_misses)
+        hits = int(np.sum(np.asarray(res.cache_hits)))
+        misses = int(np.sum(np.asarray(res.cache_misses)))
         st["cache_hits"] = hits
         st["cache_misses"] = misses
         st["cache_hit_rate"] = hits / max(hits + misses, 1)
     stats.append(st)
     if callback is not None:
         callback(0, alpha, st)
-    return DCSVMModel(cfg, X, y, alpha, partition, False, stats)
+    return alpha, partition, stats, False
+
+
+def fit(
+    cfg: DCSVMConfig,
+    X: Array,
+    y: Array,
+    callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
+) -> DCSVMModel:
+    """Train DC-SVM.  ``callback(level, alpha, stats)`` fires after each level
+    (level 0 = final solve) — benchmarks use it for time/objective curves."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    cb = None if callback is None else (lambda l, a, st: callback(l, a[0], st))
+    alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, y[None, :], cb)
+    return DCSVMModel(cfg, X, y, alpha[0], partition, is_early, stats)
 
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,

@@ -67,16 +67,25 @@ def kernel_kmeans(Kmm: Array, k: int, key: Array, iters: int = 20) -> Tuple[Arra
     def body(_, assign):
         W, s = _center_terms(Kmm, assign, k)
         D = diag[:, None] - 2.0 * (Kmm @ W) + s[None, :]
-        # reseed empty clusters: give them the point currently farthest from
-        # its own center (standard empty-cluster fix, keeps k populated)
-        counts = jnp.sum(jax.nn.one_hot(assign, k, dtype=Kmm.dtype), axis=0)
         new_assign = jnp.argmin(D, axis=1).astype(jnp.int32)
+        # reseed ALL empty clusters in one shot: the e-th empty cluster takes
+        # the e-th point farthest from its own center.  Reseeding one per
+        # iteration leaves up to k-2 phantom centers when argmin collapses
+        # many clusters at once (fixed-point at iters < #empties); a phantom
+        # center's distance column degenerates to K(x,x) and can capture
+        # arbitrary queries at serving time.
+        counts = jnp.sum(jax.nn.one_hot(new_assign, k, dtype=Kmm.dtype), axis=0)
         empty = counts <= 0.0
-        worst = jnp.argmax(D[jnp.arange(m), new_assign])
-        first_empty = jnp.argmax(empty)
-        new_assign = jnp.where(
-            jnp.any(empty), new_assign.at[worst].set(first_empty.astype(jnp.int32)), new_assign
-        )
+        eids = jnp.nonzero(empty, size=k, fill_value=-1)[0]          # (k,)
+        dist_own = D[jnp.arange(m), new_assign]
+        order = jnp.argsort(-dist_own)                               # (m,) distinct
+        rank = jnp.arange(k)
+        # at most m clusters can be populated by m points: empties ranked
+        # past m stay empty (the k > m degenerate case must not crash)
+        valid = (eids >= 0) & (rank < m)
+        targets = jnp.where(valid, order[jnp.clip(rank, 0, m - 1)], m)
+        new_assign = new_assign.at[targets].set(                     # m = dropped
+            jnp.where(valid, eids, 0).astype(jnp.int32), mode="drop")
         return new_assign
 
     assign = lax.fori_loop(0, iters, body, assign0)
@@ -88,9 +97,18 @@ def kernel_kmeans(Kmm: Array, k: int, key: Array, iters: int = 20) -> Tuple[Arra
 def assign_points(
     kernel: Kernel, model: KKMeansModel, X: Array, use_pallas: bool = False
 ) -> Tuple[Array, Array]:
-    """Nearest-center assignment for arbitrary points. Returns (assign, D)."""
+    """Nearest-center assignment for arbitrary points. Returns (assign, D).
+
+    Empty centers (zero W column — no sampled point assigned) have no
+    kernel-space location: their distance column degenerates to K(x,x)
+    (a constant 1 for RBF), so without masking a phantom center can win
+    ``argmin`` and silently capture queries.  Their distances are forced
+    to +inf so only populated centers are routable.
+    """
     Knm = gram(kernel, X, model.Xm, use_pallas=use_pallas)      # (n, m)
     D = kernel.diag(X)[:, None] - 2.0 * (Knm @ model.W) + model.s[None, :]
+    empty = jnp.sum(model.W, axis=0) <= 0.0                     # (k,)
+    D = jnp.where(empty[None, :], jnp.inf, D)
     return jnp.argmin(D, axis=1).astype(jnp.int32), D
 
 
@@ -189,14 +207,17 @@ def two_step_kernel_kmeans(
     (adaptive clustering passes the current support-vector set here)."""
     n = X.shape[0]
     m = min(m, n)
+    # independent streams for the m-point sample and the kmeans init: reusing
+    # ``key`` for both correlates the sample with the init permutation
+    key_sample, key_init = jax.random.split(key)
     if sample_idx is None:
-        sample_idx = jax.random.choice(key, n, shape=(m,), replace=False)
+        sample_idx = jax.random.choice(key_sample, n, shape=(m,), replace=False)
     else:
         sample_idx = jnp.asarray(sample_idx)
         m = sample_idx.shape[0]
     Xm = X[sample_idx]
     Kmm = gram(kernel, Xm, Xm, use_pallas=use_pallas)
-    _, W, s = kernel_kmeans(Kmm, k, key, iters=iters)
+    _, W, s = kernel_kmeans(Kmm, k, key_init, iters=iters)
     model = KKMeansModel(Xm=Xm, W=W, s=s)
     assign, D = assign_points(kernel, model, X, use_pallas=use_pallas)
     if balanced:

@@ -22,29 +22,115 @@ import jax.numpy as jnp
 
 from repro.core.dcsvm import DCSVMModel
 from repro.core.kernels import Kernel, gram, resolve_use_pallas
-from repro.core.kkmeans import assign_points
+from repro.core.kkmeans import KKMeansModel, assign_points
 
 Array = jax.Array
 
 
-@partial(jax.jit, static_argnames=("kern", "chunk"))
-def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, w: Array,
-                   chunk: int) -> Array:
-    """sum_s w_s K(Xq, Xs) as ONE compiled scan over SV chunks (no per-chunk
-    Python dispatch).  Zero-padded SV rows carry zero weights."""
+# ---------------------------------------------------------------------------
+# Bucketed per-cluster scoring (shared by early prediction, its OVA variant,
+# and the serving engine)
+# ---------------------------------------------------------------------------
+
+def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
+                            Xblocks: Array, Wblocks: Array, cap: int,
+                            use_pallas: bool = False) -> Array:
+    """Score every query against ONLY its assigned cluster's block.
+
+    ``Xblocks``: (k, nc, d) per-cluster member coordinates, ``Wblocks``:
+    (k, nc, C) per-member weights (zero on padding slots).  Returns (nq, C).
+
+    Queries are bucketed into a (k, cap, d) buffer and all clusters are
+    scored in one vmapped kernel matvec.  Clusters holding more than ``cap``
+    queries are handled by additional rounds of the SAME fused program
+    inside an on-device ``lax.while_loop`` — the common no-overflow case
+    runs exactly one round, and no path ever forces a host sync.  Queries
+    outside the current round target a dropped out-of-bounds buffer slot,
+    so they can never collide with (and overwrite) a real query's slot.
+    """
+    nq, d = Xq.shape
+    k = Xblocks.shape[0]
+    n_out = Wblocks.shape[-1]
+    if nq == 0:
+        return jnp.zeros((0, n_out), Xq.dtype)
+    acc = jnp.promote_types(Xq.dtype, jnp.float32)
+
+    order = jnp.argsort(cid)
+    sc = cid[order]
+    seg_start = jnp.searchsorted(sc, jnp.arange(k), side="left")
+    pos = jnp.arange(nq) - seg_start[sc]        # rank of each query in its cluster
+    pos_max = jnp.max(pos)
+
+    if use_pallas and n_out == 1:
+        from repro.kernels import ops as kops
+
+        def one(qc, Xc, wc):
+            return kops.kernel_matvec(qc, Xc, wc[:, 0], kern)[:, None]
+    elif use_pallas:
+        from repro.kernels import ops as kops
+
+        def one(qc, Xc, wc):
+            return kops.kernel_matrix(qc, Xc, kern) @ wc
+    else:
+        def one(qc, Xc, wc):
+            return kern.pairwise(qc, Xc) @ wc                    # (cap, C)
+
+    def body(carry):
+        out, r = carry
+        base = r * cap
+        in_r = (pos >= base) & (pos < base + cap)
+        row = jnp.where(in_r, sc, k)                             # k = dropped
+        col = jnp.where(in_r, pos - base, 0)
+        qbuf = jnp.zeros((k, cap, d), Xq.dtype).at[row, col].set(
+            Xq[order], mode="drop")
+        scores = jax.vmap(one)(qbuf, Xblocks, Wblocks)           # (k, cap, C)
+        vals = jnp.where(in_r[:, None],
+                         scores[jnp.where(in_r, sc, 0), col], 0.0)
+        return out.at[order].add(vals.astype(acc)), r + 1
+
+    def cond(carry):
+        _, r = carry
+        return r * cap <= pos_max
+
+    out0 = jnp.zeros((nq, n_out), acc)
+    out, _ = jax.lax.while_loop(cond, body, (out0, jnp.zeros((), jnp.int32)))
+    return out.astype(Xq.dtype)
+
+
+@partial(jax.jit, static_argnames=("kern", "cap", "use_pallas"))
+def _early_program(kern: Kernel, Xq: Array, route_model: KKMeansModel,
+                   Xblocks: Array, Wblocks: Array, cap: int,
+                   use_pallas: bool = False) -> Array:
+    """Route + bucketed local scoring as ONE compiled program."""
+    cid, _ = assign_points(kern, route_model, Xq, use_pallas=use_pallas)
+    return bucketed_cluster_scores(kern, Xq, cid, Xblocks, Wblocks, cap,
+                                   use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("kern", "chunk", "use_pallas"))
+def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, W: Array,
+                   chunk: int, use_pallas: bool = False) -> Array:
+    """K(Xq, Xs) @ W as ONE compiled scan over SV chunks (no per-chunk
+    Python dispatch, and never more than an (nq, chunk) kernel block live).
+    W is (ns, C) — one weight column per output (C = 1 binary,
+    C = n_classes one-vs-all).  Zero-padded SV rows carry zero weights."""
     ns, d = Xs.shape
     chunk = min(chunk, ns)
     pad = (-ns) % chunk
     Xsp = jnp.pad(Xs, ((0, pad), (0, 0)))
-    wp = jnp.pad(w, (0, pad))
+    Wp = jnp.pad(W, ((0, pad), (0, 0)))
+    if use_pallas:
+        from repro.kernels import ops as kops
 
     def step(acc, xw):
         Xc, wc = xw
-        return acc + kern.pairwise(Xq, Xc) @ wc, None
+        Kc = (kops.kernel_matrix(Xq, Xc, kern) if use_pallas
+              else kern.pairwise(Xq, Xc))
+        return acc + Kc @ wc, None
 
     out, _ = jax.lax.scan(
-        step, jnp.zeros(Xq.shape[0], Xq.dtype),
-        (Xsp.reshape(-1, chunk, d), wp.reshape(-1, chunk)))
+        step, jnp.zeros((Xq.shape[0], W.shape[1]), Xq.dtype),
+        (Xsp.reshape(-1, chunk, d), Wp.reshape(-1, chunk, W.shape[1])))
     return out
 
 
@@ -66,11 +152,30 @@ def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
         from repro.kernels import ops as kops
 
         return kops.kernel_matvec(Xq, Xs, w, kern).astype(Xq.dtype)
-    return _decision_scan(kern, Xq, Xs, w, chunk)
+    return _decision_scan(kern, Xq, Xs, w[:, None], chunk)[:, 0]
 
 
 def predict_exact(model: DCSVMModel, Xq: Array) -> Array:
     return jnp.sign(decision_exact(model, Xq))
+
+
+def _early_blocks(model, w: Array):
+    """Per-cluster member blocks (k, nc, d) and weights (k, nc, C) for a
+    partitioned model; ``w`` is (n,) or (n, C)."""
+    part = model.partition
+    members = jnp.asarray(np.maximum(part.idx, 0))           # (k, nc)
+    mmask = jnp.asarray(part.mask)
+    Xm = model.X[members]                                    # (k, nc, d)
+    if w.ndim == 1:
+        w = w[:, None]
+    wm = jnp.where(mmask[..., None], w[members], 0.0)        # (k, nc, C)
+    return Xm, wm
+
+
+def early_capacity(nq: int, k: int) -> int:
+    """Query-buffer slots per cluster: 2x the balanced load.  Overflow past
+    this capacity is handled by extra on-device rounds, never dropped."""
+    return int(min(nq, max(8, -(-2 * nq // k))))
 
 
 def decision_early(model: DCSVMModel, Xq: Array,
@@ -83,6 +188,11 @@ def decision_early(model: DCSVMModel, Xq: Array,
     kernel matvec, total work O(nq * (n/k) * d) = the paper's 1/k serving
     win.  On the Pallas path each cluster's scoring streams through the
     fused ``kernel_matvec`` kernel (vmapped over clusters).
+
+    Routing and scoring run as ONE compiled program; queries overflowing a
+    cluster's buffer capacity are handled by extra rounds of the same
+    program inside the device-side loop (see ``bucketed_cluster_scores``) —
+    no host sync on any path.
     """
     part = model.partition
     assert part is not None, "early prediction requires a partitioned model"
@@ -90,51 +200,10 @@ def decision_early(model: DCSVMModel, Xq: Array,
     if use_pallas is None:
         use_pallas = model.config.use_pallas
     use_pallas = resolve_use_pallas(use_pallas)
-    cid, _ = assign_points(kern, part.model, Xq, use_pallas=use_pallas)
-    nq = Xq.shape[0]
-    k = part.k
-
-    order = jnp.argsort(cid)
-    sc = cid[order]
-    seg_start = jnp.searchsorted(sc, jnp.arange(k), side="left")
-    pos = jnp.arange(nq) - seg_start[sc]
-    # capacity = 2x balanced load; the rare overflow queries take the exact
-    # per-query gather path below (never dropped)
-    cap = int(min(nq, max(8, -(-2 * nq // k))))
-    keep = pos < cap
-    pos_safe = jnp.where(keep, pos, 0)
-    sc_safe = jnp.where(keep, sc, 0)
-    qbuf = jnp.zeros((k, cap, Xq.shape[1]), Xq.dtype)
-    qbuf = qbuf.at[sc_safe, pos_safe].set(
-        jnp.where(keep[:, None], Xq[order], 0.0))
-
-    members = jnp.asarray(np.maximum(part.idx, 0))           # (k, nc)
-    mmask = jnp.asarray(part.mask)
-    Xm = model.X[members]                                    # (k, nc, d)
-    wm = jnp.where(mmask, (model.alpha * model.y)[members], 0.0)
-
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        def one(qc, Xc, wc):
-            return kops.kernel_matvec(qc, Xc, wc, kern)      # (cap,)
-    else:
-        def one(qc, Xc, wc):
-            return kern.pairwise(qc, Xc) @ wc                # (cap,)
-
-    scores = jax.vmap(one)(qbuf, Xm, wm)                     # (k, cap)
-    vals = jnp.where(keep, scores[sc_safe, pos_safe], 0.0)
-    out = jnp.zeros(nq, scores.dtype).at[order].set(vals)
-
-    n_of = int(jnp.sum(~keep))
-    if n_of:                                                 # exact fallback
-        qidx = order[jnp.nonzero(~keep, size=n_of)[0]]
-        Xo = Xq[qidx]
-        co = cid[qidx]
-        Ko = jax.vmap(lambda xq, Xc, wc: kern.pairwise(xq[None], Xc)[0] @ wc)(
-            Xo, Xm[co], wm[co])
-        out = out.at[qidx].set(Ko)
-    return out
+    Xm, wm = _early_blocks(model, model.alpha * model.y)
+    cap = early_capacity(Xq.shape[0], part.k)
+    return _early_program(kern, Xq, part.model, Xm, wm, cap,
+                          use_pallas=use_pallas)[:, 0]
 
 
 def predict_early(model: DCSVMModel, Xq: Array) -> Array:
@@ -153,17 +222,26 @@ def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
     absorbed into the normalization, which only rescales decisions and does
     not change the sign/accuracy).
     """
+    W = (model.alpha * model.y)[:, None]
+    active = np.asarray(model.alpha) > 0
+    return _bcm_scores(model, Xq, W, active, noise, max_sv_per_cluster)[:, 0]
+
+
+def _bcm_scores(model, Xq: Array, W: Array, active: np.ndarray, noise: float,
+                max_sv_per_cluster: int) -> Array:
+    """Shared BCM combination: W is (n, C) decision weights, ``active`` marks
+    the support vectors eligible per cluster.  The GP predictive variance is
+    label-independent, so one variance per cluster weights all C outputs."""
     part = model.partition
     assert part is not None
     kern = model.config.kernel
-    w = model.alpha * model.y
     nq = Xq.shape[0]
-    num = np.zeros(nq, np.float64)
-    den = np.zeros(nq, np.float64) + 1e-12
-    alpha_np = np.asarray(model.alpha)
+    num = np.zeros((nq, W.shape[1]), np.float64)
+    den = np.zeros((nq, 1), np.float64) + 1e-12
+    W_np = np.asarray(W)
     for c in range(part.k):
         members = part.idx[c][part.mask[c]]
-        sv = members[alpha_np[members] > 0]
+        sv = members[active[members]]
         if len(sv) == 0:
             continue
         if len(sv) > max_sv_per_cluster:
@@ -171,10 +249,10 @@ def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
         Xs = model.X[jnp.asarray(sv)]
         Kss = np.asarray(gram(kern, Xs, Xs)) + noise * np.eye(len(sv))
         Kqs = np.asarray(gram(kern, Xq, Xs))
-        f_c = Kqs @ np.asarray(w[jnp.asarray(sv)])
+        f_c = Kqs @ W_np[sv]                                  # (nq, C)
         sol = np.linalg.solve(Kss, Kqs.T)                     # (s, nq)
         var = np.asarray(kern.diag(Xq)) - np.einsum("qs,sq->q", Kqs, sol)
-        var = np.maximum(var, noise)
+        var = np.maximum(var, noise)[:, None]
         num += f_c / var
         den += 1.0 / var
     return jnp.asarray((num / den).astype(np.float32))
@@ -186,3 +264,77 @@ def predict_bcm(model: DCSVMModel, Xq: Array) -> Array:
 
 def accuracy(y_true: Array, y_pred: Array) -> float:
     return float(jnp.mean((jnp.sign(y_true) == jnp.sign(y_pred)).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# One-vs-all (multiclass) variants: per-class decision values + argmax.
+# ``model`` is a core.multiclass.MulticlassModel (duck-typed: needs config,
+# X, Y (n_classes, n), alpha (n_classes, n), classes, partition, sv_union).
+# ---------------------------------------------------------------------------
+
+def _ova_weights(model) -> Array:
+    """(n, n_classes) decision weights: column c is alpha_c * y_c."""
+    return (model.alpha * model.Y).T
+
+
+def decision_exact_ova(model, Xq: Array, chunk: int = 4096,
+                       use_pallas: Optional[bool] = None) -> Array:
+    """(nq, n_classes) exact decision values over the SV union — one shared
+    kernel evaluation per (query, SV) pair serves every class (the class
+    axis is a plain matmul against the stacked weight columns)."""
+    sv = model.sv_union
+    n_cls = model.Y.shape[0]
+    if len(sv) == 0:
+        return jnp.zeros((Xq.shape[0], n_cls), Xq.dtype)
+    if use_pallas is None:
+        use_pallas = model.config.use_pallas
+    Xs = model.X[jnp.asarray(sv)]
+    Ws = _ova_weights(model)[jnp.asarray(sv)]                # (ns, n_classes)
+    kern = model.config.kernel
+    return _decision_scan(kern, Xq, Xs, Ws, chunk,
+                          use_pallas=resolve_use_pallas(use_pallas))
+
+
+def decision_early_ova(model, Xq: Array,
+                       use_pallas: Optional[bool] = None) -> Array:
+    """Eq.-11 early prediction for one-vs-all: each query is routed ONCE and
+    all n_classes local machines score it against the same gathered cluster
+    block (the kernel rows are shared; only the weight columns differ)."""
+    part = model.partition
+    assert part is not None, "early prediction requires a partitioned model"
+    if use_pallas is None:
+        use_pallas = model.config.use_pallas
+    use_pallas = resolve_use_pallas(use_pallas)
+    Xm, wm = _early_blocks(model, _ova_weights(model))
+    cap = early_capacity(Xq.shape[0], part.k)
+    return _early_program(model.config.kernel, Xq, part.model, Xm, wm, cap,
+                          use_pallas=use_pallas)
+
+
+def decision_bcm_ova(model, Xq: Array, noise: float = 1e-2,
+                     max_sv_per_cluster: int = 512) -> Array:
+    """BCM combination for one-vs-all — the per-cluster GP variance is
+    label-independent, so one variance weighting serves all classes."""
+    active = np.any(np.asarray(model.alpha) > 0, axis=0)
+    return _bcm_scores(model, Xq, _ova_weights(model), active, noise,
+                       max_sv_per_cluster)
+
+
+def _argmax_classes(model, scores: Array) -> Array:
+    return jnp.asarray(model.classes)[jnp.argmax(scores, axis=1)]
+
+
+def predict_exact_ova(model, Xq: Array) -> Array:
+    return _argmax_classes(model, decision_exact_ova(model, Xq))
+
+
+def predict_early_ova(model, Xq: Array) -> Array:
+    return _argmax_classes(model, decision_early_ova(model, Xq))
+
+
+def predict_bcm_ova(model, Xq: Array) -> Array:
+    return _argmax_classes(model, decision_bcm_ova(model, Xq))
+
+
+def accuracy_multiclass(y_true, y_pred) -> float:
+    return float(np.mean(np.asarray(y_true) == np.asarray(y_pred)))

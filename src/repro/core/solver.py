@@ -339,6 +339,10 @@ def solve_with_shrinking(
     bound with |g| > shrink_margin * tol are removed from the active set for
     the next round; the final round always re-activates everything so the
     returned KKT residual is on the FULL problem (LIBSVM's un-shrink check).
+
+    ``pg_max`` is recomputed at the returned alpha (one Q @ alpha matvec):
+    the inner solvers report the stopping value from the last *pre-update*
+    iterate, which is not the residual of the solution they return.
     """
     n = Q.shape[0]
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
@@ -357,4 +361,5 @@ def solve_with_shrinking(
         strongly_lo = (alpha <= 0.0) & (g > shrink_margin * tol)
         strongly_hi = (alpha >= C) & (g < -shrink_margin * tol)
         mask = ~(strongly_lo | strongly_hi)
-    return SolveResult(res.alpha, res.grad, total_iters, res.pg_max)
+    pg_full = kkt_residual(Q, res.alpha, C)
+    return SolveResult(res.alpha, res.grad, total_iters, pg_full)

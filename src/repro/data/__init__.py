@@ -1,5 +1,6 @@
 from repro.data.synthetic import (
     gaussian_mixture,
+    gaussian_mixture_multiclass,
     checkerboard,
     two_spirals,
     covtype_like,

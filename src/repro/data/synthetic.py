@@ -44,6 +44,26 @@ def gaussian_mixture(
     return X, y.astype(jnp.float32)
 
 
+def gaussian_mixture_multiclass(
+    key: Array,
+    n: int,
+    n_classes: int = 3,
+    d: int = 10,
+    modes_per_class: int = 4,
+    spread: float = 0.12,
+) -> Tuple[Array, Array]:
+    """Multiclass analogue of ``gaussian_mixture``: class c is a mixture of
+    ``modes_per_class`` Gaussians; labels are integers 0..n_classes-1 (the
+    one-vs-all DC-SVM workload)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    centers = jax.random.uniform(k1, (n_classes * modes_per_class, d))
+    mode = jax.random.randint(k2, (n,), 0, n_classes * modes_per_class)
+    X = centers[mode] + spread * jax.random.normal(k3, (n, d))
+    y = mode // modes_per_class
+    X = jnp.clip(X, 0.0, 1.0).astype(jnp.float32)
+    return X, y.astype(jnp.int32)
+
+
 def checkerboard(key: Array, n: int, cells: int = 4, noise: float = 0.02) -> Tuple[Array, Array]:
     """2-D checkerboard — the classic RBF-SVM stress test (no linear model
     can exceed chance; local structure is everything)."""

@@ -1,0 +1,300 @@
+"""Compiled SVM serving engine for (multiclass) DC-SVM models.
+
+Turns a trained ``DCSVMModel`` / ``MulticlassModel`` into a compacted,
+device-resident ``ServingModel`` and serves batched requests through one
+jitted program per strategy:
+
+* ``exact`` — K(Xq, SV-union) @ W, argmax over classes (paper eq. 10).
+* ``early`` — paper eq. 11: route each query to its nearest kernel-kmeans
+  cluster and score against ONLY that cluster's packed SV block (the 1/k
+  serving win).  Routing + bucketed scoring + argmax is one fused program
+  (``predict.bucketed_cluster_scores``).
+* ``bcm``   — precision-weighted combination of the k local models; the
+  per-cluster regularized SV Grams are prefactored at export time.
+
+Export drops every non-SV, packs the per-cluster SV blocks into a dense
+(k, max_sv, d) layout with masks (zero weights on padding slots, masked
+kernel columns where padding would leak — see DESIGN.md §5), and
+``device_put``s the whole model once; the request loop never touches host
+memory.
+
+    PYTHONPATH=src python -m repro.launch.serve_svm --n 4000 --classes 3 \
+        --strategy early --batch 256 --batches 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcsvm import DCSVMConfig, DCSVMModel
+from repro.core.kernels import Kernel, gram, resolve_use_pallas
+from repro.core.kkmeans import KKMeansModel
+from repro.core.multiclass import MulticlassModel, fit_ova
+from repro.core.predict import _early_program, early_capacity
+
+Array = jax.Array
+
+
+class ServingModel(NamedTuple):
+    """Device-resident compacted model (a pytree — passes through jit).
+
+    Binary models are exported with two weight columns (-w, +w) and classes
+    (-1, +1) so the argmax request loop is identical for every model.
+    """
+
+    # routing (implicit kernel-kmeans centers, empty centers masked upstream)
+    Xm: Array          # (m, d)
+    Wm: Array          # (m, k)
+    sm: Array          # (k,)
+    # early strategy: per-cluster packed SV blocks
+    Xsv: Array         # (k, max_sv, d)
+    Wsv: Array         # (k, max_sv, n_classes)  zero on padding
+    svmask: Array      # (k, max_sv)             True on real SVs
+    # exact strategy: SV union
+    Xall: Array        # (ns, d)
+    Wall: Array        # (ns, n_classes)
+    # bcm strategy: Cholesky factor of the regularized masked SV Gram per
+    # cluster (identity padding) — factored ONCE at export, so a request
+    # only pays triangular solves
+    Lchol: Array       # (k, max_sv, max_sv) lower-triangular
+    classes: Array     # (n_classes,)
+
+    @property
+    def k(self) -> int:
+        return self.Xsv.shape[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.classes.shape[0]
+
+
+def export_serving_model(model, noise: float = 1e-2,
+                         max_sv_per_cluster: int = 4096,
+                         with_bcm: bool = True) -> ServingModel:
+    """Compact a trained model for serving: drop non-SVs, pack per-cluster
+    SV blocks, prefactor the BCM Grams, device_put once.
+
+    Clusters holding more than ``max_sv_per_cluster`` SVs are strided down
+    to bound the packed block size — that makes ``early``/``bcm`` serving
+    an approximation of the training-side decision (a warning is emitted);
+    raise the cap for an exact round-trip.
+
+    ``with_bcm=False`` skips building/factoring the k (max_sv, max_sv) BCM
+    Grams — they are the export's dominant memory cost (k * max_sv^2
+    floats), wasted if only ``exact``/``early`` will be served.
+    """
+    part = model.partition
+    if part is None:
+        raise ValueError("serving export requires a partitioned model")
+    kern = model.config.kernel
+    alpha = np.asarray(model.alpha)
+    if isinstance(model, DCSVMModel) or alpha.ndim == 1:
+        w = alpha * np.asarray(model.y)
+        W = np.stack([-w, w], axis=1)                        # (n, 2)
+        classes = np.array([-1.0, 1.0], np.float32)
+        active = alpha > 0
+    else:
+        W = np.asarray(model.alpha * model.Y).T              # (n, n_classes)
+        classes = np.asarray(model.classes)
+        active = np.any(alpha > 0, axis=0)
+
+    X = np.asarray(model.X)
+    n_cls = W.shape[1]
+    d = X.shape[1]
+
+    sv_lists = []
+    n_thinned = 0
+    for c in range(part.k):
+        members = part.idx[c][part.mask[c]]
+        sv = members[active[members]]
+        if len(sv) > max_sv_per_cluster:
+            sv = sv[:: len(sv) // max_sv_per_cluster + 1]
+            n_thinned += 1
+        sv_lists.append(sv)
+    if n_thinned:
+        import warnings
+
+        warnings.warn(
+            f"{n_thinned} cluster(s) exceeded max_sv_per_cluster="
+            f"{max_sv_per_cluster}; their SV blocks were subsampled, so "
+            "early/bcm serving approximates the training-side decision",
+            stacklevel=2)
+    msv = max(1, max(len(s) for s in sv_lists))
+    Xsv = np.zeros((part.k, msv, d), X.dtype)
+    Wsv = np.zeros((part.k, msv, n_cls), np.float32)
+    svmask = np.zeros((part.k, msv), bool)
+    for c, sv in enumerate(sv_lists):
+        Xsv[c, : len(sv)] = X[sv]
+        Wsv[c, : len(sv)] = W[sv]
+        svmask[c, : len(sv)] = True
+
+    union = np.nonzero(active)[0]
+    if len(union) == 0:
+        union = np.array([0])
+    Xall = X[union]
+    Wall = W[union].astype(np.float32)
+
+    # BCM: masked per-cluster Gram + noise on the real block, identity on
+    # padding (padding rows of Xsv are zeros; for RBF K(x, 0) != 0, so the
+    # mask — not the zero rows — is what keeps padding out of the solve)
+    Xsv_j = jnp.asarray(Xsv)
+    if with_bcm:
+        mm = svmask[:, :, None] & svmask[:, None, :]
+        Kreg = jax.vmap(lambda Xc: kern.pairwise(Xc, Xc))(Xsv_j)
+        Kreg = jnp.where(jnp.asarray(mm), Kreg, 0.0)
+        eye = jnp.eye(msv, dtype=Kreg.dtype)
+        Kreg = Kreg + jnp.where(jnp.asarray(svmask)[:, :, None], noise, 1.0) * eye
+        Lchol = jnp.linalg.cholesky(Kreg)
+    else:
+        Lchol = jnp.zeros((part.k, 0, 0), jnp.float32)
+
+    sm = ServingModel(
+        Xm=jnp.asarray(np.asarray(part.model.Xm)),
+        Wm=jnp.asarray(np.asarray(part.model.W)),
+        sm=jnp.asarray(np.asarray(part.model.s)),
+        Xsv=Xsv_j, Wsv=jnp.asarray(Wsv), svmask=jnp.asarray(svmask),
+        Xall=jnp.asarray(Xall), Wall=jnp.asarray(Wall),
+        Lchol=Lchol, classes=jnp.asarray(classes),
+    )
+    return jax.device_put(sm)
+
+
+# ---------------------------------------------------------------------------
+# jitted request programs (scores (nq, n_classes); argmax happens on device)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("kern", "use_pallas"))
+def serve_scores_exact(sm: ServingModel, Xq: Array, kern: Kernel,
+                       use_pallas: bool = False) -> Array:
+    return gram(kern, Xq, sm.Xall, use_pallas=use_pallas) @ sm.Wall
+
+
+def serve_scores_early(sm: ServingModel, Xq: Array, kern: Kernel, cap: int,
+                       use_pallas: bool = False) -> Array:
+    """Route + bucketed SV-block scoring — the same jitted program as
+    training-side early prediction (``predict._early_program``), fed the
+    packed serving blocks."""
+    route = KKMeansModel(Xm=sm.Xm, W=sm.Wm, s=sm.sm)
+    return _early_program(kern, Xq, route, sm.Xsv, sm.Wsv, cap,
+                          use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("kern",))
+def serve_scores_bcm(sm: ServingModel, Xq: Array, kern: Kernel,
+                     noise: float = 1e-2) -> Array:
+    diag = kern.diag(Xq)
+
+    def per_cluster(Xc, Wc, Lc, mc):
+        Kqs = kern.pairwise(Xq, Xc) * mc[None, :]
+        f = Kqs @ Wc                                         # (nq, C)
+        # Lchol was factored at export: two triangular solves per request
+        sol = jax.scipy.linalg.cho_solve((Lc, True), Kqs.T)  # (s, nq)
+        var = jnp.maximum(diag - jnp.einsum("qs,sq->q", Kqs, sol), noise)
+        prec = jnp.where(jnp.any(mc), 1.0 / var, 0.0)        # skip empty blocks
+        return f * prec[:, None], prec
+
+    fs, ps = jax.vmap(per_cluster)(sm.Xsv, sm.Wsv, sm.Lchol, sm.svmask)
+    return jnp.sum(fs, 0) / (jnp.sum(ps, 0) + 1e-12)[:, None]
+
+
+def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
+                use_pallas: Optional[bool] = None) -> Tuple[Array, Array]:
+    """One batched request: returns (predicted class labels, scores)."""
+    up = resolve_use_pallas(use_pallas)
+    if strategy == "exact":
+        scores = serve_scores_exact(sm, Xq, kern, use_pallas=up)
+    elif strategy == "early":
+        cap = early_capacity(Xq.shape[0], sm.k)
+        scores = serve_scores_early(sm, Xq, kern, cap, use_pallas=up)
+    elif strategy == "bcm":
+        if sm.Lchol.shape[1] == 0:
+            raise ValueError("model was exported with with_bcm=False; "
+                             "re-export to serve the bcm strategy")
+        scores = serve_scores_bcm(sm, Xq, kern)
+    else:
+        raise ValueError(f"unknown strategy: {strategy}")
+    return sm.classes[jnp.argmax(scores, axis=1)], scores
+
+
+def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
+                     batches: Array, use_pallas: Optional[bool] = None,
+                     warmup: int = 2) -> dict:
+    """Drive the jitted request program over (num_batches, batch, d) queries,
+    sync per response (a real serving loop), and report latency/throughput."""
+    num_batches, batch, _ = batches.shape
+    for i in range(min(warmup, num_batches)):
+        pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
+        pred.block_until_ready()
+    lat = []
+    t_all = time.perf_counter()
+    for i in range(num_batches):
+        t0 = time.perf_counter()
+        pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
+        pred.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_all
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    return {
+        "strategy": strategy,
+        "batch": int(batch),
+        "batches": int(num_batches),
+        "qps": num_batches * batch / max(wall, 1e-9),
+        "lat_ms_mean": float(lat_ms.mean()),
+        "lat_ms_p50": float(np.percentile(lat_ms, 50)),
+        "lat_ms_p95": float(np.percentile(lat_ms, 95)),
+        "lat_ms_p99": float(np.percentile(lat_ms, 99)),
+    }
+
+
+def main(argv=None) -> None:
+    from repro.core.predict import accuracy_multiclass
+    from repro.data import gaussian_mixture_multiclass, train_test_split
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--classes", type=int, default=3)
+    ap.add_argument("--levels", type=int, default=2)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--strategy", default="early",
+                    choices=["exact", "early", "bcm"])
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=50)
+    ap.add_argument("--gamma", type=float, default=8.0)
+    ap.add_argument("--C", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(args.seed), args.n,
+                                       n_classes=args.classes)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(args.seed + 1), X, y)
+    kern = Kernel("rbf", gamma=args.gamma)
+    cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
+                      m=min(1000, Xtr.shape[0]), tol=1e-3, seed=args.seed)
+    t0 = time.perf_counter()
+    model = fit_ova(cfg, Xtr, ytr)
+    print(f"fit_ova: {time.perf_counter()-t0:.1f}s  "
+          f"n_sv={len(model.sv_union)}/{Xtr.shape[0]}")
+
+    sm = export_serving_model(model)
+    pred, _ = serve_batch(sm, Xte, kern, args.strategy)
+    acc = accuracy_multiclass(yte, pred)
+    print(f"serving accuracy ({args.strategy}): {acc:.4f}")
+
+    rng = np.random.default_rng(args.seed)
+    idx = rng.integers(0, Xte.shape[0], size=(args.batches, args.batch))
+    batches = jnp.asarray(np.asarray(Xte)[idx])
+    rep = run_request_loop(sm, kern, args.strategy, batches)
+    print(f"{rep['strategy']}: {rep['qps']:.0f} q/s | "
+          f"lat ms mean {rep['lat_ms_mean']:.2f} "
+          f"p50 {rep['lat_ms_p50']:.2f} p95 {rep['lat_ms_p95']:.2f} "
+          f"p99 {rep['lat_ms_p99']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

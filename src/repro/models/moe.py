@@ -15,8 +15,10 @@ Aux losses: Switch-style load-balancing loss and router z-loss, both returned
 for the trainer to weigh in.
 
 The structural kinship with the paper is intentional and documented
-(DESIGN.md §4): route-to-local-expert is the same compute shape as DC-SVM's
-early prediction (route-to-cluster, score with the local model).
+(DESIGN.md §5): route-to-local-expert is the same compute shape as DC-SVM's
+early prediction (route-to-cluster, score with the local model) — with the
+difference that the SVM serving path never drops an overflow query (extra
+on-device rounds instead of capacity drops).
 """
 from __future__ import annotations
 

@@ -135,6 +135,67 @@ def test_polynomial_kernel_path():
     assert accuracy(yte, predict_exact(model, Xte)) > 0.85
 
 
+def _early_reference(model, Xq):
+    """Per-query reference for eq. 11: score against the assigned cluster's
+    members with a plain host-side loop."""
+    from repro.core import assign_points
+
+    kern = model.config.kernel
+    cid, _ = assign_points(kern, model.partition.model, Xq)
+    w = np.asarray(model.alpha * model.y)
+    out = []
+    for i in range(Xq.shape[0]):
+        c = int(cid[i])
+        mem = model.partition.idx[c][model.partition.mask[c]]
+        out.append(float(kern.pairwise(Xq[i][None], model.X[mem])[0]
+                         @ jnp.asarray(w[mem])))
+    return np.asarray(out)
+
+
+def test_decision_early_no_host_sync():
+    """Regression: the serving hot path must never force a device-to-host
+    transfer (the pre-fix code synced on ``int(jnp.sum(~keep))`` on EVERY
+    call, overflow or not)."""
+    from repro.core import decision_early
+
+    Xtr, ytr, Xte, _ = _dataset(800, key=23)
+    cfg = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=1, m=200, tol=1e-3,
+                      early_stop_level=1)
+    model = fit(cfg, Xtr, ytr)
+    out_warm = decision_early(model, Xte)          # compile outside the guard
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = decision_early(model, Xte)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_warm))
+    np.testing.assert_allclose(np.asarray(out), _early_reference(model, Xte),
+                               atol=1e-4)
+
+
+def test_decision_early_overflow_path():
+    """Regression: queries beyond a cluster's buffer capacity must be scored
+    exactly (extra on-device rounds), not dropped or collided into slot 0."""
+    from repro.core import decision_early
+
+    Xtr, ytr, _, _ = _dataset(800, key=25)
+    cfg = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=1, m=200, tol=1e-3,
+                      early_stop_level=1)
+    model = fit(cfg, Xtr, ytr)
+    # route every query to ONE cluster: cap = 2 * nq / k < nq forces overflow
+    anchor = model.X[0]
+    Xq = anchor[None, :] + 0.01 * jax.random.normal(jax.random.PRNGKey(0),
+                                                    (64, Xtr.shape[1]))
+    Xq = Xq.astype(Xtr.dtype)
+    from repro.core import assign_points
+    cid, _ = assign_points(KERN, model.partition.model, Xq)
+    counts = np.bincount(np.asarray(cid), minlength=model.partition.k)
+    from repro.core import early_capacity
+    assert counts.max() > early_capacity(64, model.partition.k), \
+        "test setup must overflow the per-cluster buffer"
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = decision_early(model, Xq)
+    np.testing.assert_allclose(np.asarray(out), _early_reference(model, Xq),
+                               atol=1e-4)
+
+
 def test_objective_value_matches_dense():
     Xtr, ytr, _, _ = _dataset(400, key=41)
     cfg = DCSVMConfig(kernel=KERN, C=2.0)

@@ -91,3 +91,62 @@ def test_empty_cluster_reseeding():
     part = two_step_kernel_kmeans(kern, X, k=4, key=jax.random.PRNGKey(9), m=100)
     counts = np.bincount(part.assign, minlength=4)
     assert (counts > 0).all()
+
+
+def test_reseed_all_empties_in_one_iteration():
+    """Regression: when argmin collapses many clusters at once, reseeding one
+    empty per iteration leaves phantom centers whenever iters < #empties.
+    With a constant kernel matrix every point collapses into cluster 0 each
+    iteration, so only reseed-ALL keeps k clusters populated within 2 iters."""
+    Kmm = jnp.ones((12, 12))
+    assign, W, s = kernel_kmeans(Kmm, 4, jax.random.PRNGKey(0), iters=2)
+    counts = np.bincount(np.asarray(assign), minlength=4)
+    assert (counts > 0).all(), f"phantom empty clusters: counts={counts}"
+
+
+def test_reseed_handles_more_clusters_than_points():
+    """k > m degenerate case: reseeding must not crash, and with an identity
+    kernel (all points mutually orthogonal) every point keeps its own
+    singleton cluster — m of the k clusters populated, one point each."""
+    assign, W, s = kernel_kmeans(jnp.eye(8), 12, jax.random.PRNGKey(0), iters=3)
+    counts = np.bincount(np.asarray(assign), minlength=12)
+    assert counts.max() == 1
+    assert (counts > 0).sum() == 8
+
+
+def test_assign_points_masks_empty_centers():
+    """Regression: an empty center has W[:, c] = 0 and s[c] = 0, so its
+    distance column degenerates to K(x, x) = 1 (RBF) and can win argmin for
+    far-away queries.  Routing must never send a query to an empty center."""
+    from repro.core import KKMeansModel
+
+    Xm = jnp.asarray([[0.0, 0.0], [0.0, 0.1]])
+    W = jnp.asarray([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]])   # center 2 is empty
+    kern = Kernel("rbf", gamma=1.0)
+    Kmm = gram(kern, Xm, Xm)
+    s = jnp.asarray([1.0, 1.0, 0.0])
+    model = KKMeansModel(Xm=Xm, W=W, s=s)
+    # far query: distance to the real centers ~2, to the phantom center 1
+    Xq = jnp.asarray([[10.0, 10.0], [0.0, 0.0]])
+    assign, D = assign_points(kern, model, Xq)
+    assert np.asarray(D)[0, 2] == np.inf
+    assert int(assign[0]) in (0, 1)
+    assert int(assign[1]) == 0   # near queries still route normally
+
+
+def test_two_step_splits_sample_and_init_keys():
+    """Regression: the m-point sample and the kmeans init permutation must be
+    INDEPENDENT streams split from the caller's key, not two consumers of the
+    same key (correlated sample/init defeats the two-step scheme's
+    randomization).  Pins the documented contract: sample stream =
+    split(key)[0]."""
+    from repro.data import gaussian_mixture
+
+    X, _ = gaussian_mixture(jax.random.PRNGKey(30), 300, d=4)
+    key = jax.random.PRNGKey(42)
+    part = two_step_kernel_kmeans(Kernel("rbf", gamma=2.0), X, k=3, key=key,
+                                  m=64, iters=2, balanced=False)
+    key_sample, _ = jax.random.split(key)
+    expected = X[jax.random.choice(key_sample, 300, shape=(64,), replace=False)]
+    np.testing.assert_array_equal(np.asarray(part.model.Xm),
+                                  np.asarray(expected))

@@ -1,0 +1,146 @@
+"""Tests for one-vs-all multiclass DC-SVM (shared-partition class batching)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCSVMConfig,
+    Kernel,
+    accuracy_multiclass,
+    fit,
+    fit_ova,
+    labels_to_ova,
+    predict_bcm_ova,
+    predict_early_ova,
+    predict_exact_ova,
+)
+from repro.core.predict import decision_exact_ova
+from repro.data import gaussian_mixture_multiclass, train_test_split
+
+
+def _dataset(n=900, n_classes=3, key=0, d=8):
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(key), n,
+                                       n_classes=n_classes, d=d)
+    return train_test_split(jax.random.PRNGKey(key + 1), X, y)
+
+
+def test_labels_to_ova_roundtrip():
+    y = jnp.asarray([2, 0, 1, 1, 2, 0])
+    classes, Y = labels_to_ova(y)
+    assert list(classes) == [0, 1, 2]
+    assert Y.shape == (3, 6)
+    # exactly one +1 per column, at the row of the true class
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(Y, axis=0)),
+                                  np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(jnp.sum(Y == 1.0, axis=0)),
+                                  np.ones(6))
+
+
+def test_labels_to_ova_explicit_n_classes():
+    """With n_classes the class set is exactly 0..n_classes-1: absent classes
+    get an all-negative machine and labels outside the range are rejected
+    (regression: padding once duplicated observed non-contiguous labels)."""
+    classes, Y = labels_to_ova(jnp.asarray([0, 2, 0, 2]), n_classes=4)
+    assert list(classes) == [0, 1, 2, 3]
+    assert Y.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(Y[1]), -np.ones(4))
+    np.testing.assert_array_equal(np.asarray(Y[3]), -np.ones(4))
+    np.testing.assert_array_equal(np.asarray(Y[2]), [-1, 1, -1, 1])
+    with pytest.raises(ValueError):
+        labels_to_ova(jnp.asarray([0, 4]), n_classes=3)
+    with pytest.raises(ValueError):
+        labels_to_ova(np.asarray([0.5, 1.0]), n_classes=2)
+
+
+@pytest.mark.parametrize("kern", [
+    Kernel("rbf", gamma=8.0),
+    Kernel("poly", gamma=1.0, degree=3),
+    Kernel("linear"),
+], ids=["rbf", "poly", "linear"])
+def test_ova_matches_per_class_binary_fit(kern):
+    """Parity: the class-stacked vmapped solve must produce the same machines
+    as n_classes independent binary ``fit`` calls on the same data (the
+    partition is label-independent, so with adaptive sampling off the two
+    paths see identical subproblems)."""
+    Xtr, ytr, _, _ = _dataset(500, key=7)
+    cfg = DCSVMConfig(kernel=kern, C=2.0, k=3, levels=1, m=200, tol=1e-4,
+                      adaptive=False, refine=False)
+    mc = fit_ova(cfg, Xtr, ytr)
+    assert mc.alpha.shape == (3, Xtr.shape[0])
+    for c in range(mc.n_classes):
+        mb = fit(cfg, Xtr, mc.Y[c])
+        np.testing.assert_allclose(np.asarray(mc.alpha[c]),
+                                   np.asarray(mb.alpha), atol=5e-3)
+        # same dual objective to solver tolerance
+        from repro.core import gram
+        K = gram(kern, Xtr, Xtr)
+        Q = (mc.Y[c][:, None] * mc.Y[c][None, :]) * K
+        f_ova = float(0.5 * mc.alpha[c] @ Q @ mc.alpha[c] - mc.alpha[c].sum())
+        f_bin = float(0.5 * mb.alpha @ Q @ mb.alpha - mb.alpha.sum())
+        assert abs(f_ova - f_bin) <= 1e-3 * (abs(f_bin) + 1e-6)
+
+
+def test_ova_three_class_accuracy_exact_and_early():
+    """Acceptance: >= 95% accuracy on a 3-class mixture via the exact OVA
+    decision and via the early (clustered, eq. 11) path."""
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), 1200,
+                                       n_classes=3, d=8, spread=0.10)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    kern = Kernel("rbf", gamma=16.0)
+    cfg = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=2, m=300, tol=1e-3)
+    mc = fit_ova(cfg, Xtr, ytr)
+    assert accuracy_multiclass(yte, predict_exact_ova(mc, Xte)) >= 0.95
+    assert mc.partition is not None
+    assert accuracy_multiclass(yte, predict_early_ova(mc, Xte)) >= 0.95
+
+
+def test_ova_early_stop_and_bcm():
+    Xtr, ytr, Xte, yte = _dataset(1000, key=3)
+    kern = Kernel("rbf", gamma=8.0)
+    cfg = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=2, m=300, tol=1e-3,
+                      early_stop_level=1)
+    mc = fit_ova(cfg, Xtr, ytr)
+    assert mc.is_early and mc.partition is not None
+    assert accuracy_multiclass(yte, predict_early_ova(mc, Xte)) >= 0.9
+    assert accuracy_multiclass(yte, predict_bcm_ova(mc, Xte)) >= 0.9
+
+
+def test_ova_binary_view_matches_exact_decision():
+    """MulticlassModel.binary(c) exposes class-c's machine as a DCSVMModel
+    whose decision values equal column c of the OVA decision matrix."""
+    from repro.core import decision_exact
+
+    Xtr, ytr, Xte, _ = _dataset(500, key=11)
+    kern = Kernel("rbf", gamma=8.0)
+    cfg = DCSVMConfig(kernel=kern, C=2.0, k=3, levels=1, m=200, tol=1e-3)
+    mc = fit_ova(cfg, Xtr, ytr)
+    scores = decision_exact_ova(mc, Xte)
+    for c in range(mc.n_classes):
+        f_c = decision_exact(mc.binary(c), Xte)
+        np.testing.assert_allclose(np.asarray(scores[:, c]), np.asarray(f_c),
+                                   atol=1e-4)
+
+
+def test_ova_gram_budget_fallback_matches_vmapped():
+    """The sequential lax.map sweep taken when the class-stacked cluster
+    Grams exceed gram_budget must produce the same solution as the vmapped
+    path (regression: the fallback crashed — lax.map passes ONE tuple arg)."""
+    Xtr, ytr, _, _ = _dataset(400, key=17)
+    kern = Kernel("rbf", gamma=8.0)
+    base = dict(kernel=kern, C=2.0, k=3, levels=1, m=150, tol=1e-3,
+                adaptive=False, refine=False)
+    mc_big = fit_ova(DCSVMConfig(**base), Xtr, ytr)
+    mc_small = fit_ova(DCSVMConfig(**base, gram_budget=64), Xtr, ytr)
+    np.testing.assert_allclose(np.asarray(mc_small.alpha),
+                               np.asarray(mc_big.alpha), atol=5e-3)
+
+
+def test_ova_sv_union_covers_class_svs():
+    Xtr, ytr, _, _ = _dataset(500, key=13)
+    cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=8.0), C=2.0, k=3, levels=1,
+                      m=200, tol=1e-3)
+    mc = fit_ova(cfg, Xtr, ytr)
+    union = set(mc.sv_union.tolist())
+    for c in range(mc.n_classes):
+        assert set(mc.binary(c).sv_index.tolist()) <= union

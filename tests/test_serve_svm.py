@@ -1,0 +1,143 @@
+"""Serving-engine tests: export round-trip, strategy parity, request loop."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCSVMConfig,
+    Kernel,
+    accuracy_multiclass,
+    decision_early,
+    decision_exact,
+    fit,
+    fit_ova,
+    predict_early,
+    predict_exact,
+)
+from repro.core.predict import decision_early_ova, decision_exact_ova
+from repro.data import (
+    gaussian_mixture,
+    gaussian_mixture_multiclass,
+    train_test_split,
+)
+from repro.launch.serve_svm import (
+    export_serving_model,
+    run_request_loop,
+    serve_batch,
+)
+
+KERN = Kernel("rbf", gamma=16.0)
+
+
+@pytest.fixture(scope="module")
+def ova_model():
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), 900, n_classes=3,
+                                       d=8, spread=0.10)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    cfg = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=2, m=300, tol=1e-3)
+    return fit_ova(cfg, Xtr, ytr), Xte, yte
+
+
+@pytest.fixture(scope="module")
+def binary_model():
+    X, y = gaussian_mixture(jax.random.PRNGKey(2), 800, d=6, modes_per_class=3)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(3), X, y)
+    cfg = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=1, m=200, tol=1e-3,
+                      early_stop_level=1)
+    return fit(cfg, Xtr, ytr), Xte, yte
+
+
+def test_export_drops_non_svs(ova_model):
+    mc, _, _ = ova_model
+    sm = export_serving_model(mc)
+    assert sm.Xall.shape[0] == len(mc.sv_union) < mc.X.shape[0]
+    # every packed per-cluster slot is either a real SV or zero-weighted
+    wm = np.asarray(sm.Wsv)
+    svm = np.asarray(sm.svmask)
+    assert np.all(wm[~svm] == 0.0)
+
+
+def test_serve_exact_roundtrip_ova(ova_model):
+    mc, Xte, _ = ova_model
+    sm = export_serving_model(mc)
+    pred, scores = serve_batch(sm, Xte, KERN, "exact")
+    ref = decision_exact_ova(mc, Xte)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref), atol=1e-4)
+    ref_pred = np.asarray(mc.classes)[np.argmax(np.asarray(ref), axis=1)]
+    assert (np.asarray(pred) == ref_pred).all()
+
+
+def test_serve_early_roundtrip_ova(ova_model):
+    """Serving 'early' == predict_early_ova: dropping zero-weight non-SVs
+    from the packed blocks must not change any decision value."""
+    mc, Xte, yte = ova_model
+    sm = export_serving_model(mc)
+    pred, scores = serve_batch(sm, Xte, KERN, "early")
+    ref = decision_early_ova(mc, Xte)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref), atol=1e-4)
+    assert accuracy_multiclass(yte, pred) >= 0.95
+
+
+def test_serve_bcm_reasonable(ova_model):
+    mc, Xte, yte = ova_model
+    sm = export_serving_model(mc)
+    pred, _ = serve_batch(sm, Xte, KERN, "bcm")
+    assert accuracy_multiclass(yte, pred) >= 0.9
+
+
+def test_serve_binary_roundtrip(binary_model):
+    """A binary model exports with (-w, +w) columns: scores[:, 1] is f(x) and
+    the argmax label equals sign(f)."""
+    mb, Xte, _ = binary_model
+    sm = export_serving_model(mb)
+    assert np.asarray(sm.classes).tolist() == [-1.0, 1.0]
+    pred, scores = serve_batch(sm, Xte, KERN, "exact")
+    np.testing.assert_allclose(np.asarray(scores[:, 1]),
+                               np.asarray(decision_exact(mb, Xte)), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.asarray(predict_exact(mb, Xte)))
+    pred_e, scores_e = serve_batch(sm, Xte, KERN, "early")
+    np.testing.assert_allclose(np.asarray(scores_e[:, 1]),
+                               np.asarray(decision_early(mb, Xte)), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(pred_e),
+                                  np.asarray(predict_early(mb, Xte)))
+
+
+def test_request_loop_report(ova_model):
+    mc, Xte, _ = ova_model
+    sm = export_serving_model(mc)
+    idx = np.random.default_rng(0).integers(0, Xte.shape[0], size=(3, 32))
+    batches = jnp.asarray(np.asarray(Xte)[idx])
+    rep = run_request_loop(sm, KERN, "early", batches, warmup=1)
+    assert rep["qps"] > 0 and rep["lat_ms_p95"] >= rep["lat_ms_p50"] > 0
+    assert rep["batches"] == 3 and rep["batch"] == 32
+
+
+@pytest.mark.parametrize("strategy", ["exact", "early", "bcm"])
+def test_serve_empty_batch(ova_model, strategy):
+    """An empty request batch returns empty results instead of crashing
+    (regression: jnp.max over zero-size pos array in the bucketed path)."""
+    mc, Xte, _ = ova_model
+    sm = export_serving_model(mc)
+    pred, scores = serve_batch(sm, Xte[:0], KERN, strategy)
+    assert pred.shape == (0,) and scores.shape == (0, mc.n_classes)
+
+
+def test_serve_unknown_strategy_raises(ova_model):
+    mc, Xte, _ = ova_model
+    sm = export_serving_model(mc)
+    with pytest.raises(ValueError):
+        serve_batch(sm, Xte[:4], KERN, "nope")
+
+
+def test_export_without_bcm(ova_model):
+    """with_bcm=False skips the (k, msv, msv) Gram factorization; exact and
+    early still serve, bcm raises a clear error."""
+    mc, Xte, _ = ova_model
+    sm = export_serving_model(mc, with_bcm=False)
+    assert sm.Lchol.shape[1] == 0
+    pred, _ = serve_batch(sm, Xte[:16], KERN, "early")
+    assert pred.shape == (16,)
+    with pytest.raises(ValueError, match="with_bcm"):
+        serve_batch(sm, Xte[:4], KERN, "bcm")

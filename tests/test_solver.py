@@ -92,6 +92,20 @@ def test_shrinking_returns_full_problem_kkt():
     assert float(kkt_residual(Q, res.alpha, C)) <= 1e-3
 
 
+@pytest.mark.parametrize("max_iters", [25, 100_000])
+def test_shrinking_pg_max_is_residual_at_returned_alpha(max_iters):
+    """Regression (documented contract): ``pg_max`` must be the KKT residual
+    of the FULL problem at the RETURNED alpha.  The inner solvers report the
+    stopping value from the last pre-update iterate, which is stale — most
+    visibly when the iteration cap bites mid-descent."""
+    _, _, Q = make_qp(jax.random.PRNGKey(21), 150)
+    C = 3.0
+    res = solve_with_shrinking(Q, C, tol=1e-9, max_iters=max_iters, rounds=2)
+    np.testing.assert_allclose(float(res.pg_max),
+                               float(kkt_residual(Q, res.alpha, C)),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_active_mask_freezes_coordinates():
     _, _, Q = make_qp(jax.random.PRNGKey(13), 60)
     C = 1.0
