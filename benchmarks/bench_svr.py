@@ -1,0 +1,90 @@
+"""epsilon-SVR conquer benchmark: XLA vs Pallas on the generalized dual.
+
+Solves the 2n-variable (alpha, alpha*) SVR dual of the Friedman #1
+benchmark through ``solve_box_qp_matvec`` (signed weights through the fused
+cd_column_update / kernel_matvec path) on both backends, then runs the full
+multilevel ``fit`` + beta-form serving export.  Emits BENCH_svr.json with
+wall times, backend beta parity, and test MSE vs the predict-the-mean
+baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, emit_json, timed
+from repro.core import DCSVMConfig, EpsilonSVR, Kernel, fit, mse, predict_exact
+from repro.core.solver import solve_box_qp_matvec
+from repro.data import friedman1, train_test_split
+from repro.launch.serve_svm import export_serving_model, serve_batch
+
+
+def run(dry_run: bool = False) -> list:
+    n, tol, block = (160, 1e-4, 16) if dry_run else (1024, 1e-4, 32)
+    eps, C = 0.1, 4.0
+    kern = Kernel("rbf", gamma=1.0)
+    X, y = friedman1(jax.random.PRNGKey(0), n)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    task = EpsilonSVR(eps=eps)
+    td = task.build(Xtr, ytr[None, :], C)
+    s, p, cvec = td.S[0], td.P[0], td.Cvec[0]
+    max_iters = 400 if dry_run else 2000
+
+    def solve(**kw):
+        return solve_box_qp_matvec(td.Xd, s, kern, cvec, tol=tol,
+                                   max_iters=max_iters, block=block, p=p, **kw)
+
+    rows, results, betas = [], {}, {}
+    for name, kw in {"xla": dict(), "pallas": dict(use_pallas=True)}.items():
+        solve(**kw).alpha.block_until_ready()       # warm (compile)
+        res, t = timed(solve, **kw)
+        betas[name] = td.collapse(res.alpha[None, :])[0]
+        results[name] = {"wall_s": t, "iters": int(res.iters),
+                         "pg_max": float(res.pg_max)}
+        rows.append((f"svr.conquer.{name}.{2 * Xtr.shape[0]}x{Xtr.shape[1]}",
+                     t * 1e6, f"iters={int(res.iters)}"))
+
+    # beta (not the raw 2n dual) is the well-posed parity quantity: Q is
+    # rank-deficient by construction on the duplicated rows
+    beta_dev = float(jnp.max(jnp.abs(betas["pallas"] - betas["xla"])))
+    results["beta_max_dev_vs_xla"] = beta_dev
+    assert beta_dev < 1e-3, beta_dev
+
+    # end-to-end: multilevel fit + compiled serving round trip.  ``exact``
+    # serves the final model; ``early`` (eq. 11) is only meaningful with an
+    # early-stopped model whose per-cluster SVRs were trained locally — an
+    # exact model's beta is not cluster-separable.
+    cfg = DCSVMConfig(kernel=kern, C=C, k=4, levels=1 if dry_run else 2,
+                      m=min(500, Xtr.shape[0]), tol=1e-3, kmeans_iters=10,
+                      use_pallas=False)
+    model, t_fit = timed(lambda: fit(cfg, Xtr, ytr, task=task))
+    test_mse = mse(yte, predict_exact(model, Xte))
+    base_mse = float(jnp.mean((yte - jnp.mean(ytr)) ** 2))
+    sm = export_serving_model(model, with_bcm=False)
+    pred_exact_s, t_serve = timed(serve_batch, sm, Xte, kern, "exact")
+    model_e = fit(dataclasses.replace(cfg, early_stop_level=1), Xtr, ytr,
+                  task=task)
+    sm_e = export_serving_model(model_e, with_bcm=False)
+    pred_early_s, t_serve_e = timed(serve_batch, sm_e, Xte, kern, "early")
+    results["fit"] = {"wall_s": t_fit, "n_sv": int(len(model.sv_index)),
+                      "test_mse": test_mse, "baseline_mse": base_mse,
+                      "serve_exact_mse": mse(yte, pred_exact_s[0]),
+                      "serve_exact_wall_s": t_serve,
+                      "serve_early_mse": mse(yte, pred_early_s[0]),
+                      "serve_early_wall_s": t_serve_e}
+    results["problem"] = {"n_train": int(Xtr.shape[0]), "dual_vars":
+                          int(2 * Xtr.shape[0]), "eps": eps, "C": C,
+                          "tol": tol, "block": block, "kernel": "rbf",
+                          "gamma": 1.0, "dry_run": dry_run}
+    assert test_mse < base_mse, (test_mse, base_mse)
+    rows.append((f"svr.fit.{Xtr.shape[0]}", t_fit * 1e6,
+                 f"test_mse={test_mse:.4f};baseline={base_mse:.4f}"))
+    emit_json("BENCH_svr.json", results)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -14,7 +14,8 @@ import traceback
 
 from benchmarks.common import emit
 
-ALL = ["fig1", "fig2", "fig3", "table1", "table3", "table6", "kernels", "serve"]
+ALL = ["fig1", "fig2", "fig3", "table1", "table3", "table6", "kernels",
+       "serve", "svr"]
 
 
 def main() -> None:

@@ -21,7 +21,7 @@ python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
-    # kernel and on the conquer solver, writes BENCH_conquer.json +
-    # BENCH_serve.json
-    python -m benchmarks.run --only kernels,serve --dry-run
+    # kernel, on the conquer solver, and on the generalized SVR dual;
+    # writes BENCH_conquer.json + BENCH_serve.json + BENCH_svr.json
+    python -m benchmarks.run --only kernels,serve,svr --dry-run
 fi

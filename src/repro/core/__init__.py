@@ -27,6 +27,14 @@ from repro.core.kkmeans import (
     route,
     two_step_kernel_kmeans,
 )
+from repro.core.tasks import (
+    CSVC,
+    EpsilonSVR,
+    Task,
+    TaskDual,
+    WeightedCSVC,
+    resolve_task,
+)
 from repro.core.dcsvm import DCSVMConfig, DCSVMModel, fit, objective_value
 from repro.core.multiclass import MulticlassModel, fit_ova, labels_to_ova
 from repro.core.predict import (
@@ -40,11 +48,14 @@ from repro.core.predict import (
     decision_exact,
     decision_exact_ova,
     early_capacity,
+    mae,
+    mse,
     predict_bcm,
     predict_bcm_ova,
     predict_early,
     predict_early_ova,
     predict_exact,
     predict_exact_ova,
+    recall,
 )
 from repro.core import bounds

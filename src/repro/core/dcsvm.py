@@ -1,4 +1,10 @@
-"""DC-SVM: multilevel divide-and-conquer kernel SVM (paper Algorithm 1).
+"""DC-SVM: multilevel divide-and-conquer kernel machines (paper Algorithm 1).
+
+The driver is parameterized by a ``repro.core.tasks.Task`` reducing the
+workload (C-SVC, weighted C-SVC, epsilon-SVR) to one generalized dual
+``min 1/2 u'Qu + p'u, 0 <= u <= c`` with ``Q = (s s') ∘ K`` — clustering
+stays label-free on the base points and is expanded to the task's dual
+coordinates, so one partition serves every task (DESIGN.md §7).
 
 Level l (= levels .. 1): partition all n points into k^l balanced clusters by
 two-step kernel kmeans (sampling from the lower level's support vectors when
@@ -31,6 +37,7 @@ import jax.numpy as jnp
 from repro.core.kernels import Kernel, gram, gram_matvec, resolve_use_pallas
 from repro.core.kkmeans import Partition, two_step_kernel_kmeans
 from repro.core import solver as S
+from repro.core.tasks import CSVC, Task, TaskDual, resolve_task
 
 Array = jax.Array
 
@@ -67,16 +74,28 @@ class DCSVMConfig:
 @dataclasses.dataclass
 class DCSVMModel:
     config: DCSVMConfig
-    X: Array                       # training points (referenced by the kernel model)
-    y: Array                       # labels in {-1, +1}
-    alpha: Array                   # dual solution (exact or level-l early)
-    partition: Optional[Partition] # partition at the stopping level (early prediction)
+    X: Array                       # base training points (n, d)
+    y: Array                       # labels in {-1, +1} (SVR: real targets)
+    alpha: Array                   # dual solution over the task's dual
+                                   # coordinates (n for SVC, 2n for SVR)
+    partition: Optional[Partition] # base-point partition at the stopping
+                                   # level (early prediction / serving)
     is_early: bool
     level_stats: List[Dict[str, Any]]
+    task: Task = dataclasses.field(default_factory=CSVC)
+    beta: Optional[Array] = None   # collapsed decision coefficients (n,):
+                                   # f(x) = sum_i beta_i K(x_i, x)
+
+    @property
+    def weights(self) -> Array:
+        """Decision coefficients beta over the base points; models built
+        before the task refactor (beta=None) fall back to the hinge form
+        ``y ∘ alpha`` (identical for classification)."""
+        return self.beta if self.beta is not None else self.alpha * self.y
 
     @property
     def sv_index(self) -> np.ndarray:
-        return np.nonzero(np.asarray(self.alpha) > 0)[0]
+        return np.nonzero(np.asarray(self.weights) != 0)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -93,111 +112,113 @@ def _map_classes(fn, args, fits_budget: bool):
 
 
 def _solve_clusters(
-    cfg: DCSVMConfig, Xc: Array, yc: Array, ac: Array, mask: Array,
-    use_pallas: bool = False,
+    cfg: DCSVMConfig, Xc: Array, sc: Array, pc: Array, cc: Array, ac: Array,
+    mask: Array, use_pallas: bool = False,
 ) -> Array:
-    """Solve the independent sub-QPs of one level.  Xc: (k, nc, d),
-    mask: (k, nc); yc/ac are class-stacked (k, n_classes, nc) — binary is
-    one class row.  The Gram is label-independent, so one Gram per cluster
-    serves every class and all k * n_classes sub-QPs run in a single
-    vmapped CD call."""
+    """Solve the independent generalized sub-QPs of one level.
+    Xc: (k, nc, d), mask: (k, nc); sc/pc/cc/ac are class-stacked
+    (k, n_rows, nc) sign vectors, linear terms, per-coordinate boxes and
+    warm-start duals — binary is one row.  The Gram is task- and
+    label-independent, so one Gram per cluster serves every row and all
+    k * n_rows sub-QPs run in a single vmapped CD call."""
     k, nc, _ = Xc.shape
-    n_cls = yc.shape[1]
+    n_cls = sc.shape[1]
 
-    def one(Xi, Yi, Ai, mi):
+    def one(Xi, Si, Pi, Ci, Ai, mi):
         Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
         # zero pad rows/cols so pad slots cannot leak into real gradients
         mm = mi[:, None] & mi[None, :]
         Kz = jnp.where(mm, Ki, 0.0)
         eye_pad = jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Ki.dtype)
 
-        def per_class(yi, ai):
-            Qi = (yi[:, None] * yi[None, :]) * Kz + eye_pad
+        def per_class(si, pi, ci, ai):
+            Qi = (si[:, None] * si[None, :]) * Kz + eye_pad
             ai = jnp.where(mi, ai, 0.0)
             if cfg.block > 0 and cfg.block < nc:
                 res = S.solve_box_qp_block(
-                    Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                    block=cfg.block, sweeps=cfg.sweeps, active_mask=mi,
+                    Qi, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                    block=cfg.block, sweeps=cfg.sweeps, active_mask=mi, p=pi,
                 )
             else:
                 res = S.solve_box_qp(
-                    Qi, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                    active_mask=mi,
+                    Qi, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                    active_mask=mi, p=pi,
                 )
             return res.alpha
 
-        return jax.vmap(per_class)(Yi, Ai)                   # (n_cls, nc)
+        return jax.vmap(per_class)(Si, Pi, Ci, Ai)           # (n_cls, nc)
 
     # sequential sweep bounds peak memory at one cluster's Grams
-    return _map_classes(one, (Xc, yc, ac, mask),
+    return _map_classes(one, (Xc, sc, pc, cc, ac, mask),
                         k * n_cls * nc * nc <= cfg.gram_budget)
 
 
-def _solve_subset(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array, idx: Array,
+def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
                   use_pallas: bool = False) -> Array:
-    """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs).
+    """Refine pass: solve the sub-QP restricted to ``idx`` (level-1 SVs,
+    dual coordinates).
 
-    ``y``/``alpha`` are class-stacked (n_classes, n); the subset Gram is
-    shared across classes (per-class Q batches fall back to a sequential
-    sweep when they would blow the Gram budget)."""
-    Xs = X[idx]
+    ``alpha`` is class-stacked (n_rows, n_dual); the subset Gram is shared
+    across rows (per-row Q batches fall back to a sequential sweep when
+    they would blow the Gram budget)."""
+    Xs = td.Xd[idx]
     Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas)
-    ys, as_ = y[:, idx], alpha[:, idx]
+    ss, ps, cs, as_ = td.S[:, idx], td.P[:, idx], td.Cvec[:, idx], alpha[:, idx]
 
-    def per_class(yi, ai):
-        Qs = (yi[:, None] * yi[None, :]) * Ks
+    def per_class(si, pi, ci, ai):
+        Qs = (si[:, None] * si[None, :]) * Ks
         if cfg.block > 0:
             res = S.solve_box_qp_block(
-                Qs, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                block=min(cfg.block, Qs.shape[0]), sweeps=cfg.sweeps,
+                Qs, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                block=min(cfg.block, Qs.shape[0]), sweeps=cfg.sweeps, p=pi,
             )
         else:
-            res = S.solve_box_qp(Qs, cfg.C, alpha0=ai, tol=cfg.tol,
-                                 max_iters=cfg.max_iters)
+            res = S.solve_box_qp(Qs, ci, alpha0=ai, tol=cfg.tol,
+                                 max_iters=cfg.max_iters, p=pi)
         return res.alpha
 
-    new = _map_classes(per_class, (ys, as_),
-                       y.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget)
+    new = _map_classes(per_class, (ss, ps, cs, as_),
+                       td.S.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget)
     return alpha.at[:, idx].set(new)
 
 
-def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
+def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                 use_pallas: bool = False):
-    """Top-level (level 0) solve on the whole problem, warm-started.
+    """Top-level (level 0) solve on the whole generalized dual, warm-started.
 
-    ``y``/``alpha`` are class-stacked (n_classes, n): the dense path shares
-    one Gram across all classes and solves the class QPs in a single
-    vmapped call — unless the n_classes (n, n) Q batch would blow the Gram
-    budget, in which case classes run as a sequential sweep (one Q live at
-    a time); the matvec path vmaps the matvec solver over the class axis
-    (the per-class cache budget is split accordingly)."""
-    n = X.shape[0]
-    n_cls = y.shape[0]
+    ``alpha`` is class-stacked (n_rows, n_dual): the dense path shares one
+    Gram across all rows and solves the row QPs in a single vmapped call —
+    unless the n_rows (n, n) Q batch would blow the Gram budget, in which
+    case rows run as a sequential sweep (one Q live at a time); the matvec
+    path vmaps the matvec solver over the class axis (the per-row cache
+    budget is split accordingly)."""
+    n = td.n_dual
+    n_cls = td.S.shape[0]
     if n <= cfg.full_gram_threshold:
-        K = gram(cfg.kernel, X, X, use_pallas=use_pallas)
+        K = gram(cfg.kernel, td.Xd, td.Xd, use_pallas=use_pallas)
 
-        def per_class(yi, ai):
-            Q = (yi[:, None] * yi[None, :]) * K
+        def per_class(si, pi, ci, ai):
+            Q = (si[:, None] * si[None, :]) * K
             return S.solve_with_shrinking(
-                Q, cfg.C, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                rounds=cfg.shrink_rounds, block=cfg.block,
+                Q, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                rounds=cfg.shrink_rounds, block=cfg.block, p=pi,
             )
 
-        return _map_classes(per_class, (y, alpha),
+        return _map_classes(per_class, (td.S, td.P, td.Cvec, alpha),
                             n_cls * n * n <= cfg.gram_budget)
 
     # the (cap, n) cache buffer(s) count against the same memory budget as
     # the stacked cluster Grams
     cache_cap = min(cfg.col_cache_cap, n, cfg.gram_budget // max(n * n_cls, 1))
 
-    def per_class_mv(yi, ai):
+    def per_class_mv(si, pi, ci, ai):
         return S.solve_box_qp_matvec(
-            X, yi, cfg.kernel, cfg.C, alpha0=ai, tol=cfg.tol,
+            td.Xd, si, cfg.kernel, ci, alpha0=ai, tol=cfg.tol,
             max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
-            use_pallas=use_pallas, cache_cap=cache_cap,
+            use_pallas=use_pallas, cache_cap=cache_cap, p=pi,
         )
 
-    return jax.vmap(per_class_mv)(y, alpha)
+    return jax.vmap(per_class_mv)(td.S, td.P, td.Cvec, alpha)
 
 
 # ---------------------------------------------------------------------------
@@ -207,23 +228,31 @@ def _solve_full(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
 def _fit_algorithm1(
     cfg: DCSVMConfig,
     X: Array,
-    Y: Array,
+    td: TaskDual,
     callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
 ):
-    """Shared Algorithm-1 driver for binary and one-vs-all training.
+    """Shared Algorithm-1 driver for every task (binary / one-vs-all C-SVC,
+    weighted C-SVC, epsilon-SVR).
 
-    ``Y`` is the class-stacked (n_classes, n) +/-1 label matrix (binary =
-    one row).  The divide step is label-independent, so one partition and
-    one per-cluster Gram serve every row; all n_classes * k^l sub-QPs of a
+    ``td`` is the task's generalized dual (``repro.core.tasks``): class-
+    stacked (n_rows, n_dual) sign/linear/box vectors over the dual points
+    ``td.Xd`` (binary = one row).  The divide step is task- and label-
+    independent — kernel kmeans clusters the n *base* points, and the base
+    partition is expanded to dual coordinates through ``td.base_index``, so
+    one partition serves every task/row and SVR's two mirrored coordinates
+    of a sample always share a cluster.  All n_rows * k^l sub-QPs of a
     level run in a single vmapped CD call (``_solve_clusters``).  Returns
-    ``(alpha (n_classes, n), partition, stats, is_early)``; the callback
-    receives the class-stacked alpha.
+    ``(alpha (n_rows, n_dual), base partition, stats, is_early)``; the
+    callback receives the class-stacked dual alpha.
     """
     n = X.shape[0]
+    nd = td.n_dual
+    base_index = np.asarray(td.base_index)
     use_pallas = resolve_use_pallas(cfg.use_pallas)
     key = jax.random.PRNGKey(cfg.seed)
-    alpha = jnp.zeros(Y.shape, X.dtype)
-    sv_idx: Optional[np.ndarray] = None
+    alpha = jnp.zeros(td.S.shape, X.dtype)
+    sv_idx: Optional[np.ndarray] = None     # dual coordinates with alpha > 0
+    sv_base: Optional[np.ndarray] = None    # their (unique) base points
     stats: List[Dict[str, Any]] = []
     partition: Optional[Partition] = None
     rng = np.random.default_rng(cfg.seed)
@@ -235,30 +264,39 @@ def _fit_algorithm1(
         t0 = time.perf_counter()
         key, sub = jax.random.split(key)
         sample_idx = None
-        if cfg.adaptive and sv_idx is not None and len(sv_idx) > kl:
-            take = min(cfg.m, len(sv_idx))
-            sample_idx = rng.choice(sv_idx, size=take, replace=False)
+        if cfg.adaptive and sv_base is not None and len(sv_base) > kl:
+            take = min(cfg.m, len(sv_base))
+            sample_idx = rng.choice(sv_base, size=take, replace=False)
         partition = two_step_kernel_kmeans(
             cfg.kernel, X, kl, sub, m=cfg.m, iters=cfg.kmeans_iters,
             sample_idx=sample_idx, balanced=cfg.balanced, use_pallas=use_pallas,
         )
+        # expand the base partition to dual coordinates: SVR's mirrored
+        # (alpha_i, alpha*_i) pair inherits sample i's cluster
+        dpart = partition if nd == n else Partition.build(
+            np.asarray(partition.assign)[base_index].astype(np.int32),
+            kl, partition.model)
         t_cluster = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        Xc = partition.gather(X)
-        mask = jnp.asarray(partition.mask)
-        # (k, nc, n_classes) gathers -> (k, n_classes, nc) class-stacked batch
-        Yc = jnp.moveaxis(partition.gather(Y.T), -1, 1)
-        ac = jnp.moveaxis(partition.gather(alpha.T), -1, 1)
+        Xc = dpart.gather(td.Xd)
+        mask = jnp.asarray(dpart.mask)
+        # (k, nc, n_rows) gathers -> (k, n_rows, nc) class-stacked batch
+        sc = jnp.moveaxis(dpart.gather(td.S.T), -1, 1)
+        pc = jnp.moveaxis(dpart.gather(td.P.T), -1, 1)
+        cc = jnp.moveaxis(dpart.gather(td.Cvec.T), -1, 1)
+        ac = jnp.moveaxis(dpart.gather(alpha.T), -1, 1)
         ac = jnp.where(mask[:, None, :], ac, 0.0)
-        ac = _solve_clusters(cfg, Xc, Yc, ac, mask, use_pallas=use_pallas)
-        alpha = partition.scatter(jnp.moveaxis(ac, 1, -1), n).T
+        ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
+                             use_pallas=use_pallas)
+        alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
 
         sv_idx = np.nonzero(np.any(np.asarray(alpha) > 0, axis=0))[0]
+        sv_base = np.unique(base_index[sv_idx])
         st = dict(level=l, clusters=kl, cluster_time=t_cluster, train_time=t_train,
-                  n_sv=int(len(sv_idx)))
+                  n_sv=int(len(sv_base)))
         stats.append(st)
         if callback is not None:
             callback(l, alpha, st)
@@ -267,15 +305,17 @@ def _fit_algorithm1(
 
     # ---- level 0: refine + full solve -----------------------------------
     t0 = time.perf_counter()
-    if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < n:
-        alpha = _solve_subset(cfg, X, Y, alpha, jnp.asarray(sv_idx),
+    if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < nd:
+        alpha = _solve_subset(cfg, td, alpha, jnp.asarray(sv_idx),
                               use_pallas=use_pallas)
-    res = _solve_full(cfg, X, Y, alpha, use_pallas=use_pallas)
+    res = _solve_full(cfg, td, alpha, use_pallas=use_pallas)
     alpha = res.alpha
     alpha.block_until_ready()
+    sv_base0 = np.unique(
+        base_index[np.any(np.asarray(alpha) > 0, axis=0)])
     st = dict(level=0, clusters=1, cluster_time=0.0,
               train_time=time.perf_counter() - t0,
-              n_sv=int(np.sum(np.any(np.asarray(alpha) > 0, axis=0))),
+              n_sv=int(len(sv_base0)),
               iters=int(np.sum(np.asarray(res.iters))),
               pg_max=float(np.max(np.asarray(res.pg_max))))
     if res.cache_hits is not None:
@@ -295,14 +335,25 @@ def fit(
     X: Array,
     y: Array,
     callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
+    task: Optional[Task] = None,
 ) -> DCSVMModel:
-    """Train DC-SVM.  ``callback(level, alpha, stats)`` fires after each level
-    (level 0 = final solve) — benchmarks use it for time/objective curves."""
+    """Train DC-SVM on any supported task (default: C-SVC on +/-1 labels).
+
+    ``task`` selects the workload (``tasks.CSVC`` / ``tasks.WeightedCSVC`` /
+    ``tasks.EpsilonSVR``); for regression ``y`` holds real targets.
+    ``callback(level, alpha, stats)`` fires after each level (level 0 =
+    final solve) — benchmarks use it for time/objective curves; ``alpha``
+    is the task's dual vector (2n coordinates for SVR).
+    """
     X = jnp.asarray(X)
     y = jnp.asarray(y, X.dtype)
+    task = resolve_task(task)
+    td = task.build(X, y[None, :], cfg.C)
     cb = None if callback is None else (lambda l, a, st: callback(l, a[0], st))
-    alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, y[None, :], cb)
-    return DCSVMModel(cfg, X, y, alpha[0], partition, is_early, stats)
+    alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, td, cb)
+    beta = td.collapse(alpha)[0]
+    return DCSVMModel(cfg, X, y, alpha[0], partition, is_early, stats,
+                      task=task, beta=beta)
 
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.dcsvm import DCSVMConfig, DCSVMModel, _fit_algorithm1
 from repro.core.kkmeans import Partition
+from repro.core.tasks import CSVC
 
 Array = jax.Array
 
@@ -96,6 +97,7 @@ def fit_ova(
     """
     X = jnp.asarray(X)
     classes, Y = labels_to_ova(y, n_classes, X.dtype)
-    alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, Y, callback)
+    td = CSVC().build(X, Y, cfg.C)
+    alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, td, callback)
     return MulticlassModel(cfg, X, classes, Y, alpha, partition, is_early,
                            stats)

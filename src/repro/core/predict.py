@@ -1,6 +1,13 @@
 """Prediction strategies for DC-SVM models (paper Sec. 4, Table 1).
 
-* ``decision_exact``  — f(x) = sum_i alpha_i y_i K(x, x_i); used with the
+All strategies are task-uniform: they score with the collapsed decision
+coefficients ``beta`` (``model.weights``) over the base points —
+``beta = y ∘ alpha`` for classification, ``beta = alpha - alpha*`` for
+epsilon-SVR — so one code path serves C-SVC, weighted C-SVC, and
+regression.  ``predict_*`` applies ``sign`` for classification and returns
+the raw decision value for regression tasks.
+
+* ``decision_exact``  — f(x) = sum_i beta_i K(x, x_i); used with the
   final alpha (exact model) or with a level-l alpha (paper eq. 10, the
   "naive" early strategy).
 * ``decision_early``  — paper eq. 11: route x to its nearest kernel-kmeans
@@ -134,19 +141,25 @@ def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, W: Array,
     return out
 
 
+def _is_regression(model) -> bool:
+    task = getattr(model, "task", None)
+    return bool(task is not None and task.is_regression)
+
+
 def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
                    use_pallas: Optional[bool] = None) -> Array:
-    """f(x) over all support vectors (eq. 10 when alpha is a level-l
-    solution).  Pallas path: one streaming ``kernel_matvec`` call — the
-    (nq, |S|) kernel block never hits HBM; otherwise a single fused scan
-    over SV chunks."""
+    """f(x) = sum_i beta_i K(x_i, x) over all support vectors (eq. 10 when
+    alpha is a level-l solution); task-uniform through ``model.weights``.
+    Pallas path: one streaming ``kernel_matvec`` call — the (nq, |S|)
+    kernel block never hits HBM; otherwise a single fused scan over SV
+    chunks."""
     sv = model.sv_index
     if len(sv) == 0:
         return jnp.zeros(Xq.shape[0], Xq.dtype)
     if use_pallas is None:
         use_pallas = model.config.use_pallas
     Xs = model.X[jnp.asarray(sv)]
-    w = (model.alpha * model.y)[jnp.asarray(sv)]
+    w = model.weights[jnp.asarray(sv)]
     kern = model.config.kernel
     if resolve_use_pallas(use_pallas):
         from repro.kernels import ops as kops
@@ -156,7 +169,10 @@ def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
 
 
 def predict_exact(model: DCSVMModel, Xq: Array) -> Array:
-    return jnp.sign(decision_exact(model, Xq))
+    """Class labels for classification tasks; raw regression values for
+    epsilon-SVR (the decision function IS the prediction)."""
+    d = decision_exact(model, Xq)
+    return d if _is_regression(model) else jnp.sign(d)
 
 
 def _early_blocks(model, w: Array):
@@ -200,14 +216,15 @@ def decision_early(model: DCSVMModel, Xq: Array,
     if use_pallas is None:
         use_pallas = model.config.use_pallas
     use_pallas = resolve_use_pallas(use_pallas)
-    Xm, wm = _early_blocks(model, model.alpha * model.y)
+    Xm, wm = _early_blocks(model, model.weights)
     cap = early_capacity(Xq.shape[0], part.k)
     return _early_program(kern, Xq, part.model, Xm, wm, cap,
                           use_pallas=use_pallas)[:, 0]
 
 
 def predict_early(model: DCSVMModel, Xq: Array) -> Array:
-    return jnp.sign(decision_early(model, Xq))
+    d = decision_early(model, Xq)
+    return d if _is_regression(model) else jnp.sign(d)
 
 
 def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
@@ -222,8 +239,8 @@ def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
     absorbed into the normalization, which only rescales decisions and does
     not change the sign/accuracy).
     """
-    W = (model.alpha * model.y)[:, None]
-    active = np.asarray(model.alpha) > 0
+    W = model.weights[:, None]
+    active = np.asarray(model.weights) != 0
     return _bcm_scores(model, Xq, W, active, noise, max_sv_per_cluster)[:, 0]
 
 
@@ -259,11 +276,30 @@ def _bcm_scores(model, Xq: Array, W: Array, active: np.ndarray, noise: float,
 
 
 def predict_bcm(model: DCSVMModel, Xq: Array) -> Array:
-    return jnp.sign(decision_bcm(model, Xq))
+    d = decision_bcm(model, Xq)
+    return d if _is_regression(model) else jnp.sign(d)
 
 
 def accuracy(y_true: Array, y_pred: Array) -> float:
     return float(jnp.mean((jnp.sign(y_true) == jnp.sign(y_pred)).astype(jnp.float32)))
+
+
+def mse(y_true: Array, y_pred: Array) -> float:
+    """Mean squared error (regression tasks)."""
+    return float(jnp.mean((jnp.asarray(y_true) - jnp.asarray(y_pred)) ** 2))
+
+
+def mae(y_true: Array, y_pred: Array) -> float:
+    """Mean absolute error (regression tasks)."""
+    return float(jnp.mean(jnp.abs(jnp.asarray(y_true) - jnp.asarray(y_pred))))
+
+
+def recall(y_true: Array, y_pred: Array, label: float = 1.0) -> float:
+    """Recall of one class (minority-class metric for weighted C-SVC)."""
+    t = np.asarray(y_true) == label
+    if not t.any():
+        return float("nan")
+    return float(np.mean(np.asarray(y_pred)[t] == label))
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,17 @@
-"""Box-constrained QP solvers for the SVM dual (no bias term).
+"""Box-constrained QP solvers for the generalized kernel-machine dual.
 
-    min_a  f(a) = 1/2 a' Q a - e' a     s.t.  0 <= a <= C
+    min_u  f(u) = 1/2 u' Q u + p' u     s.t.  0 <= u <= c
+
+with per-coordinate linear term ``p`` and per-coordinate upper bound ``c``
+(both broadcast from scalars).  The classic C-SVC hinge dual is the default
+instantiation ``p = -1, c = C`` — every task in ``repro.core.tasks`` (C-SVC,
+weighted C-SVC, epsilon-SVR) reduces to this one problem with
+``Q = (s s') ∘ K`` for a task-specific sign vector ``s``.
 
 Because the paper drops the bias term there is no equality constraint, so
 single-coordinate updates are exactly solvable in closed form:
 
-    a_i <- clip(a_i - g_i / Q_ii, 0, C),      g = Q a - e.
+    u_i <- clip(u_i - g_i / Q_ii, 0, c_i),      g = Q u + p.
 
 Solvers (all pure JAX, `lax` control flow, vmap-able over a leading batch of
 independent subproblems — the divide step solves all clusters of one level in
@@ -39,27 +45,37 @@ from repro.core.kernels import Kernel
 Array = jax.Array
 
 
+def _broadcast(v, n: int, dtype) -> Array:
+    """Scalar-or-vector parameter -> (n,) vector (p and c are per-coordinate
+    in the generalized dual; the scalar hinge defaults broadcast)."""
+    return jnp.broadcast_to(jnp.asarray(v, dtype), (n,))
+
+
 class SolveResult(NamedTuple):
     alpha: Array
-    grad: Array          # g = Q a - e at the returned alpha
+    grad: Array          # g = Q a + p at the returned alpha
     iters: Array         # number of outer iterations executed
     pg_max: Array        # final max |projected gradient|
     cache_hits: Optional[Array] = None    # column-cache rows served (matvec solver)
     cache_misses: Optional[Array] = None  # column-cache rows recomputed
 
 
-def objective(alpha: Array, grad: Array) -> Array:
-    """f(a) = 1/2 a'Qa - e'a evaluated from the maintained gradient.
+def objective(alpha: Array, grad: Array, p=-1.0) -> Array:
+    """f(u) = 1/2 u'Qu + p'u evaluated from the maintained gradient.
 
-    With g = Qa - e we have a'g = a'Qa - e'a, hence
+    With g = Qu + p we have u'g = u'Qu + p'u, hence
 
-        f(a) = 1/2 (a'g + e'a) - e'a = 1/2 a'g - 1/2 e'a.
+        f(u) = 1/2 (u'g - p'u) + p'u = 1/2 u'g + 1/2 p'u.
+
+    The default ``p = -1`` recovers the hinge form 1/2 a'g - 1/2 e'a.
     """
-    return 0.5 * jnp.vdot(alpha, grad) - 0.5 * jnp.sum(alpha)
+    pu = jnp.sum(jnp.asarray(p, alpha.dtype) * alpha)
+    return 0.5 * jnp.vdot(alpha, grad) + 0.5 * pu
 
 
-def proj_grad(alpha: Array, grad: Array, C: float) -> Array:
-    """Projected gradient of the box QP (the KKT residual)."""
+def proj_grad(alpha: Array, grad: Array, C) -> Array:
+    """Projected gradient of the box QP (the KKT residual).  ``C`` is the
+    upper bound, scalar or per-coordinate."""
     at_lo = alpha <= 0.0
     at_hi = alpha >= C
     pg = jnp.where(at_lo, jnp.minimum(grad, 0.0), grad)
@@ -67,8 +83,8 @@ def proj_grad(alpha: Array, grad: Array, C: float) -> Array:
     return pg
 
 
-def kkt_residual(Q: Array, alpha: Array, C: float) -> Array:
-    g = Q @ alpha - 1.0
+def kkt_residual(Q: Array, alpha: Array, C, p=-1.0) -> Array:
+    g = Q @ alpha + jnp.asarray(p, alpha.dtype)
     return jnp.max(jnp.abs(proj_grad(alpha, g, C)))
 
 
@@ -79,14 +95,17 @@ def kkt_residual(Q: Array, alpha: Array, C: float) -> Array:
 @partial(jax.jit, static_argnames=("max_iters",))
 def solve_box_qp(
     Q: Array,
-    C: float,
+    C,
     alpha0: Optional[Array] = None,
     tol: float = 1e-3,
     max_iters: int = 10_000,
     active_mask: Optional[Array] = None,
+    p=-1.0,
 ) -> SolveResult:
     """Greedy coordinate descent on a dense Q. vmap over leading dims is fine.
 
+    ``C`` (upper bound) and ``p`` (linear term) are scalar or per-coordinate
+    vectors; the defaults ``C`` scalar, ``p = -1`` are the C-SVC hinge dual.
     ``active_mask`` freezes coordinates (shrinking): masked-out coordinates
     are never selected (their pg is treated as 0 for selection AND stopping,
     matching LIBSVM's shrunk working set).
@@ -94,7 +113,9 @@ def solve_box_qp(
     n = Q.shape[0]
     diag = jnp.maximum(jnp.diagonal(Q), 1e-12)
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
-    g = Q @ alpha - 1.0
+    cvec = _broadcast(C, n, Q.dtype)
+    pvec = _broadcast(p, n, Q.dtype)
+    g = Q @ alpha + pvec
     mask = jnp.ones(n, bool) if active_mask is None else active_mask
 
     def cond(state):
@@ -103,9 +124,9 @@ def solve_box_qp(
 
     def body(state):
         alpha, g, it, _ = state
-        pg = jnp.where(mask, proj_grad(alpha, g, C), 0.0)
+        pg = jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)
         i = jnp.argmax(jnp.abs(pg))
-        new_ai = jnp.clip(alpha[i] - g[i] / diag[i], 0.0, C)
+        new_ai = jnp.clip(alpha[i] - g[i] / diag[i], 0.0, cvec[i])
         delta = new_ai - alpha[i]
         alpha = alpha.at[i].set(new_ai)
         g = g + delta * Q[:, i]
@@ -113,7 +134,7 @@ def solve_box_qp(
         return alpha, g, it + 1, jnp.max(jnp.abs(pg))
 
     # one priming evaluation so the loop can exit immediately at the optimum
-    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, C), 0.0)))
+    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)))
     alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
     return SolveResult(alpha, g, iters, pg_max)
 
@@ -122,16 +143,18 @@ def solve_box_qp(
 # Block greedy CD (beyond-paper batched variant)
 # ---------------------------------------------------------------------------
 
-def _solve_small_qp(Qbb: Array, gb: Array, ab: Array, C: float, sweeps: int) -> Array:
+def _solve_small_qp(Qbb: Array, gb: Array, ab: Array, cb, sweeps: int) -> Array:
     """Cyclic CD on the BxB subproblem. g_b is the gradient at entry; we
-    maintain it locally. Returns the new a_b."""
+    maintain it locally.  ``cb`` is the upper bound, scalar or the (B,)
+    slice of the per-coordinate box.  Returns the new a_b."""
     B = Qbb.shape[0]
+    cb = _broadcast(cb, B, Qbb.dtype)
     diag = jnp.maximum(jnp.diagonal(Qbb), 1e-12)
 
     def body(t, carry):
         a, g = carry
         j = t % B
-        new_aj = jnp.clip(a[j] - g[j] / diag[j], 0.0, C)
+        new_aj = jnp.clip(a[j] - g[j] / diag[j], 0.0, cb[j])
         delta = new_aj - a[j]
         a = a.at[j].set(new_aj)
         g = g + delta * Qbb[:, j]
@@ -144,23 +167,26 @@ def _solve_small_qp(Qbb: Array, gb: Array, ab: Array, C: float, sweeps: int) -> 
 @partial(jax.jit, static_argnames=("block", "sweeps", "max_iters"))
 def solve_box_qp_block(
     Q: Array,
-    C: float,
+    C,
     alpha0: Optional[Array] = None,
     tol: float = 1e-3,
     max_iters: int = 2_000,
     block: int = 32,
     sweeps: int = 4,
     active_mask: Optional[Array] = None,
+    p=-1.0,
 ) -> SolveResult:
     """Top-B greedy block CD: each outer iteration moves B coordinates.
 
     Selection by |projected gradient| (Gauss-Southwell-B). The rank-B gradient
     update `g += Q[:, idx] @ delta` is a skinny matmul — the MXU-friendly
-    reshaping of the paper's one-at-a-time CD.
+    reshaping of the paper's one-at-a-time CD.  ``C``/``p`` may be
+    per-coordinate vectors (generalized dual).
     """
     n = Q.shape[0]
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
-    g = Q @ alpha - 1.0
+    cvec = _broadcast(C, n, Q.dtype)
+    g = Q @ alpha + _broadcast(p, n, Q.dtype)
     mask = jnp.ones(n, bool) if active_mask is None else active_mask
 
     def cond(state):
@@ -169,18 +195,18 @@ def solve_box_qp_block(
 
     def body(state):
         alpha, g, it, _ = state
-        pg = jnp.where(mask, proj_grad(alpha, g, C), 0.0)
+        pg = jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)
         scores = jnp.abs(pg)
         _, idx = lax.top_k(scores, block)
         Qbb = Q[idx][:, idx]
         ab, gb = alpha[idx], g[idx]
-        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
+        new_ab = _solve_small_qp(Qbb, gb, ab, cvec[idx], sweeps)
         delta = new_ab - ab
         alpha = alpha.at[idx].set(new_ab)
         g = g + Q[:, idx] @ delta
         return alpha, g, it + 1, jnp.max(scores)
 
-    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, C), 0.0)))
+    pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)))
     alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
     return SolveResult(alpha, g, iters, pg_max)
 
@@ -195,7 +221,7 @@ def solve_box_qp_matvec(
     X: Array,
     y: Array,
     kernel: Kernel,
-    C: float,
+    C,
     alpha0: Optional[Array] = None,
     tol: float = 1e-3,
     max_iters: int = 500,
@@ -204,8 +230,14 @@ def solve_box_qp_matvec(
     grad_chunks: int = 16,
     use_pallas: bool = False,
     cache_cap: int = 0,
+    p=-1.0,
 ) -> SolveResult:
     """Block greedy CD where Q columns are recomputed from (X, y) per step.
+
+    ``y`` is the generalized sign vector ``s`` of Q = (s s') ∘ K — class
+    labels for C-SVC, the (+1, -1) mirror signs for epsilon-SVR's stacked
+    (alpha, alpha*) coordinates.  ``C`` and ``p`` may be per-coordinate
+    (weighted classes / the SVR linear term eps -/+ y).
 
     Never materializes Q.  Three gradient-update paths:
 
@@ -223,8 +255,9 @@ def solve_box_qp_matvec(
     """
     n = X.shape[0]
     alpha = jnp.zeros(n, X.dtype) if alpha0 is None else alpha0
+    cvec = _broadcast(C, n, X.dtype)
 
-    # initial gradient g = Q @ alpha - 1: streaming Pallas matvec on the
+    # initial gradient g = Q @ alpha + p: streaming Pallas matvec on the
     # fused path, chunked lax.map otherwise
     from repro.core.kernels import gram_matvec
 
@@ -239,17 +272,17 @@ def solve_box_qp_matvec(
         return y * gram_matvec(kernel, X, y * v, num_chunks=grad_chunks,
                                use_pallas=use_pallas)
 
-    g = (q_matvec(alpha) - 1.0).astype(acc)
+    g = (q_matvec(alpha) + _broadcast(p, n, X.dtype)).astype(acc)
 
     def select(alpha, g):
-        pg = proj_grad(alpha, g, C)
+        pg = proj_grad(alpha, g, cvec)
         scores = jnp.abs(pg)
         _, idx = lax.top_k(scores, block)
         return idx, jnp.max(scores)
 
     def solve_block(Qbb, alpha, g, idx):
         ab, gb = alpha[idx], g[idx]
-        new_ab = _solve_small_qp(Qbb, gb, ab, C, sweeps)
+        new_ab = _solve_small_qp(Qbb, gb, ab, cvec[idx], sweeps)
         return new_ab, new_ab - ab
 
     def q_rows(idx):
@@ -284,7 +317,7 @@ def solve_box_qp_matvec(
             _, _, _, it, pg_max = state
             return (pg_max > tol) & (it < max_iters)
 
-        pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, C)))
+        pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, cvec)))
         alpha, g, cache, iters, pg_max = lax.while_loop(
             cond, body, (alpha, g, colcache.init(cap, n, dtype=acc), 0, pg0))
         return SolveResult(alpha, g, iters, pg_max, cache.hits, cache.misses)
@@ -314,7 +347,7 @@ def solve_box_qp_matvec(
         _, _, it, pg_max = state
         return (pg_max > tol) & (it < max_iters)
 
-    pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, C)))
+    pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, cvec)))
     alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
     return SolveResult(alpha, g, iters, pg_max)
 
@@ -325,13 +358,14 @@ def solve_box_qp_matvec(
 
 def solve_with_shrinking(
     Q: Array,
-    C: float,
+    C,
     alpha0: Optional[Array] = None,
     tol: float = 1e-3,
     max_iters: int = 10_000,
     rounds: int = 3,
     shrink_margin: float = 10.0,
     block: int = 0,
+    p=-1.0,
 ) -> SolveResult:
     """Outer shrinking rounds around the CD solver.
 
@@ -339,6 +373,7 @@ def solve_with_shrinking(
     bound with |g| > shrink_margin * tol are removed from the active set for
     the next round; the final round always re-activates everything so the
     returned KKT residual is on the FULL problem (LIBSVM's un-shrink check).
+    ``C``/``p`` may be per-coordinate vectors (generalized dual).
 
     ``pg_max`` is recomputed at the returned alpha (one Q @ alpha matvec):
     the inner solvers report the stopping value from the last *pre-update*
@@ -346,6 +381,7 @@ def solve_with_shrinking(
     """
     n = Q.shape[0]
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
+    cvec = _broadcast(C, n, Q.dtype)
     mask = jnp.ones(n, bool)
     solver = solve_box_qp if block <= 0 else partial(solve_box_qp_block, block=block)
     res = None
@@ -355,11 +391,12 @@ def solve_with_shrinking(
     for r in range(rounds):
         final = r == rounds - 1
         m = jnp.ones(n, bool) if final else mask
-        res = solver(Q, C, alpha0=alpha, tol=tol, max_iters=max_iters, active_mask=m)
+        res = solver(Q, C, alpha0=alpha, tol=tol, max_iters=max_iters,
+                     active_mask=m, p=p)
         alpha, g = res.alpha, res.grad
         total_iters = total_iters + res.iters
         strongly_lo = (alpha <= 0.0) & (g > shrink_margin * tol)
-        strongly_hi = (alpha >= C) & (g < -shrink_margin * tol)
+        strongly_hi = (alpha >= cvec) & (g < -shrink_margin * tol)
         mask = ~(strongly_lo | strongly_hi)
-    pg_full = kkt_residual(Q, res.alpha, C)
+    pg_full = kkt_residual(Q, res.alpha, cvec, p=p)
     return SolveResult(res.alpha, res.grad, total_iters, pg_full)

@@ -1,0 +1,174 @@
+"""Task abstraction: one generalized dual for every supported kernel machine.
+
+Every task reduces to the box-constrained QP the solvers in
+``repro.core.solver`` operate on,
+
+    min_u  1/2 u' Q u + p' u     s.t.  0 <= u <= c,      Q = (s s') ∘ K~
+
+where ``K~`` is the kernel matrix over the task's *dual points* (the
+training points, possibly duplicated) and ``s`` is a task-specific sign
+vector.  The reduction table:
+
+    task          dual points     s                 p             c
+    ------------  --------------  ----------------  ------------  -------------
+    CSVC          X        (n)    y                 -1            C
+    WeightedCSVC  X        (n)    y                 -1            C * w_{y_i}
+    EpsilonSVR    [X; X]   (2n)   (+1 ... -1 ...)   eps -/+ y     C
+
+For epsilon-SVR the 2n-variable ``u = (alpha, alpha*)`` pair collapses back
+to n decision coefficients ``beta_i = alpha_i - alpha*_i`` — in general
+``beta = scatter-add of (s ∘ u) over base_index`` — and the decision
+function for EVERY task is
+
+    f(x) = sum_i beta_i K(x_i, x)
+
+(for classification ``beta = y ∘ alpha``), so prediction and serving are
+task-uniform: they only ever see base points and collapsed coefficients.
+
+The divide step stays label-free: DC-SVM clusters the n *base* points and
+``TaskDual.base_index`` expands the base partition to dual coordinates, so
+one partition serves every task and the two mirrored coordinates of an SVR
+sample always land in the same cluster (required for the per-cluster
+sub-QPs to see both halves of each pair — see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class TaskDual(NamedTuple):
+    """One task instance reduced to the generalized dual, class-stacked.
+
+    ``Xd``: (n_dual, d) dual points; ``S``/``P``/``Cvec``: (n_rows, n_dual)
+    sign vector, linear term, and per-coordinate upper bound — ``n_rows`` is
+    the leading class axis shared with the OVA machinery (binary and
+    regression use one row).  ``base_index``: (n_dual,) original sample per
+    dual coordinate (identity except for SVR's duplicated rows).
+    """
+
+    Xd: Array
+    S: Array
+    P: Array
+    Cvec: Array
+    base_index: np.ndarray
+
+    @property
+    def n_dual(self) -> int:
+        return self.Xd.shape[0]
+
+    @property
+    def n_base(self) -> int:
+        return int(self.base_index.max()) + 1 if self.base_index.size else 0
+
+    def collapse(self, alpha: Array) -> Array:
+        """(n_rows, n_dual) dual solution -> (n_rows, n_base) decision
+        coefficients ``beta = scatter-add of s ∘ u over base_index``."""
+        n = self.n_base
+        out = jnp.zeros(alpha.shape[:-1] + (n,), alpha.dtype)
+        return out.at[..., jnp.asarray(self.base_index)].add(self.S * alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """Base task: hyper-parameters + the reduction to the generalized dual."""
+
+    name = "base"
+    is_regression = False
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        """Reduce (X, class-stacked Y, cost C) to the generalized dual."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class CSVC(Task):
+    """Standard C-SVC hinge dual — exactly the pre-task solver behavior:
+    ``p = -1, s = y, c = C`` (class-stacked Y for one-vs-all)."""
+
+    name = "svc"
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        Y = jnp.asarray(Y)
+        return TaskDual(
+            Xd=X,
+            S=Y,
+            P=jnp.full_like(Y, -1.0),
+            Cvec=jnp.full_like(Y, C),
+            base_index=np.arange(Y.shape[-1]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedCSVC(Task):
+    """Cost-sensitive C-SVC for imbalanced data: per-class box
+    ``c_i = C * w_{y_i}`` (optionally refined by a per-sample weight vector).
+    Upweighting the minority class raises the price of its margin
+    violations, recovering recall the plain hinge trades away."""
+
+    w_pos: float = 1.0
+    w_neg: float = 1.0
+    # optional per-sample multiplier on top of the class weights; anything
+    # array-like of shape (n,) (instances carrying one are not hashable)
+    sample_weight: Optional[object] = None
+
+    name = "weighted-svc"
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        Y = jnp.asarray(Y)
+        w = jnp.where(Y > 0, self.w_pos, self.w_neg)
+        if self.sample_weight is not None:
+            w = w * jnp.asarray(self.sample_weight, Y.dtype)[None, :]
+        return TaskDual(
+            Xd=X,
+            S=Y,
+            P=jnp.full_like(Y, -1.0),
+            Cvec=C * w,
+            base_index=np.arange(Y.shape[-1]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsilonSVR(Task):
+    """epsilon-insensitive support vector regression, 2n-variable dual.
+
+    With ``u = (alpha, alpha*)`` stacked over duplicated rows of X:
+
+        min 1/2 (a-a*)' K (a-a*) + eps * sum(a+a*) - y'(a-a*)
+        =   min 1/2 u' ((s s') ∘ K~) u + p' u,   0 <= u <= C
+
+    with ``s = (+1..., -1...)`` and ``p = (eps - y, eps + y)``.  At any
+    optimum the pair is complementary (min(a_i, a*_i) = 0: the two
+    coordinate gradients sum to 2*eps > 0), so the collapsed
+    ``beta_i = a_i - a*_i`` is the unique decision coefficient vector and
+    ``|f(x_i) - y_i| < eps  =>  beta_i = 0`` (the eps-tube property).
+    """
+
+    eps: float = 0.1
+
+    name = "svr"
+    is_regression = True
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        y = jnp.asarray(Y)
+        y = y[0] if y.ndim == 2 else y
+        n = y.shape[0]
+        ones = jnp.ones(n, X.dtype)
+        return TaskDual(
+            Xd=jnp.concatenate([X, X], axis=0),
+            S=jnp.concatenate([ones, -ones])[None, :],
+            P=jnp.concatenate([self.eps - y, self.eps + y])[None, :].astype(X.dtype),
+            Cvec=jnp.full((1, 2 * n), C, X.dtype),
+            base_index=np.concatenate([np.arange(n), np.arange(n)]),
+        )
+
+
+def resolve_task(task: Optional[Task]) -> Task:
+    """``None`` -> the default C-SVC hinge task."""
+    return CSVC() if task is None else task

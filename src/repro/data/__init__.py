@@ -1,10 +1,14 @@
 from repro.data.synthetic import (
     gaussian_mixture,
+    gaussian_mixture_imbalanced,
     gaussian_mixture_multiclass,
     checkerboard,
     two_spirals,
     covtype_like,
     webspam_like,
+    sinc1d,
+    friedman1,
     train_test_split,
+    stratified_split,
 )
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig

@@ -64,6 +64,67 @@ def gaussian_mixture_multiclass(
     return X, y.astype(jnp.int32)
 
 
+def gaussian_mixture_imbalanced(
+    key: Array,
+    n: int,
+    d: int = 10,
+    modes_per_class: int = 4,
+    spread: float = 0.15,
+    pos_frac: float = 0.05,
+) -> Tuple[Array, Array]:
+    """Imbalanced binary mixture: the +1 class is a ~``pos_frac`` minority
+    (default ~1:20) drawn from its own Gaussian modes.  The cost-sensitive
+    ``WeightedCSVC`` workload: an unweighted hinge happily sacrifices
+    minority recall here; ``c_i = C * w_{y_i}`` buys it back.  Split with
+    ``stratified_split`` so tiny test minorities stay represented.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    centers = jax.random.uniform(k1, (2 * modes_per_class, d))
+    is_pos = jax.random.bernoulli(k2, pos_frac, (n,))
+    mode = jax.random.randint(k3, (n,), 0, modes_per_class)
+    mode = jnp.where(is_pos, mode, mode + modes_per_class)
+    X = centers[mode] + spread * jax.random.normal(k4, (n, d))
+    y = jnp.where(is_pos, 1.0, -1.0)
+    X = jnp.clip(X, 0.0, 1.0).astype(jnp.float32)
+    return X, y.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Regression generators (the epsilon-SVR workload)
+# ---------------------------------------------------------------------------
+
+def sinc1d(key: Array, n: int, noise: float = 0.05,
+           x_range: Tuple[float, float] = (-3.0, 3.0)) -> Tuple[Array, Array]:
+    """1-D sinc regression y = sin(pi x)/(pi x) + noise — the classic SVR
+    smoke test: smooth, bounded targets, visually checkable fit."""
+    k1, k2 = jax.random.split(key)
+    X = jax.random.uniform(k1, (n, 1), minval=x_range[0], maxval=x_range[1])
+    y = jnp.sinc(X[:, 0]) + noise * jax.random.normal(k2, (n,))
+    return X.astype(jnp.float32), y.astype(jnp.float32)
+
+
+def friedman1(key: Array, n: int, d: int = 10, noise: float = 0.1,
+              standardize: bool = True) -> Tuple[Array, Array]:
+    """Friedman #1 (Friedman, 1991): x ~ U[0,1]^d (d >= 5; coordinates past
+    the fifth are irrelevant distractors) and
+
+        y = 10 sin(pi x1 x2) + 20 (x3 - 1/2)^2 + 10 x4 + 5 x5 + noise.
+
+    ``standardize`` rescales y to zero mean / unit variance (empirically,
+    per draw) so one epsilon/C setting works across sizes.
+    """
+    if d < 5:
+        raise ValueError(f"friedman1 needs d >= 5, got {d}")
+    k1, k2 = jax.random.split(key)
+    X = jax.random.uniform(k1, (n, d))
+    y = (10.0 * jnp.sin(jnp.pi * X[:, 0] * X[:, 1])
+         + 20.0 * (X[:, 2] - 0.5) ** 2 + 10.0 * X[:, 3] + 5.0 * X[:, 4])
+    y = y + noise * jax.random.normal(k2, (n,))
+    if standardize:
+        y = (y - jnp.mean(y)) / jnp.maximum(jnp.std(y), 1e-8)
+    return X.astype(jnp.float32), y.astype(jnp.float32)
+
+
 def checkerboard(key: Array, n: int, cells: int = 4, noise: float = 0.02) -> Tuple[Array, Array]:
     """2-D checkerboard — the classic RBF-SVM stress test (no linear model
     can exceed chance; local structure is everything)."""
@@ -109,4 +170,29 @@ def train_test_split(key: Array, X: Array, y: Array, test_frac: float = 0.2):
     perm = jax.random.permutation(key, n)
     nt = int(n * (1.0 - test_frac))
     tr, te = perm[:nt], perm[nt:]
+    return X[tr], y[tr], X[te], y[te]
+
+
+def stratified_split(key: Array, X: Array, y: Array, test_frac: float = 0.2):
+    """Per-class train/test split: each label keeps ~``test_frac`` of its
+    points in the test set.  Essential for heavily imbalanced data
+    (``gaussian_mixture_imbalanced``), where a plain random split can leave
+    the minority class absent from one side."""
+    y_np = np.asarray(y)
+    key_sh_tr, key_sh_te, key_cls = jax.random.split(key, 3)
+    tr_parts, te_parts = [], []
+    for i, label in enumerate(np.unique(y_np)):
+        idx = np.nonzero(y_np == label)[0]
+        perm = np.asarray(jax.random.permutation(
+            jax.random.fold_in(key_cls, i), len(idx)))
+        nt = max(1, int(len(idx) * (1.0 - test_frac)))
+        tr_parts.append(idx[perm[:nt]])
+        te_parts.append(idx[perm[nt:]])
+    tr = np.concatenate(tr_parts)
+    te = np.concatenate(te_parts)
+    # reshuffle so class blocks don't stay contiguous
+    tr = tr[np.asarray(jax.random.permutation(key_sh_tr, len(tr)))]
+    te = te[np.asarray(jax.random.permutation(key_sh_te, len(te)))]
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
     return X[tr], y[tr], X[te], y[te]

@@ -6,7 +6,10 @@ recomputed on the fly.  This kernel fuses, per X tile:
     K_tile = rbf(Xt, Xb)            (bm, B)  MXU + VPU exp
     g_out  = y_t * (K_tile @ w)     (bm, 1)  skinny MXU matmul
 
-where w = y_b * delta.  The (n, B) column block never hits HBM — only the
+where w = y_b * delta and y is the generalized dual's sign vector s
+(labels for C-SVC, mixed +1/-1 mirror signs for the epsilon-SVR stacked
+dual — signs are data, not structure, so one kernel serves every task).
+The (n, B) column block never hits HBM — only the
 (n,) gradient delta does.  This is the recompute-in-VMEM replacement for
 LIBSVM's kernel cache; the optional device-resident column cache that
 serves fully-resident blocks without any recompute lives in

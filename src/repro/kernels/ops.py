@@ -82,7 +82,14 @@ def kmeans_assign(X: jax.Array, Xm: jax.Array, W: jax.Array, s: jax.Array,
 
 def cd_column_update(X: jax.Array, y: jax.Array, Xb: jax.Array, w: jax.Array,
                      kernel, bm: int = 512) -> jax.Array:
-    """dg = y * (K(X, Xb) @ w) via the fused Pallas kernel."""
+    """dg = y * (K(X, Xb) @ w) via the fused Pallas kernel.
+
+    ``y`` is the generalized dual's sign vector ``s`` — class labels for
+    C-SVC, the mixed (+1, -1) mirror signs of epsilon-SVR's duplicated-row
+    dual — and ``w = s_b * delta``; both are plain data, so every task flows
+    through the same kernel (parity pinned for non-tile-aligned SVR shapes
+    in tests/test_conquer_pallas.py).
+    """
     bm = min(bm, max(8, X.shape[0]))
     Xp, n = _pad_rows(X, bm)
     yp, _ = _pad_rows(y, bm)

@@ -1,8 +1,10 @@
-"""Compiled SVM serving engine for (multiclass) DC-SVM models.
+"""Compiled SVM serving engine for DC-SVM models of every task.
 
-Turns a trained ``DCSVMModel`` / ``MulticlassModel`` into a compacted,
-device-resident ``ServingModel`` and serves batched requests through one
-jitted program per strategy:
+Turns a trained ``DCSVMModel`` (binary / weighted C-SVC or epsilon-SVR) or
+``MulticlassModel`` into a compacted, device-resident ``ServingModel`` and
+serves batched requests through one jitted program per strategy —
+regression models flow through the same route→gather→score program and
+only skip the final argmax (``ServingModel.task``):
 
 * ``exact`` — K(Xq, SV-union) @ W, argmax over classes (paper eq. 10).
 * ``early`` — paper eq. 11: route each query to its nearest kernel-kmeans
@@ -44,8 +46,13 @@ Array = jax.Array
 class ServingModel(NamedTuple):
     """Device-resident compacted model (a pytree — passes through jit).
 
-    Binary models are exported with two weight columns (-w, +w) and classes
-    (-1, +1) so the argmax request loop is identical for every model.
+    Binary classifiers are exported with two weight columns (-w, +w) and
+    classes (-1, +1) so the argmax request loop is identical for every
+    model.  Regression (epsilon-SVR) models are exported with ONE weight
+    column of collapsed beta coefficients and an EMPTY ``classes`` array —
+    the ``task`` field is derived from that static shape, so the jitted
+    route→gather→score program is shared and only the final argmax is
+    skipped for regression.
     """
 
     # routing (implicit kernel-kmeans centers, empty centers masked upstream)
@@ -63,7 +70,7 @@ class ServingModel(NamedTuple):
     # cluster (identity padding) — factored ONCE at export, so a request
     # only pays triangular solves
     Lchol: Array       # (k, max_sv, max_sv) lower-triangular
-    classes: Array     # (n_classes,)
+    classes: Array     # (n_classes,) — empty for regression models
 
     @property
     def k(self) -> int:
@@ -72,6 +79,12 @@ class ServingModel(NamedTuple):
     @property
     def n_classes(self) -> int:
         return self.classes.shape[0]
+
+    @property
+    def task(self) -> str:
+        """"svr" | "svc" — derived from the static ``classes`` shape so the
+        branch is jit-safe (no host sync, no non-array pytree leaf)."""
+        return "svr" if self.classes.shape[0] == 0 else "svc"
 
 
 def export_serving_model(model, noise: float = 1e-2,
@@ -94,11 +107,18 @@ def export_serving_model(model, noise: float = 1e-2,
         raise ValueError("serving export requires a partitioned model")
     kern = model.config.kernel
     alpha = np.asarray(model.alpha)
-    if isinstance(model, DCSVMModel) or alpha.ndim == 1:
-        w = alpha * np.asarray(model.y)
+    task = getattr(model, "task", None)
+    if task is not None and task.is_regression:
+        # regression: one beta column, no classes — serve_batch skips argmax
+        w = np.asarray(model.weights)                        # collapsed beta
+        W = w[:, None]                                       # (n, 1)
+        classes = np.zeros((0,), np.float32)
+        active = w != 0
+    elif isinstance(model, DCSVMModel) or alpha.ndim == 1:
+        w = np.asarray(model.weights)                        # y * alpha
         W = np.stack([-w, w], axis=1)                        # (n, 2)
         classes = np.array([-1.0, 1.0], np.float32)
-        active = alpha > 0
+        active = w != 0
     else:
         W = np.asarray(model.alpha * model.Y).T              # (n, n_classes)
         classes = np.asarray(model.classes)
@@ -205,7 +225,13 @@ def serve_scores_bcm(sm: ServingModel, Xq: Array, kern: Kernel,
 
 def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
                 use_pallas: Optional[bool] = None) -> Tuple[Array, Array]:
-    """One batched request: returns (predicted class labels, scores)."""
+    """One batched request: returns (predictions, scores).
+
+    Predictions are class labels (argmax over score columns) for
+    classification models and raw regression values for ``task == "svr"``
+    models (the single beta-score column, no argmax) — the branch is on a
+    static shape, so both paths stay one compiled program per strategy.
+    """
     up = resolve_use_pallas(use_pallas)
     if strategy == "exact":
         scores = serve_scores_exact(sm, Xq, kern, use_pallas=up)
@@ -219,6 +245,8 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
         scores = serve_scores_bcm(sm, Xq, kern)
     else:
         raise ValueError(f"unknown strategy: {strategy}")
+    if sm.task == "svr":
+        return scores[:, 0], scores
     return sm.classes[jnp.argmax(scores, axis=1)], scores
 
 
@@ -253,10 +281,15 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
 
 
 def main(argv=None) -> None:
-    from repro.core.predict import accuracy_multiclass
-    from repro.data import gaussian_mixture_multiclass, train_test_split
+    from repro.core.dcsvm import fit
+    from repro.core.predict import accuracy_multiclass, mse
+    from repro.core.tasks import EpsilonSVR
+    from repro.data import (
+        friedman1, gaussian_mixture_multiclass, train_test_split,
+    )
 
     ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="svc", choices=["svc", "svr"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--classes", type=int, default=3)
     ap.add_argument("--levels", type=int, default=2)
@@ -267,24 +300,37 @@ def main(argv=None) -> None:
     ap.add_argument("--batches", type=int, default=50)
     ap.add_argument("--gamma", type=float, default=8.0)
     ap.add_argument("--C", type=float, default=4.0)
+    ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(args.seed), args.n,
-                                       n_classes=args.classes)
-    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(args.seed + 1), X, y)
     kern = Kernel("rbf", gamma=args.gamma)
+    t0 = time.perf_counter()
+    if args.task == "svr":
+        X, y = friedman1(jax.random.PRNGKey(args.seed), args.n)
+    else:
+        X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(args.seed),
+                                           args.n, n_classes=args.classes)
+    Xtr, ytr, Xte, yte = train_test_split(
+        jax.random.PRNGKey(args.seed + 1), X, y)
     cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
                       m=min(1000, Xtr.shape[0]), tol=1e-3, seed=args.seed)
-    t0 = time.perf_counter()
-    model = fit_ova(cfg, Xtr, ytr)
-    print(f"fit_ova: {time.perf_counter()-t0:.1f}s  "
-          f"n_sv={len(model.sv_union)}/{Xtr.shape[0]}")
+    if args.task == "svr":
+        model = fit(cfg, Xtr, ytr, task=EpsilonSVR(eps=args.eps))
+        print(f"fit svr: {time.perf_counter()-t0:.1f}s  "
+              f"n_sv={len(model.sv_index)}/{Xtr.shape[0]}")
+    else:
+        model = fit_ova(cfg, Xtr, ytr)
+        print(f"fit_ova: {time.perf_counter()-t0:.1f}s  "
+              f"n_sv={len(model.sv_union)}/{Xtr.shape[0]}")
 
     sm = export_serving_model(model)
     pred, _ = serve_batch(sm, Xte, kern, args.strategy)
-    acc = accuracy_multiclass(yte, pred)
-    print(f"serving accuracy ({args.strategy}): {acc:.4f}")
+    if sm.task == "svr":
+        print(f"serving mse ({args.strategy}): {mse(yte, pred):.5f}")
+    else:
+        acc = accuracy_multiclass(yte, pred)
+        print(f"serving accuracy ({args.strategy}): {acc:.4f}")
 
     rng = np.random.default_rng(args.seed)
     idx = rng.integers(0, Xte.shape[0], size=(args.batches, args.batch))

@@ -1,7 +1,16 @@
-"""DC-SVM end-to-end training driver (the paper's workload).
+"""DC-SVM end-to-end training driver (the paper's workload, all tasks).
 
     PYTHONPATH=src python -m repro.launch.train_svm --n 20000 --levels 3 \
         --dataset covtype_like --ckpt-dir /tmp/dcsvm_ckpt
+    PYTHONPATH=src python -m repro.launch.train_svm --task svr \
+        --dataset friedman1 --eps 0.1
+    PYTHONPATH=src python -m repro.launch.train_svm --task weighted-svc \
+        --dataset imbalanced --class-weight 20
+
+Tasks: ``svc`` (hinge C-SVC), ``weighted-svc`` (cost-sensitive box
+``c_i = C * w_{y_i}``; ``--class-weight POS[,NEG]``), ``svr``
+(epsilon-insensitive regression; ``--eps``).  Regression reports MSE/MAE,
+weighted classification additionally reports per-class recall.
 
 Fault tolerance: after every level the (alpha, level, assign) state is
 checkpointed; restart resumes at the next level (the expensive bottom levels
@@ -20,11 +29,13 @@ import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.core import (
-    DCSVMConfig, Kernel, accuracy, fit, predict_early, predict_exact,
+    DCSVMConfig, EpsilonSVR, Kernel, WeightedCSVC, accuracy, fit, mae, mse,
+    predict_early, predict_exact, recall,
 )
 from repro.core.dcsvm import DCSVMModel
 from repro.data import (
-    checkerboard, covtype_like, gaussian_mixture, train_test_split,
+    checkerboard, covtype_like, friedman1, gaussian_mixture,
+    gaussian_mixture_imbalanced, sinc1d, stratified_split, train_test_split,
     webspam_like,
 )
 
@@ -33,16 +44,36 @@ DATASETS = {
     "webspam_like": webspam_like,
     "checkerboard": lambda k, n: checkerboard(k, n, cells=4),
     "gaussian": lambda k, n: gaussian_mixture(k, n, d=16, modes_per_class=8),
+    "imbalanced": lambda k, n: gaussian_mixture_imbalanced(k, n, d=10),
+    "sinc1d": sinc1d,
+    "friedman1": friedman1,
 }
+REGRESSION_DATASETS = {"sinc1d", "friedman1"}
+
+
+def parse_class_weight(spec: str):
+    """"POS" or "POS,NEG" -> (w_pos, w_neg)."""
+    parts = [float(v) for v in spec.split(",") if v]
+    if len(parts) == 1:
+        return parts[0], 1.0
+    if len(parts) == 2:
+        return parts[0], parts[1]
+    raise ValueError(f"--class-weight expects POS[,NEG], got {spec!r}")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="svc",
+                    choices=["svc", "weighted-svc", "svr"])
     ap.add_argument("--dataset", default="gaussian", choices=sorted(DATASETS))
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--C", type=float, default=4.0)
     ap.add_argument("--gamma", type=float, default=8.0)
-    ap.add_argument("--kernel", default="rbf", choices=["rbf", "poly"])
+    ap.add_argument("--kernel", default="rbf", choices=["rbf", "poly", "linear"])
+    ap.add_argument("--class-weight", default="10",
+                    help="weighted-svc cost multipliers POS[,NEG] on top of C")
+    ap.add_argument("--eps", type=float, default=0.1,
+                    help="epsilon-SVR insensitivity tube half-width")
     ap.add_argument("--levels", type=int, default=3)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--m", type=int, default=1000)
@@ -55,9 +86,24 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    is_reg = args.dataset in REGRESSION_DATASETS
+    if (args.task == "svr") != is_reg:
+        ap.error(f"--task {args.task} needs a "
+                 f"{'regression' if args.task == 'svr' else 'classification'} "
+                 f"dataset; --dataset {args.dataset} is not one "
+                 f"(regression: {sorted(REGRESSION_DATASETS)})")
+
+    task = None
+    if args.task == "weighted-svc":
+        w_pos, w_neg = parse_class_weight(args.class_weight)
+        task = WeightedCSVC(w_pos=w_pos, w_neg=w_neg)
+    elif args.task == "svr":
+        task = EpsilonSVR(eps=args.eps)
+
     key = jax.random.PRNGKey(args.seed)
     X, y = DATASETS[args.dataset](key, args.n)
-    Xtr, ytr, Xte, yte = train_test_split(jax.random.fold_in(key, 1), X, y)
+    split = stratified_split if args.dataset == "imbalanced" else train_test_split
+    Xtr, ytr, Xte, yte = split(jax.random.fold_in(key, 1), X, y)
     kern = Kernel(args.kernel, gamma=args.gamma)
     cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
                       m=args.m, tol=args.tol, block=args.block,
@@ -76,6 +122,8 @@ def main(argv=None) -> None:
 
     t0 = time.perf_counter()
     if args.distributed:
+        if args.task != "svc":
+            raise SystemExit("--distributed currently supports --task svc only")
         from repro.core.distributed import fit_distributed
         from repro.launch.mesh import make_host_mesh
         mesh = jax.make_mesh((jax.device_count(),), ("i",))
@@ -85,17 +133,24 @@ def main(argv=None) -> None:
         for st in stats:
             print(st, flush=True)
     else:
-        model = fit(cfg, Xtr, ytr, callback=cb)
+        model = fit(cfg, Xtr, ytr, callback=cb, task=task)
     t_train = time.perf_counter() - t0
 
     if model.is_early:
-        acc = accuracy(yte, predict_early(model, Xte))
+        pred = predict_early(model, Xte)
         mode = f"early prediction (level {args.early})"
     else:
-        acc = accuracy(yte, predict_exact(model, Xte))
+        pred = predict_exact(model, Xte)
         mode = "exact"
-    n_sv = int(np.sum(np.asarray(model.alpha) > 0))
-    print(f"done in {t_train:.1f}s | {mode} | test acc {acc:.4f} | "
+    n_sv = len(model.sv_index)
+    if args.task == "svr":
+        metrics = f"test mse {mse(yte, pred):.5f} mae {mae(yte, pred):.5f}"
+    else:
+        metrics = f"test acc {accuracy(yte, pred):.4f}"
+        if args.task == "weighted-svc":
+            metrics += (f" | recall +1 {recall(yte, pred, 1.0):.4f}"
+                        f" -1 {recall(yte, pred, -1.0):.4f}")
+    print(f"done in {t_train:.1f}s | {mode} | {metrics} | "
           f"SVs {n_sv}/{Xtr.shape[0]}", flush=True)
     if mgr is not None:
         mgr.wait()

@@ -178,6 +178,82 @@ def test_decision_early_pallas_parity():
                                rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# ISSUE-3: signed-weight parity on the generalized (task) dual.  The SVR dual
+# runs the SAME fused kernels with a mixed-sign s vector (+1/-1 mirrored
+# coordinate pairs) over duplicated, non-tile-aligned rows — pin Pallas/XLA
+# parity there too.
+# ---------------------------------------------------------------------------
+
+def _svr_problem(n=75, d=5, key=21, eps=0.05, C=2.0):
+    from repro.core.tasks import EpsilonSVR
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    X = (jax.random.uniform(k1, (n, d)) - 0.5) * 2.0
+    y = jnp.sum(jnp.sin(2.0 * X), axis=-1) / d \
+        + 0.02 * jax.random.normal(k2, (n,))
+    task = EpsilonSVR(eps=eps)
+    td = task.build(X, y[None, :], C)
+    return td
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+def test_cd_column_update_signed_weights_parity(kern):
+    """Fused cd_column_update with a mixed-sign s vector (the SVR case) on
+    non-tile-aligned shapes: Pallas == XLA reference to 1e-5."""
+    from repro.kernels import ops as kops
+
+    td = _svr_problem(n=83, d=7)           # nd = 166: not a multiple of 8/128
+    s = td.S[0]
+    idx = jnp.asarray([3, 82, 83, 165, 40, 123, 7])   # mirrored pairs included
+    Xb, sb = td.Xd[idx], s[idx]
+    delta = jax.random.normal(jax.random.PRNGKey(5), (idx.shape[0],)) * 0.1
+    got = kops.cd_column_update(td.Xd, s, Xb, sb * delta, kern)
+    Kb = kern.pairwise(td.Xd, Xb)
+    want = s * (Kb @ (sb * delta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+def test_matvec_solver_svr_pallas_parity(kern):
+    """solve_box_qp_matvec on the 2n SVR dual (signed weights through the
+    fused kernels, per-coordinate p): XLA and Pallas agree on the collapsed
+    beta to 1e-5 (beta — not the raw 2n dual — is the well-posed quantity:
+    Q is rank-deficient by construction on duplicated rows)."""
+    td = _svr_problem(n=60, d=5)
+    s, p, cvec = td.S[0], td.P[0], td.Cvec[0]
+    r_x = solve_box_qp_matvec(td.Xd, s, kern, cvec, tol=1e-6, max_iters=4000,
+                              block=16, p=p)
+    r_p = solve_box_qp_matvec(td.Xd, s, kern, cvec, tol=1e-6, max_iters=4000,
+                              block=16, p=p, use_pallas=True)
+    assert float(r_p.pg_max) <= 1e-6 * 1.5
+    beta_x = np.asarray(td.collapse(r_x.alpha[None, :])[0])
+    beta_p = np.asarray(td.collapse(r_p.alpha[None, :])[0])
+    np.testing.assert_allclose(beta_p, beta_x, atol=1e-5)
+
+
+def test_svr_fit_backend_parity():
+    """End-to-end epsilon-SVR fit through the divide/conquer driver: XLA and
+    Pallas backends produce the same decision function."""
+    from repro.core.tasks import EpsilonSVR
+    from repro.data import friedman1
+
+    X, y = friedman1(jax.random.PRNGKey(4), 300)
+    kern = Kernel("rbf", gamma=1.0)
+    cfg_x = DCSVMConfig(kernel=kern, C=4.0, k=3, levels=1, m=150, tol=1e-4,
+                        kmeans_iters=10, use_pallas=False,
+                        full_gram_threshold=64, block=32)
+    cfg_p = dataclasses.replace(cfg_x, use_pallas=True)
+    task = EpsilonSVR(eps=0.1)
+    m_x = fit(cfg_x, X, y, task=task)
+    m_p = fit(cfg_p, X, y, task=task)
+    d_x = decision_exact(m_x, X[:64], use_pallas=False)
+    d_p = decision_exact(m_p, X[:64], use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_x),
+                               rtol=1e-3, atol=2e-3)
+
+
 def test_shrinking_iters_accumulate_on_device():
     """Satellite: solve_with_shrinking returns a device scalar equal to the
     sum of per-round iteration counts (no per-round host sync)."""
