@@ -10,12 +10,19 @@ from repro.core.kernels import (
 )
 from repro.core.solver import (
     SolveResult,
+    equality_interval,
+    equality_rho,
     kkt_residual,
+    kkt_residual_eq,
     objective,
     proj_grad,
+    project_box_equality,
     solve_box_qp,
     solve_box_qp_block,
     solve_box_qp_matvec,
+    solve_eq_qp,
+    solve_eq_qp_matvec,
+    solve_eq_qp_shrink,
     solve_with_shrinking,
 )
 from repro.core.kkmeans import (
@@ -30,13 +37,20 @@ from repro.core.kkmeans import (
 from repro.core.tasks import (
     CSVC,
     EpsilonSVR,
+    NuSVC,
+    OneClassSVM,
     Task,
     TaskDual,
     WeightedCSVC,
     resolve_task,
 )
 from repro.core.dcsvm import DCSVMConfig, DCSVMModel, fit, objective_value
-from repro.core.multiclass import MulticlassModel, fit_ova, labels_to_ova
+from repro.core.multiclass import (
+    MulticlassModel,
+    fit_ova,
+    labels_to_ova,
+    ova_cost_vectors,
+)
 from repro.core.predict import (
     accuracy,
     accuracy_multiclass,
@@ -48,8 +62,10 @@ from repro.core.predict import (
     decision_exact,
     decision_exact_ova,
     early_capacity,
+    f1,
     mae,
     mse,
+    precision,
     predict_bcm,
     predict_bcm_ova,
     predict_early,

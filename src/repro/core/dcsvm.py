@@ -85,6 +85,13 @@ class DCSVMModel:
     task: Task = dataclasses.field(default_factory=CSVC)
     beta: Optional[Array] = None   # collapsed decision coefficients (n,):
                                    # f(x) = sum_i beta_i K(x_i, x)
+    rho: Optional[float] = None    # decision offset (equality-constrained
+                                   # tasks: f(x) = sum_i beta_i K(x_i,x) - rho)
+    rho_clusters: Optional[Array] = None   # (k,) per-cluster offsets of an
+                                   # early-stopped equality model: each local
+                                   # sub-QP carries its own multiplier, so
+                                   # eq.-11 routing subtracts the assigned
+                                   # cluster's rho_c, not the global rho
 
     @property
     def weights(self) -> Array:
@@ -111,30 +118,67 @@ def _map_classes(fn, args, fits_budget: bool):
     return jax.lax.map(lambda t: fn(*t), args)
 
 
+def _split_eq_targets(Ac: Array, Cc: Array, mask: Array, d_total: Array) -> Array:
+    """Proportional split of the global equality target over clusters.
+
+    ``Ac``/``Cc``: (k, n_rows, nc) gathered equality coefficients and boxes,
+    ``mask``: (k, nc), ``d_total``: (n_rows,).  Each cluster's sub-target
+    ``d_c`` sits at the same relative position inside the cluster's
+    attainable interval [lo_c, hi_c] = [sum_{a<0} a c, sum_{a>0} a c] as
+    ``d`` sits inside the global one — so every sub-QP is feasible and the
+    sub-targets sum exactly to ``d`` (the concatenated cluster solutions are
+    a feasible global warm start).  For the all-positive ``a`` of one-class
+    SVM / nu-SVC this is the capacity-proportional split d_c = d * cap_c/cap.
+    """
+    m = mask[:, None, :]
+    contrib = jnp.where(m, Ac * Cc, 0.0)
+    hi_c = jnp.sum(jnp.maximum(contrib, 0.0), axis=-1)     # (k, n_rows)
+    lo_c = jnp.sum(jnp.minimum(contrib, 0.0), axis=-1)
+    lo = jnp.sum(lo_c, axis=0)                             # (n_rows,)
+    hi = jnp.sum(hi_c, axis=0)
+    span = jnp.maximum(hi - lo, 1e-12)
+    frac = (jnp.clip(d_total, lo, hi) - lo) / span
+    return lo_c + frac[None, :] * (hi_c - lo_c)
+
+
 def _solve_clusters(
     cfg: DCSVMConfig, Xc: Array, sc: Array, pc: Array, cc: Array, ac: Array,
     mask: Array, use_pallas: bool = False,
+    aeq: Optional[Array] = None, deq: Optional[Array] = None,
 ) -> Array:
     """Solve the independent generalized sub-QPs of one level.
     Xc: (k, nc, d), mask: (k, nc); sc/pc/cc/ac are class-stacked
     (k, n_rows, nc) sign vectors, linear terms, per-coordinate boxes and
     warm-start duals — binary is one row.  The Gram is task- and
     label-independent, so one Gram per cluster serves every row and all
-    k * n_rows sub-QPs run in a single vmapped CD call."""
+    k * n_rows sub-QPs run in a single vmapped CD call.
+
+    ``aeq``/``deq`` (equality family): (k, n_rows, nc) coefficients and the
+    (k, n_rows) per-cluster targets from ``_split_eq_targets`` — each
+    sub-QP keeps its own hyperplane ``a'u_c = d_c`` via the pairwise engine
+    (warm starts are projected feasible inside the solver)."""
     k, nc, _ = Xc.shape
     n_cls = sc.shape[1]
+    has_eq = aeq is not None
 
-    def one(Xi, Si, Pi, Ci, Ai, mi):
+    def one(Xi, Si, Pi, Ci, Ai, mi, *eq):
         Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
         # zero pad rows/cols so pad slots cannot leak into real gradients
         mm = mi[:, None] & mi[None, :]
         Kz = jnp.where(mm, Ki, 0.0)
         eye_pad = jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Ki.dtype)
 
-        def per_class(si, pi, ci, ai):
+        def per_class(si, pi, ci, ai, *eqi):
             Qi = (si[:, None] * si[None, :]) * Kz + eye_pad
             ai = jnp.where(mi, ai, 0.0)
-            if cfg.block > 0 and cfg.block < nc:
+            if has_eq:
+                aqi, dqi = eqi
+                res = S.solve_eq_qp(
+                    Qi, jnp.where(mi, ci, 0.0), jnp.where(mi, aqi, 0.0), dqi,
+                    alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                    active_mask=mi, p=pi,
+                )
+            elif cfg.block > 0 and cfg.block < nc:
                 res = S.solve_box_qp_block(
                     Qi, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
                     block=cfg.block, sweeps=cfg.sweeps, active_mask=mi, p=pi,
@@ -146,11 +190,11 @@ def _solve_clusters(
                 )
             return res.alpha
 
-        return jax.vmap(per_class)(Si, Pi, Ci, Ai)           # (n_cls, nc)
+        return jax.vmap(per_class)(Si, Pi, Ci, Ai, *eq)      # (n_cls, nc)
 
+    args = (Xc, sc, pc, cc, ac, mask) + ((aeq, deq) if has_eq else ())
     # sequential sweep bounds peak memory at one cluster's Grams
-    return _map_classes(one, (Xc, sc, pc, cc, ac, mask),
-                        k * n_cls * nc * nc <= cfg.gram_budget)
+    return _map_classes(one, args, k * n_cls * nc * nc <= cfg.gram_budget)
 
 
 def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
@@ -164,6 +208,24 @@ def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
     Xs = td.Xd[idx]
     Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas)
     ss, ps, cs, as_ = td.S[:, idx], td.P[:, idx], td.Cvec[:, idx], alpha[:, idx]
+    fits = td.S.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget
+
+    if td.has_equality:
+        # sub-target: the full target minus the frozen complement's a'u
+        # (the complement is the non-SV set, i.e. u = 0, so d_sub == d —
+        # computed explicitly to stay correct for any idx)
+        ds = td.Deq - jnp.sum(td.A * alpha, axis=-1) \
+            + jnp.sum(td.A[:, idx] * alpha[:, idx], axis=-1)
+
+        def per_class_eq(si, pi, ci, ai, aqi, dqi):
+            Qs = (si[:, None] * si[None, :]) * Ks
+            res = S.solve_eq_qp(Qs, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
+                                max_iters=cfg.max_iters, p=pi)
+            return res.alpha
+
+        new = _map_classes(per_class_eq, (ss, ps, cs, as_, td.A[:, idx], ds),
+                           fits)
+        return alpha.at[:, idx].set(new)
 
     def per_class(si, pi, ci, ai):
         Qs = (si[:, None] * si[None, :]) * Ks
@@ -177,8 +239,7 @@ def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
                                  max_iters=cfg.max_iters, p=pi)
         return res.alpha
 
-    new = _map_classes(per_class, (ss, ps, cs, as_),
-                       td.S.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget)
+    new = _map_classes(per_class, (ss, ps, cs, as_), fits)
     return alpha.at[:, idx].set(new)
 
 
@@ -197,6 +258,18 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
     if n <= cfg.full_gram_threshold:
         K = gram(cfg.kernel, td.Xd, td.Xd, use_pallas=use_pallas)
 
+        if td.has_equality:
+            def per_class_eq(si, pi, ci, ai, aqi, dqi):
+                Q = (si[:, None] * si[None, :]) * K
+                return S.solve_eq_qp_shrink(
+                    Q, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
+                    max_iters=cfg.max_iters, rounds=cfg.shrink_rounds, p=pi,
+                )
+
+            return _map_classes(
+                per_class_eq, (td.S, td.P, td.Cvec, alpha, td.A, td.Deq),
+                n_cls * n * n <= cfg.gram_budget)
+
         def per_class(si, pi, ci, ai):
             Q = (si[:, None] * si[None, :]) * K
             return S.solve_with_shrinking(
@@ -206,6 +279,16 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
 
         return _map_classes(per_class, (td.S, td.P, td.Cvec, alpha),
                             n_cls * n * n <= cfg.gram_budget)
+
+    if td.has_equality:
+        def per_class_eq_mv(si, pi, ci, ai, aqi, dqi):
+            return S.solve_eq_qp_matvec(
+                td.Xd, si, cfg.kernel, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
+                max_iters=cfg.max_iters, use_pallas=use_pallas, p=pi,
+            )
+
+        return jax.vmap(per_class_eq_mv)(td.S, td.P, td.Cvec, alpha,
+                                         td.A, td.Deq)
 
     # the (cap, n) cache buffer(s) count against the same memory budget as
     # the stacked cluster Grams
@@ -287,8 +370,15 @@ def _fit_algorithm1(
         cc = jnp.moveaxis(dpart.gather(td.Cvec.T), -1, 1)
         ac = jnp.moveaxis(dpart.gather(alpha.T), -1, 1)
         ac = jnp.where(mask[:, None, :], ac, 0.0)
+        aeqc = deqc = None
+        if td.has_equality:
+            # split the global target a'u = d proportionally over clusters;
+            # the pairwise sub-solver projects each gathered warm start onto
+            # its own hyperplane a'u_c = d_c
+            aeqc = jnp.moveaxis(dpart.gather(td.A.T), -1, 1)
+            deqc = _split_eq_targets(aeqc, cc, mask, jnp.asarray(td.Deq))
         ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
-                             use_pallas=use_pallas)
+                             use_pallas=use_pallas, aeq=aeqc, deq=deqc)
         alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
@@ -330,30 +420,86 @@ def _fit_algorithm1(
     return alpha, partition, stats, False
 
 
+def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
+                          partition: Partition) -> Array:
+    """Per-cluster equality multipliers of an early-stopped model: cluster
+    c's local sub-QP was solved with its own constraint a'u_c = d_c, so its
+    decision offset is the LOCAL multiplier rho_c (the global interval of a
+    concatenated early solution is meaningless — the local levels differ by
+    O(1)).  One per-cluster Gram matvec, same memory shape as a level
+    solve — including the level solve's budget fallback (a sequential sweep
+    when the stacked cluster Grams exceed ``gram_budget``).  Equality tasks
+    keep n_dual == n_base, so the base partition indexes the dual
+    coordinates directly."""
+    use_pallas = resolve_use_pallas(cfg.use_pallas)
+    Xc = partition.gather(td.Xd)
+    mask = jnp.asarray(partition.mask)
+    sc = partition.gather(td.S[0])
+    pc = partition.gather(td.P[0])
+    cc = partition.gather(td.Cvec[0])
+    aq = partition.gather(td.A[0])
+    uc = partition.gather(alpha[0])
+
+    def one(Xi, si, pi, ci, ai, ui, mi):
+        Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
+        mm = mi[:, None] & mi[None, :]
+        Kz = jnp.where(mm, Ki, 0.0)
+        ui = jnp.where(mi, ui, 0.0)
+        gi = si * (Kz @ (si * ui)) + pi
+        return S.equality_rho(ui, gi, jnp.where(mi, ci, 0.0),
+                              jnp.where(mi, ai, 0.0), active_mask=mi)
+
+    return _map_classes(one, (Xc, sc, pc, cc, aq, uc, mask),
+                        partition.k * partition.nc ** 2 <= cfg.gram_budget)
+
+
+def _recover_rho(cfg: DCSVMConfig, td: TaskDual, alpha: Array) -> float:
+    """Equality multiplier rho at the returned dual (the decision offset of
+    one-class SVM): recomputes the full gradient with one kernel matvec and
+    takes the midpoint of the KKT multiplier bracket."""
+    up = resolve_use_pallas(cfg.use_pallas)
+    s = td.S[0]
+    g = s * gram_matvec(cfg.kernel, td.Xd, s * alpha[0], use_pallas=up) \
+        + td.P[0]
+    return float(S.equality_rho(alpha[0], g, td.Cvec[0], td.A[0]))
+
+
 def fit(
     cfg: DCSVMConfig,
     X: Array,
-    y: Array,
+    y: Optional[Array] = None,
     callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
     task: Optional[Task] = None,
 ) -> DCSVMModel:
     """Train DC-SVM on any supported task (default: C-SVC on +/-1 labels).
 
     ``task`` selects the workload (``tasks.CSVC`` / ``tasks.WeightedCSVC`` /
-    ``tasks.EpsilonSVR``); for regression ``y`` holds real targets.
-    ``callback(level, alpha, stats)`` fires after each level (level 0 =
-    final solve) — benchmarks use it for time/objective curves; ``alpha``
-    is the task's dual vector (2n coordinates for SVR).
+    ``tasks.EpsilonSVR`` / ``tasks.NuSVC`` / ``tasks.OneClassSVM``); for
+    regression ``y`` holds real targets; for label-free tasks (one-class
+    SVM) ``y`` may be omitted.  ``callback(level, alpha, stats)`` fires
+    after each level (level 0 = final solve) — benchmarks use it for
+    time/objective curves; ``alpha`` is the task's dual vector (2n
+    coordinates for SVR).
     """
     X = jnp.asarray(X)
-    y = jnp.asarray(y, X.dtype)
     task = resolve_task(task)
+    if y is None:
+        if not task.label_free:
+            raise ValueError(f"task {task.name!r} requires labels y")
+        y = jnp.zeros(X.shape[0], X.dtype)
+    y = jnp.asarray(y, X.dtype)
     td = task.build(X, y[None, :], cfg.C)
     cb = None if callback is None else (lambda l, a, st: callback(l, a[0], st))
     alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, td, cb)
     beta = td.collapse(alpha)[0]
+    rho = rho_clusters = None
+    if task.has_rho_offset:
+        rho = _recover_rho(cfg, td, alpha)
+        if is_early and partition is not None:
+            rho_clusters = _recover_rho_clusters(cfg, td, alpha, partition)
     return DCSVMModel(cfg, X, y, alpha[0], partition, is_early, stats,
-                      task=task, beta=beta)
+                      task=task, beta=beta, rho=rho,
+                      rho_clusters=rho_clusters)
 
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,

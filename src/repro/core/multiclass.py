@@ -80,12 +80,39 @@ def labels_to_ova(y, n_classes: Optional[int] = None, dtype=jnp.float32):
     return classes, jnp.asarray(np.where(onehot, 1.0, -1.0), dtype)
 
 
+def ova_cost_vectors(Y: Array, C: float, class_weight, classes) -> Array:
+    """Per-class cost vectors for weighted one-vs-all: machine c's box is
+    ``c_i = C * w_c`` on its positive (class-c) side and ``C`` on the rest —
+    the class-stacked generalization of ``WeightedCSVC``'s binary box.
+
+    ``class_weight`` is a dict {class label: weight} (absent classes get
+    1.0) or an array-like of per-class weights aligned with ``classes``.
+    """
+    n_cls = Y.shape[0]
+    if isinstance(class_weight, dict):
+        w = np.ones(n_cls)
+        lookup = {c: i for i, c in enumerate(np.asarray(classes).tolist())}
+        for label, wi in class_weight.items():
+            if label not in lookup:
+                raise ValueError(f"class_weight key {label!r} not in classes "
+                                 f"{np.asarray(classes).tolist()}")
+            w[lookup[label]] = float(wi)
+    else:
+        w = np.asarray(class_weight, np.float64)
+        if w.shape != (n_cls,):
+            raise ValueError(f"class_weight must have one weight per class "
+                             f"({n_cls}), got shape {w.shape}")
+    wj = jnp.asarray(w, Y.dtype)
+    return C * jnp.where(Y > 0, wj[:, None], 1.0)
+
+
 def fit_ova(
     cfg: DCSVMConfig,
     X: Array,
     y: Array,
     n_classes: Optional[int] = None,
     callback: Optional[Callable[[int, Array, Dict[str, Any]], None]] = None,
+    class_weight=None,
 ) -> MulticlassModel:
     """Train one-vs-all DC-SVM: Algorithm 1 with a class-stacked conquer.
 
@@ -93,11 +120,17 @@ def fit_ova(
     path as binary ``fit``) with the (n_classes, n) label matrix;
     ``callback(level, alpha, stats)`` receives the class-stacked alpha.
     Adaptive clustering samples from the union of the per-class
-    support-vector sets.
+    support-vector sets.  ``class_weight`` (dict {class: weight} or
+    per-class array) upweights each machine's positive box
+    (``ova_cost_vectors``) — the minority-recall knob for imbalanced
+    multiclass data; the class-stacked ``Cvec`` already supports per-row
+    boxes, so this is pure plumbing.
     """
     X = jnp.asarray(X)
     classes, Y = labels_to_ova(y, n_classes, X.dtype)
     td = CSVC().build(X, Y, cfg.C)
+    if class_weight is not None:
+        td = td._replace(Cvec=ova_cost_vectors(Y, cfg.C, class_weight, classes))
     alpha, partition, stats, is_early = _fit_algorithm1(cfg, X, td, callback)
     return MulticlassModel(cfg, X, classes, Y, alpha, partition, is_early,
                            stats)

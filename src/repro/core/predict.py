@@ -41,11 +41,15 @@ Array = jax.Array
 
 def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
                             Xblocks: Array, Wblocks: Array, cap: int,
-                            use_pallas: bool = False) -> Array:
+                            use_pallas: bool = False,
+                            offsets: Optional[Array] = None) -> Array:
     """Score every query against ONLY its assigned cluster's block.
 
     ``Xblocks``: (k, nc, d) per-cluster member coordinates, ``Wblocks``:
     (k, nc, C) per-member weights (zero on padding slots).  Returns (nq, C).
+    ``offsets`` (k, C), when given, is subtracted from each query's score
+    according to its assigned cluster — the per-cluster decision offsets
+    rho_c of early-stopped equality-constrained models (one-class SVM).
 
     Queries are bucketed into a (k, cap, d) buffer and all clusters are
     scored in one vmapped kernel matvec.  Clusters holding more than ``cap``
@@ -101,17 +105,20 @@ def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
 
     out0 = jnp.zeros((nq, n_out), acc)
     out, _ = jax.lax.while_loop(cond, body, (out0, jnp.zeros((), jnp.int32)))
+    if offsets is not None:
+        out = out - offsets[cid]
     return out.astype(Xq.dtype)
 
 
 @partial(jax.jit, static_argnames=("kern", "cap", "use_pallas"))
 def _early_program(kern: Kernel, Xq: Array, route_model: KKMeansModel,
                    Xblocks: Array, Wblocks: Array, cap: int,
-                   use_pallas: bool = False) -> Array:
+                   use_pallas: bool = False,
+                   offsets: Optional[Array] = None) -> Array:
     """Route + bucketed local scoring as ONE compiled program."""
     cid, _ = assign_points(kern, route_model, Xq, use_pallas=use_pallas)
     return bucketed_cluster_scores(kern, Xq, cid, Xblocks, Wblocks, cap,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas, offsets=offsets)
 
 
 @partial(jax.jit, static_argnames=("kern", "chunk", "use_pallas"))
@@ -146,6 +153,27 @@ def _is_regression(model) -> bool:
     return bool(task is not None and task.is_regression)
 
 
+def _offset(model) -> float:
+    """Decision offset rho of equality-constrained tasks (one-class SVM:
+    f(x) = sum_i beta_i K(x_i, x) - rho); 0 for every box-family task."""
+    rho = getattr(model, "rho", None)
+    return 0.0 if rho is None else float(rho)
+
+
+def _labels(model, d: Array) -> Array:
+    """Decision values -> predictions: raw values for regression, +/-1 for
+    classification.  One-class models threshold with ``d >= 0 -> +1``
+    (inlier), matching ``serve_batch``'s ocsvm path exactly — ``jnp.sign``
+    would emit 0 for boundary points (f(x) == rho) and the two sides of the
+    serving round trip would disagree on them."""
+    if _is_regression(model):
+        return d
+    task = getattr(model, "task", None)
+    if task is not None and getattr(task, "has_rho_offset", False):
+        return jnp.where(d >= 0, 1.0, -1.0).astype(d.dtype)
+    return jnp.sign(d)
+
+
 def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
                    use_pallas: Optional[bool] = None) -> Array:
     """f(x) = sum_i beta_i K(x_i, x) over all support vectors (eq. 10 when
@@ -154,8 +182,9 @@ def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
     kernel block never hits HBM; otherwise a single fused scan over SV
     chunks."""
     sv = model.sv_index
+    off = _offset(model)
     if len(sv) == 0:
-        return jnp.zeros(Xq.shape[0], Xq.dtype)
+        return jnp.zeros(Xq.shape[0], Xq.dtype) - off
     if use_pallas is None:
         use_pallas = model.config.use_pallas
     Xs = model.X[jnp.asarray(sv)]
@@ -164,15 +193,14 @@ def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
     if resolve_use_pallas(use_pallas):
         from repro.kernels import ops as kops
 
-        return kops.kernel_matvec(Xq, Xs, w, kern).astype(Xq.dtype)
-    return _decision_scan(kern, Xq, Xs, w[:, None], chunk)[:, 0]
+        return kops.kernel_matvec(Xq, Xs, w, kern).astype(Xq.dtype) - off
+    return _decision_scan(kern, Xq, Xs, w[:, None], chunk)[:, 0] - off
 
 
 def predict_exact(model: DCSVMModel, Xq: Array) -> Array:
     """Class labels for classification tasks; raw regression values for
     epsilon-SVR (the decision function IS the prediction)."""
-    d = decision_exact(model, Xq)
-    return d if _is_regression(model) else jnp.sign(d)
+    return _labels(model, decision_exact(model, Xq))
 
 
 def _early_blocks(model, w: Array):
@@ -218,13 +246,17 @@ def decision_early(model: DCSVMModel, Xq: Array,
     use_pallas = resolve_use_pallas(use_pallas)
     Xm, wm = _early_blocks(model, model.weights)
     cap = early_capacity(Xq.shape[0], part.k)
+    # early-stopped equality models: each cluster's local sub-QP carries its
+    # own multiplier, so the offset is per assigned cluster, not global
+    rho_c = getattr(model, "rho_clusters", None)
+    offsets = None if rho_c is None else jnp.asarray(rho_c)[:, None]
+    off = 0.0 if offsets is not None else _offset(model)
     return _early_program(kern, Xq, part.model, Xm, wm, cap,
-                          use_pallas=use_pallas)[:, 0]
+                          use_pallas=use_pallas, offsets=offsets)[:, 0] - off
 
 
 def predict_early(model: DCSVMModel, Xq: Array) -> Array:
-    d = decision_early(model, Xq)
-    return d if _is_regression(model) else jnp.sign(d)
+    return _labels(model, decision_early(model, Xq))
 
 
 def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
@@ -238,17 +270,32 @@ def decision_bcm(model: DCSVMModel, Xq: Array, noise: float = 1e-2,
     common precision-normalized form (the (k-1)/K(x,x) prior correction is
     absorbed into the normalization, which only rescales decisions and does
     not change the sign/accuracy).
+
+    Equality-family offsets are applied PER COMMITTEE MEMBER before the
+    combination: an early-stopped one-class model's clusters carry their
+    own multipliers rho_c, so member c contributes f_c(x) - rho_c (a
+    globally trained model's members share the one global rho).
     """
     W = model.weights[:, None]
     active = np.asarray(model.weights) != 0
-    return _bcm_scores(model, Xq, W, active, noise, max_sv_per_cluster)[:, 0]
+    rho_c = getattr(model, "rho_clusters", None)
+    if rho_c is not None:
+        offsets = np.asarray(rho_c, np.float64)
+    else:
+        offsets = np.full(model.partition.k, _offset(model))
+    scores = _bcm_scores(model, Xq, W, active, noise, max_sv_per_cluster,
+                         offsets=offsets)
+    return scores[:, 0]
 
 
 def _bcm_scores(model, Xq: Array, W: Array, active: np.ndarray, noise: float,
-                max_sv_per_cluster: int) -> Array:
+                max_sv_per_cluster: int,
+                offsets: Optional[np.ndarray] = None) -> Array:
     """Shared BCM combination: W is (n, C) decision weights, ``active`` marks
     the support vectors eligible per cluster.  The GP predictive variance is
-    label-independent, so one variance per cluster weights all C outputs."""
+    label-independent, so one variance per cluster weights all C outputs.
+    ``offsets`` (k,) is subtracted from cluster c's local decision before
+    the precision weighting (equality-family rho_c; None = no offsets)."""
     part = model.partition
     assert part is not None
     kern = model.config.kernel
@@ -267,6 +314,8 @@ def _bcm_scores(model, Xq: Array, W: Array, active: np.ndarray, noise: float,
         Kss = np.asarray(gram(kern, Xs, Xs)) + noise * np.eye(len(sv))
         Kqs = np.asarray(gram(kern, Xq, Xs))
         f_c = Kqs @ W_np[sv]                                  # (nq, C)
+        if offsets is not None:
+            f_c = f_c - offsets[c]
         sol = np.linalg.solve(Kss, Kqs.T)                     # (s, nq)
         var = np.asarray(kern.diag(Xq)) - np.einsum("qs,sq->q", Kqs, sol)
         var = np.maximum(var, noise)[:, None]
@@ -276,8 +325,7 @@ def _bcm_scores(model, Xq: Array, W: Array, active: np.ndarray, noise: float,
 
 
 def predict_bcm(model: DCSVMModel, Xq: Array) -> Array:
-    d = decision_bcm(model, Xq)
-    return d if _is_regression(model) else jnp.sign(d)
+    return _labels(model, decision_bcm(model, Xq))
 
 
 def accuracy(y_true: Array, y_pred: Array) -> float:
@@ -300,6 +348,24 @@ def recall(y_true: Array, y_pred: Array, label: float = 1.0) -> float:
     if not t.any():
         return float("nan")
     return float(np.mean(np.asarray(y_pred)[t] == label))
+
+
+def precision(y_true: Array, y_pred: Array, label: float = 1.0) -> float:
+    """Precision of one class (anomaly metric: label=-1 for outliers)."""
+    p = np.asarray(y_pred) == label
+    if not p.any():
+        return float("nan")
+    return float(np.mean(np.asarray(y_true)[p] == label))
+
+
+def f1(y_true: Array, y_pred: Array, label: float = 1.0) -> float:
+    """F1 of one class — the anomaly-detection headline metric for
+    one-class SVM (label=-1 marks outliers)."""
+    t = np.asarray(y_true) == label
+    p = np.asarray(y_pred) == label
+    tp = float(np.sum(t & p))
+    denom = 2.0 * tp + float(np.sum(~t & p)) + float(np.sum(t & ~p))
+    return 0.0 if denom == 0 else 2.0 * tp / denom
 
 
 # ---------------------------------------------------------------------------

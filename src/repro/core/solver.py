@@ -1,17 +1,27 @@
-"""Box-constrained QP solvers for the generalized kernel-machine dual.
+"""QP solvers for the two generalized kernel-machine dual families.
+
+Box family (the paper's bias-free hinge dual and its task generalizations):
 
     min_u  f(u) = 1/2 u' Q u + p' u     s.t.  0 <= u <= c
 
 with per-coordinate linear term ``p`` and per-coordinate upper bound ``c``
 (both broadcast from scalars).  The classic C-SVC hinge dual is the default
-instantiation ``p = -1, c = C`` — every task in ``repro.core.tasks`` (C-SVC,
-weighted C-SVC, epsilon-SVR) reduces to this one problem with
-``Q = (s s') ∘ K`` for a task-specific sign vector ``s``.
-
-Because the paper drops the bias term there is no equality constraint, so
-single-coordinate updates are exactly solvable in closed form:
+instantiation ``p = -1, c = C`` — C-SVC, weighted C-SVC and epsilon-SVR in
+``repro.core.tasks`` reduce to this one problem with ``Q = (s s') ∘ K`` for
+a task-specific sign vector ``s``.  Because the paper drops the bias term
+there is no equality constraint, so single-coordinate updates are exactly
+solvable in closed form:
 
     u_i <- clip(u_i - g_i / Q_ii, 0, c_i),      g = Q u + p.
+
+Equality-constrained family (one-class SVM, nu-SVC — DESIGN.md §9):
+
+    min_u  f(u) = 1/2 u' Q u + p' u     s.t.  0 <= u <= c,  a' u = d
+
+with a nonzero coefficient vector ``a`` (possibly mixed-sign).  Single
+coordinates can no longer move alone; the solver takes SMO-style *pairwise*
+steps along the constraint-neutral direction ``e_i/a_i - e_j/a_j`` chosen by
+the maximal-violating-pair rule, so every iterate stays on the hyperplane.
 
 Solvers (all pure JAX, `lax` control flow, vmap-able over a leading batch of
 independent subproblems — the divide step solves all clusters of one level in
@@ -24,10 +34,15 @@ a single vmapped call):
                             sub-QP, rank-B gradient update (MXU-friendly).
 * ``solve_box_qp_matvec`` — block CD with on-the-fly kernel columns; never
                             materializes Q (top-level conquer at large n).
+* ``solve_eq_qp``         — pairwise maximal-violating-pair CD on a dense Q
+                            for the equality-constrained family.
+* ``solve_eq_qp_shrink``  — LIBSVM-style outer shrinking rounds around it.
+* ``solve_eq_qp_matvec``  — the same pairwise engine with on-the-fly kernel
+                            columns (fused Pallas path available).
 
-Stopping criterion everywhere: max_i |projected gradient| < tol — identical
-semantics to LIBSVM's epsilon on the violating pair, adapted to the
-bias-free dual.
+Stopping criterion: max |projected gradient| < tol for the box family;
+``rho_lo - rho_hi < tol`` (the maximal-violating-pair gap of the equality
+multiplier bracket, LIBSVM's working-set criterion) for the equality family.
 """
 from __future__ import annotations
 
@@ -379,6 +394,8 @@ def solve_with_shrinking(
     the inner solvers report the stopping value from the last *pre-update*
     iterate, which is not the residual of the solution they return.
     """
+    if rounds < 1:
+        raise ValueError(f"shrinking needs rounds >= 1, got {rounds}")
     n = Q.shape[0]
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
     cvec = _broadcast(C, n, Q.dtype)
@@ -400,3 +417,433 @@ def solve_with_shrinking(
         mask = ~(strongly_lo | strongly_hi)
     pg_full = kkt_residual(Q, res.alpha, cvec, p=p)
     return SolveResult(res.alpha, res.grad, total_iters, pg_full)
+
+
+# ---------------------------------------------------------------------------
+# Equality-constrained dual: pairwise (SMO-style) maximal-violating-pair CD
+#
+#     min 1/2 u'Qu + p'u   s.t.  0 <= u <= c,  a'u = d      (a_i != 0)
+#
+# KKT: there exists a multiplier rho with, per coordinate, h_i = g_i / a_i
+# (g = Qu + p) satisfying  h_i = rho on free coordinates and one-sided
+# inequalities at the bounds.  Every coordinate therefore contributes a
+# one-sided bound on rho; optimality <=> the bracket [rho_lo, rho_hi] is
+# non-empty.  The solver repeatedly picks the maximal violating pair
+# (j = argmax of the lower bounds, i = argmin of the upper bounds) and takes
+# the exact minimizer along u + t (e_i/a_i - e_j/a_j), which preserves a'u
+# for every t.  See DESIGN.md §9 for the derivation.
+# ---------------------------------------------------------------------------
+
+def _safe_a(avec: Array) -> Array:
+    return jnp.where(avec == 0.0, 1.0, avec)
+
+
+def _eq_direction_sets(alpha: Array, cvec: Array, avec: Array, mask: Array):
+    """Slot membership for the pairwise step u += t (e_i/a_i - e_j/a_j), t>0.
+
+    ``i_plus``: coordinates that can occupy the i slot (their u moves by
+    +t/a_i, so they need room upward when a_i > 0, downward when a_i < 0);
+    ``i_minus``: the j slot (u moves by -t/a_j).  Coordinates with a == 0
+    never couple to the constraint and are excluded — they belong to the box
+    family and must be handled by the box solvers.
+    """
+    ok = mask & (avec != 0.0)
+    up = alpha < cvec
+    dn = alpha > 0.0
+    i_plus = ok & jnp.where(avec > 0, up, dn)
+    i_minus = ok & jnp.where(avec > 0, dn, up)
+    return i_plus, i_minus
+
+
+def equality_interval(alpha: Array, grad: Array, C, a,
+                      active_mask: Optional[Array] = None):
+    """Bracket [rho_lo, rho_hi] of the equality multiplier at ``alpha``.
+
+    KKT holds iff rho_lo <= rho_hi; the gap ``rho_lo - rho_hi`` is the
+    maximal-violating-pair violation (LIBSVM's working-set criterion,
+    generalized to arbitrary nonzero ``a``).  Empty sides return -inf/+inf.
+    """
+    n = alpha.shape[0]
+    cvec = _broadcast(C, n, alpha.dtype)
+    avec = _broadcast(a, n, alpha.dtype)
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
+    h = grad / _safe_a(avec)
+    rho_lo = jnp.max(jnp.where(i_minus, h, -jnp.inf))
+    rho_hi = jnp.min(jnp.where(i_plus, h, jnp.inf))
+    return rho_lo, rho_hi
+
+
+def kkt_residual_eq(Q: Array, alpha: Array, C, a, p=0.0) -> Array:
+    """Maximal-violating-pair gap at ``alpha`` on the FULL problem (the
+    equality-family analogue of ``kkt_residual``); 0 at any KKT point."""
+    g = Q @ alpha + jnp.asarray(p, alpha.dtype)
+    rho_lo, rho_hi = equality_interval(alpha, g, C, a)
+    return jnp.maximum(rho_lo - rho_hi, 0.0)
+
+
+def equality_rho(alpha: Array, grad: Array, C, a,
+                 active_mask: Optional[Array] = None) -> Array:
+    """Recover the equality multiplier rho (one-class SVM's decision offset)
+    from the bracket midpoint; falls back to the finite side when a bound
+    set is empty (all coordinates pinned at one bound)."""
+    rho_lo, rho_hi = equality_interval(alpha, grad, C, a,
+                                       active_mask=active_mask)
+    mid = 0.5 * (rho_lo + rho_hi)
+    rho = jnp.where(jnp.isfinite(mid), mid,
+                    jnp.where(jnp.isfinite(rho_lo), rho_lo,
+                              jnp.where(jnp.isfinite(rho_hi), rho_hi, 0.0)))
+    return rho
+
+
+def project_box_equality(alpha: Array, C, a, d,
+                         active_mask: Optional[Array] = None,
+                         iters: int = 64) -> Array:
+    """Project onto {0 <= u <= c} ∩ {a'u = d} by moving along ``a``.
+
+    phi(t) = a' clip(u - t a, 0, c) is monotone non-increasing in t, so the
+    feasible point is found by bisection — exact whenever d lies in the
+    attainable interval [sum_{a<0} a c, sum_{a>0} a c] (clamped otherwise).
+    Coordinates outside ``active_mask`` (and a == 0 coordinates) are frozen
+    at their clipped values but still counted toward a'u, so shrunk /
+    padded coordinates keep their contribution.  Pure lax control flow:
+    jit- and vmap-safe, used for feasible warm starts in the divide step.
+
+    Already-feasible starts (to the rounding noise of measuring a'u) are
+    returned bit-exact: the bisection's residual-noise-sized t would
+    otherwise displace every bound coordinate by O(eps) off its bound,
+    re-entering them into the pairwise solver's violating sets for nothing.
+    """
+    n = alpha.shape[0]
+    dtype = alpha.dtype
+    cvec = _broadcast(C, n, dtype)
+    avec = _broadcast(a, n, dtype)
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    amove = jnp.where(mask, avec, 0.0)
+    base = jnp.clip(alpha, 0.0, cvec)
+    d = jnp.asarray(d, dtype)
+
+    def at_t(t):
+        return jnp.clip(base - t * amove, 0.0, cvec)
+
+    def resid(t):
+        return jnp.vdot(avec, at_t(t)) - d
+
+    # |t| >= c_i / |a_i| saturates every moving coordinate
+    T = jnp.max(jnp.where(amove != 0.0,
+                          cvec / jnp.maximum(jnp.abs(amove), 1e-12), 0.0)) + 1.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        go_right = resid(mid) > 0.0
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = lax.fori_loop(0, iters, body, (-T, T))
+    noise = 8.0 * jnp.finfo(dtype).eps \
+        * (jnp.sum(jnp.abs(avec * base)) + jnp.abs(d) + 1.0)
+    return jnp.where(jnp.abs(resid(0.0)) <= noise, base, at_t(0.5 * (lo + hi)))
+
+
+def _pair_step(alpha: Array, cvec: Array, avec: Array, i, j, t):
+    """Apply the pairwise step of length ``t >= 0`` along e_i/a_i - e_j/a_j,
+    clipped to both coordinates' boxes.  Returns (new_ai, di, new_aj, dj)
+    with the realized deltas for the rank-2 gradient update.
+
+    The coordinate whose box cap binds becomes the PRIMARY and lands
+    EXACTLY on its bound (so it leaves the violating index sets); the other
+    coordinate is slaved to the primary's realized delta, which preserves
+    a'u to one rounding.  Driving the step from one fixed side instead
+    stalls: when t is below the f32 ulp of the other coordinate its delta
+    underflows to zero, the slaved bound coordinate never reaches its
+    bound, and the same maximal-violating pair is selected forever.
+    """
+    ai, aj = avec[i], avec[j]
+    t_hi_i = jnp.where(ai > 0, ai * (cvec[i] - alpha[i]), -ai * alpha[i])
+    t_hi_j = jnp.where(aj > 0, aj * alpha[j], aj * (alpha[j] - cvec[j]))
+    t = jnp.clip(t, 0.0, jnp.minimum(t_hi_i, t_hi_j))
+    hit_i = t >= t_hi_i
+    hit_j = t >= t_hi_j
+    bound_i = jnp.where(ai > 0, cvec[i], 0.0)     # i slot moves toward here
+    bound_j = jnp.where(aj > 0, 0.0, cvec[j])     # j slot moves toward here
+    # j primary: j lands exactly on its bound, i is slaved
+    dj_p = bound_j - alpha[j]
+    ai_from_j = jnp.clip(alpha[i] - (aj * dj_p) / ai, 0.0, cvec[i])
+    # i primary: exact bound when its cap binds, else the clipped t-step
+    ai_from_t = jnp.where(hit_i, bound_i,
+                          jnp.clip(alpha[i] + t / ai, 0.0, cvec[i]))
+    new_ai = jnp.where(hit_j, ai_from_j, ai_from_t)
+    di = new_ai - alpha[i]
+    new_aj = jnp.where(hit_j, bound_j,
+                       jnp.clip(alpha[j] - (ai * di) / aj, 0.0, cvec[j]))
+    dj = new_aj - alpha[j]
+    return new_ai, di, new_aj, dj
+
+
+def _restore_equality(alpha: Array, grad: Array, Q_col, cvec: Array,
+                      avec: Array, d, mask: Array):
+    """One exact feasibility-restoration step: absorb the accumulated f32
+    rounding drift of a'u - d into a single coordinate.
+
+    The correction coordinate must stay STRICTLY interior before and after
+    the move: nudging a bound coordinate off its bound re-enters it into the
+    KKT index sets with its full multiplier discrepancy, turning an O(eps)
+    feasibility fix into an O(1) jump of the maximal-violating-pair gap.  An
+    interior coordinate moved by O(drift) changes the gap only by
+    O(||Q|| drift).  Falls back to any maskable coordinate when the iterate
+    is a vertex.  ``Q_col(k)`` returns column k of Q for the gradient fix-up.
+    """
+    r = jnp.vdot(avec, alpha) - jnp.asarray(d, alpha.dtype)
+    cand = jnp.clip(alpha - r / _safe_a(avec), 0.0, cvec)
+    resid = r + avec * (cand - alpha)
+    ok = mask & (avec != 0.0)
+    interior = ok & (alpha > 0.0) & (alpha < cvec) \
+        & (cand > 0.0) & (cand < cvec)
+    score_int = jnp.where(interior, jnp.abs(resid), jnp.inf)
+    k_int = jnp.argmin(score_int)
+    k_any = jnp.argmin(jnp.where(ok, jnp.abs(resid), jnp.inf))
+    k = jnp.where(jnp.isfinite(score_int[k_int]), k_int, k_any)
+    delta = cand[k] - alpha[k]
+    alpha = alpha.at[k].set(cand[k])
+    grad = grad + delta * Q_col(k)
+    return alpha, grad
+
+
+def _pairwise_mvp_loop(alpha, cvec, avec, mask, qdiag, qij_fn, rank2_fn,
+                       full_grad, tol, max_iters, refresh_every):
+    """Shared pairwise maximal-violating-pair engine (dense and matvec
+    front-ends differ only in how Q entries and the rank-2 gradient update
+    are produced).
+
+    Structure: an outer loop of refresh blocks, each an inner loop of up to
+    ``refresh_every`` rank-2 steps on the maintained gradient, followed by
+    an UNCONDITIONAL from-scratch gradient recompute and a stopping test on
+    the fresh gradient.  Two reasons over a single loop with a conditional
+    refresh: (1) under vmap (every divide-step caller) a batched-predicate
+    ``lax.cond`` executes both branches, which would silently run the full
+    recompute every iteration; (2) the convergence test at a block boundary
+    sees the TRUE gradient, so f32 drift accumulated across the block's
+    rank-2 updates cannot make the stopping test lie at tight tolerances.
+    Returns (alpha, grad, iters, pg_max) with ``iters`` counting pair steps
+    and ``pg_max`` the last fresh-gradient violation.
+    """
+    safe = _safe_a(avec)
+
+    def select(alpha, g):
+        i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
+        h = g / safe
+        hi_side = jnp.where(i_plus, h, jnp.inf)
+        lo_side = jnp.where(i_minus, h, -jnp.inf)
+        i = jnp.argmin(hi_side)
+        j = jnp.argmax(lo_side)
+        return i, j, lo_side[j] - hi_side[i]
+
+    def inner_cond(state):
+        _, _, _, k, viol = state
+        return (viol > tol) & (k < refresh_every)
+
+    def inner_body(state):
+        alpha, g, it, k, _ = state
+        i, j, viol = select(alpha, g)
+        ai, aj = avec[i], avec[j]
+        # exact minimizer along v = e_i/a_i - e_j/a_j: phi'(0) = h_i - h_j,
+        # phi'' = Q_ii/a_i^2 + Q_jj/a_j^2 - 2 Q_ij/(a_i a_j) >= 0 (Q PSD)
+        curv = qdiag[i] / (ai * ai) + qdiag[j] / (aj * aj) \
+            - 2.0 * qij_fn(i, j) / (ai * aj)
+        t = jnp.maximum(viol, 0.0) / jnp.maximum(curv, 1e-12)
+        new_ai, di, new_aj, dj = _pair_step(alpha, cvec, avec, i, j, t)
+        alpha = alpha.at[i].set(new_ai).at[j].set(new_aj)
+        g = rank2_fn(g, i, j, di, dj)
+        return alpha, g, it + 1, k + 1, jnp.maximum(viol, 0.0)
+
+    def outer_cond(state):
+        _, _, it, viol = state
+        return (viol > tol) & (it < max_iters)
+
+    def outer_body(state):
+        alpha, g, it, viol = state
+        block = jnp.minimum(refresh_every, max_iters - it)
+        alpha, g, it, _, _ = lax.while_loop(
+            lambda st: inner_cond(st) & (st[3] < block), inner_body,
+            (alpha, g, it, 0, viol))
+        g = full_grad(alpha)
+        _, _, viol = select(alpha, g)
+        return alpha, g, it, jnp.maximum(viol, 0.0)
+
+    g = full_grad(alpha)
+    _, _, viol0 = select(alpha, g)
+    return lax.while_loop(outer_cond, outer_body,
+                          (alpha, g, 0, jnp.maximum(viol0, 0.0)))
+
+
+@partial(jax.jit, static_argnames=("max_iters", "refresh_every"))
+def solve_eq_qp(
+    Q: Array,
+    C,
+    a,
+    d,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 10_000,
+    active_mask: Optional[Array] = None,
+    p=0.0,
+    refresh_every: int = 256,
+) -> SolveResult:
+    """Pairwise maximal-violating-pair CD on a dense Q; every iterate stays
+    on the hyperplane a'u = d.  vmap over leading dims is fine.
+
+    The (possibly infeasible) warm start is first projected onto the
+    feasible set along ``a`` (``project_box_equality``), so cluster
+    sub-solutions gathered by the divide step are always valid starts.
+    ``C``/``a``/``p`` broadcast from scalars; ``active_mask`` freezes
+    coordinates (shrinking / padding) — frozen coordinates keep their value
+    and their a'u contribution.  Stops when the multiplier bracket gap
+    rho_lo - rho_hi, measured on a freshly recomputed gradient every
+    ``refresh_every`` pair steps (one Q @ u matvec, amortized
+    O(n/refresh_every) per step — see ``_pairwise_mvp_loop``), drops below
+    ``tol``.
+    """
+    n = Q.shape[0]
+    dtype = Q.dtype
+    cvec = _broadcast(C, n, dtype)
+    avec = _broadcast(a, n, dtype)
+    pvec = _broadcast(p, n, dtype)
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
+    alpha = project_box_equality(alpha, cvec, avec, d, active_mask=mask)
+
+    alpha, g, iters, pg_max = _pairwise_mvp_loop(
+        alpha, cvec, avec, mask,
+        qdiag=jnp.diagonal(Q),
+        qij_fn=lambda i, j: Q[i, j],
+        rank2_fn=lambda g, i, j, di, dj: g + di * Q[:, i] + dj * Q[:, j],
+        full_grad=lambda al: Q @ al + pvec,
+        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+    alpha, g = _restore_equality(alpha, g, lambda k: Q[:, k], cvec, avec, d,
+                                 mask)
+    return SolveResult(alpha, g, iters, pg_max)
+
+
+def solve_eq_qp_shrink(
+    Q: Array,
+    C,
+    a,
+    d,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 10_000,
+    rounds: int = 3,
+    shrink_margin: float = 10.0,
+    p=0.0,
+) -> SolveResult:
+    """Outer shrinking rounds around the pairwise engine (the equality-family
+    ``solve_with_shrinking``): coordinates pinned at a bound whose multiplier
+    bound h_i sits beyond the current rho estimate by more than
+    ``shrink_margin * tol`` are frozen for the next round; the final round
+    re-activates everything and the returned residual is the full-problem
+    maximal-violating-pair gap.  Frozen coordinates keep their a'u
+    contribution, so every round solves the SAME constrained problem.
+    """
+    if rounds < 1:
+        raise ValueError(f"shrinking needs rounds >= 1, got {rounds}")
+    n = Q.shape[0]
+    dtype = Q.dtype
+    cvec = _broadcast(C, n, dtype)
+    avec = _broadcast(a, n, dtype)
+    alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
+    mask = jnp.ones(n, bool)
+    res = None
+    total_iters = jnp.zeros((), jnp.int32)
+    for r in range(rounds):
+        final = r == rounds - 1
+        m = jnp.ones(n, bool) if final else mask
+        res = solve_eq_qp(Q, C, a, d, alpha0=alpha, tol=tol,
+                          max_iters=max_iters, active_mask=m, p=p)
+        alpha, g = res.alpha, res.grad
+        total_iters = total_iters + res.iters
+        rho = equality_rho(alpha, g, cvec, avec)
+        h = g / _safe_a(avec)
+        mtol = shrink_margin * tol
+        at_lo = alpha <= 0.0
+        at_hi = alpha >= cvec
+        lock_lo = at_lo & jnp.where(avec > 0, h > rho + mtol, h < rho - mtol)
+        lock_hi = at_hi & jnp.where(avec > 0, h < rho - mtol, h > rho + mtol)
+        mask = ~(lock_lo | lock_hi)
+    pg_full = kkt_residual_eq(Q, res.alpha, cvec, avec, p=p)
+    return SolveResult(res.alpha, res.grad, total_iters, pg_full)
+
+
+@partial(jax.jit, static_argnames=("kernel", "max_iters", "grad_chunks",
+                                   "use_pallas", "refresh_every"))
+def solve_eq_qp_matvec(
+    X: Array,
+    y: Array,
+    kernel: Kernel,
+    C,
+    a,
+    d,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 5_000,
+    grad_chunks: int = 16,
+    use_pallas: bool = False,
+    p=0.0,
+    refresh_every: int = 512,
+) -> SolveResult:
+    """Pairwise maximal-violating-pair CD with on-the-fly kernel columns:
+    Q = (y y') ∘ K(X, X) is never materialized.  ``y`` is the task sign
+    vector ``s`` (all ones for one-class SVM, labels for nu-SVC); ``a`` may
+    be mixed-sign.  On the fused path (``use_pallas=True``) the rank-2
+    gradient update streams through ``repro.kernels.ops.cd_column_update``
+    and the gradient init through the streaming ``kernel_matvec`` — the
+    whole solve is ONE jitted program with no host transfer.
+    """
+    n = X.shape[0]
+    dtype = X.dtype
+    cvec = _broadcast(C, n, dtype)
+    avec = _broadcast(a, n, dtype)
+    pvec = _broadcast(p, n, dtype)
+    mask = jnp.ones(n, bool)
+    alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
+    alpha = project_box_equality(alpha, cvec, avec, d)
+
+    from repro.core.kernels import gram_matvec
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+    acc = jnp.promote_types(dtype, jnp.float32)
+
+    def full_grad(al):
+        return (y * gram_matvec(kernel, X, y * al, num_chunks=grad_chunks,
+                                use_pallas=use_pallas)
+                + pvec).astype(acc)
+
+    def qij_fn(i, j):
+        Xb = X[jnp.stack([i, j])]
+        return (y[i] * y[j] * kernel.pairwise(Xb, Xb)[0, 1]).astype(acc)
+
+    def rank2_fn(g, i, j, di, dj):
+        idx = jnp.stack([i, j])
+        Xb, yb = X[idx], y[idx]
+        delta = jnp.stack([di, dj])
+        if use_pallas:
+            # fused rank-2 update: the (n, 2) kernel block stays in VMEM
+            return g + kops.cd_column_update(X, y, Xb, yb * delta,
+                                             kernel).astype(acc)
+        Kb = kernel.pairwise(X, Xb)                          # (n, 2)
+        Qb = ((y[:, None] * yb[None, :]) * Kb).astype(acc)
+        return g + Qb @ delta
+
+    alpha, g, iters, pg_max = _pairwise_mvp_loop(
+        alpha, cvec, avec, mask,
+        qdiag=(y * y * kernel.diag(X)).astype(acc),
+        qij_fn=qij_fn, rank2_fn=rank2_fn, full_grad=full_grad,
+        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+
+    def q_col(k):
+        Kk = kernel.pairwise(X, X[k][None, :])[:, 0]
+        return (y * y[k] * Kk).astype(acc)
+
+    alpha, g = _restore_equality(alpha, g, q_col, cvec, avec, d, mask)
+    return SolveResult(alpha, g, iters, pg_max)

@@ -51,6 +51,10 @@ class TaskDual(NamedTuple):
     the leading class axis shared with the OVA machinery (binary and
     regression use one row).  ``base_index``: (n_dual,) original sample per
     dual coordinate (identity except for SVR's duplicated rows).
+
+    ``A``/``Deq`` select the dual family: ``None`` for the box family, else
+    the (n_rows, n_dual) equality coefficients and (n_rows,) targets of
+    ``a'u = d`` (one-class SVM / nu-SVC — solved by the pairwise engine).
     """
 
     Xd: Array
@@ -58,6 +62,12 @@ class TaskDual(NamedTuple):
     P: Array
     Cvec: Array
     base_index: np.ndarray
+    A: Optional[Array] = None
+    Deq: Optional[Array] = None
+
+    @property
+    def has_equality(self) -> bool:
+        return self.A is not None
 
     @property
     def n_dual(self) -> int:
@@ -81,6 +91,8 @@ class Task:
 
     name = "base"
     is_regression = False
+    label_free = False       # True: ``fit`` ignores y (one-class SVM)
+    has_rho_offset = False   # True: decision f(x) = sum beta_i K(x_i,x) - rho
 
     def build(self, X: Array, Y: Array, C: float) -> TaskDual:
         """Reduce (X, class-stacked Y, cost C) to the generalized dual."""
@@ -166,6 +178,78 @@ class EpsilonSVR(Task):
             P=jnp.concatenate([self.eps - y, self.eps + y])[None, :].astype(X.dtype),
             Cvec=jnp.full((1, 2 * n), C, X.dtype),
             base_index=np.concatenate([np.arange(n), np.arange(n)]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class OneClassSVM(Task):
+    """Schölkopf one-class SVM in the LIBSVM parameterization (label-free).
+
+        min 1/2 a' K a   s.t.  0 <= a_i <= 1,  sum_i a_i = nu * n
+
+    — the equality-constrained family with ``s = 1, p = 0, c = 1, a = 1,
+    d = nu n``.  The multiplier of the equality constraint IS the decision
+    offset rho: f(x) = sum_i alpha_i K(x_i, x) - rho, with f(x) >= 0 on
+    inliers.  ``nu`` bounds both sides of the support: at most a nu
+    fraction of training points fall outside (f < 0) and at least a nu
+    fraction are support vectors.  Identical scaling to sklearn/libsvm, so
+    decisions are directly comparable (tests/test_oneclass_nusvm.py).
+    """
+
+    nu: float = 0.5
+
+    name = "ocsvm"
+    label_free = True
+    has_rho_offset = True
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        if not 0.0 < self.nu <= 1.0:
+            raise ValueError(f"one-class nu must lie in (0, 1], got {self.nu}")
+        n = X.shape[0]
+        ones = jnp.ones((1, n), X.dtype)
+        return TaskDual(
+            Xd=X,
+            S=ones,
+            P=jnp.zeros((1, n), X.dtype),
+            Cvec=ones,
+            base_index=np.arange(n),
+            A=ones,
+            Deq=jnp.asarray([self.nu * n], X.dtype),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class NuSVC(Task):
+    """nu-parameterized classifier — the bias-free nu-SVC dual
+
+        min 1/2 u' Q u   s.t.  0 <= u <= 1,  sum_i u_i = nu * n
+
+    with ``Q = (y y') ∘ K`` (no linear term).  Dropping the bias drops the
+    ``y'u = 0`` coupling exactly as the paper's hinge dual does, leaving the
+    single mass constraint ``e'u = nu n``: nu directly controls the support
+    mass (margin-error fraction <= nu <= SV fraction).  Equivalent to the
+    bias-free C-SVC: if ``alpha`` solves C-SVC at cost C then ``alpha / C``
+    solves NuSVC at ``nu = sum(alpha) / (C n)`` and the decision functions
+    agree up to the positive scale C (pinned in tests/test_oneclass_nusvm.py).
+    """
+
+    nu: float = 0.5
+
+    name = "nu-svc"
+
+    def build(self, X: Array, Y: Array, C: float) -> TaskDual:
+        if not 0.0 < self.nu <= 1.0:
+            raise ValueError(f"nu-SVC nu must lie in (0, 1], got {self.nu}")
+        Y = jnp.asarray(Y)
+        n = Y.shape[-1]
+        return TaskDual(
+            Xd=X,
+            S=Y,
+            P=jnp.zeros_like(Y),
+            Cvec=jnp.ones_like(Y),
+            base_index=np.arange(n),
+            A=jnp.ones_like(Y),
+            Deq=jnp.full((Y.shape[0],), self.nu * n, X.dtype),
         )
 
 

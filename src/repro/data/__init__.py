@@ -2,6 +2,7 @@ from repro.data.synthetic import (
     gaussian_mixture,
     gaussian_mixture_imbalanced,
     gaussian_mixture_multiclass,
+    gaussian_with_outliers,
     checkerboard,
     two_spirals,
     covtype_like,

@@ -89,6 +89,35 @@ def gaussian_mixture_imbalanced(
     return X, y.astype(jnp.float32)
 
 
+def gaussian_with_outliers(
+    key: Array,
+    n: int,
+    d: int = 6,
+    modes: int = 3,
+    spread: float = 0.06,
+    outlier_frac: float = 0.05,
+) -> Tuple[Array, Array]:
+    """Anomaly-detection mixture: inliers from ``modes`` tight Gaussians
+    (centers inside [0.25, 0.75]^d), outliers uniform over [0,1]^d.
+
+    The one-class SVM workload: labels are +1 (inlier) / -1 (outlier) and
+    are for EVALUATION only — training is label-free (the standard
+    contaminated setting: the outliers stay in the training set, and
+    ``nu`` should cover the expected contamination).  With a tight
+    ``spread`` the uniform outliers land far from every mode with
+    overwhelming probability in d >= 4.
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    centers = jax.random.uniform(k1, (modes, d)) * 0.5 + 0.25
+    is_out = jax.random.bernoulli(k2, outlier_frac, (n,))
+    mode = jax.random.randint(k3, (n,), 0, modes)
+    Xin = centers[mode] + spread * jax.random.normal(k4, (n, d))
+    Xout = jax.random.uniform(k5, (n, d))
+    X = jnp.where(is_out[:, None], Xout, Xin)
+    y = jnp.where(is_out, -1.0, 1.0)
+    return X.astype(jnp.float32), y.astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # Regression generators (the epsilon-SVR workload)
 # ---------------------------------------------------------------------------

@@ -52,7 +52,10 @@ class ServingModel(NamedTuple):
     column of collapsed beta coefficients and an EMPTY ``classes`` array —
     the ``task`` field is derived from that static shape, so the jitted
     route→gather→score program is shared and only the final argmax is
-    skipped for regression.
+    skipped for regression.  One-class SVM models are exported with one
+    beta column, a length-1 ``classes`` array (the static task marker) and
+    the decision offset ``rho``: predictions are sign(score - rho), +1 =
+    inlier.
     """
 
     # routing (implicit kernel-kmeans centers, empty centers masked upstream)
@@ -70,7 +73,12 @@ class ServingModel(NamedTuple):
     # cluster (identity padding) — factored ONCE at export, so a request
     # only pays triangular solves
     Lchol: Array       # (k, max_sv, max_sv) lower-triangular
-    classes: Array     # (n_classes,) — empty for regression models
+    classes: Array     # (n_classes,) — empty for regression, (1,) for ocsvm
+    rho: Array = np.float32(0.0)   # decision offset (one-class SVM only)
+    rho_c: Array = np.zeros((0,), np.float32)   # (k,) per-cluster offsets of
+                       # an early-stopped one-class export (empty otherwise):
+                       # the early strategy subtracts the routed cluster's
+                       # local multiplier inside the fused program
 
     @property
     def k(self) -> int:
@@ -82,9 +90,14 @@ class ServingModel(NamedTuple):
 
     @property
     def task(self) -> str:
-        """"svr" | "svc" — derived from the static ``classes`` shape so the
-        branch is jit-safe (no host sync, no non-array pytree leaf)."""
-        return "svr" if self.classes.shape[0] == 0 else "svc"
+        """"svr" | "ocsvm" | "svc" — derived from the static ``classes``
+        shape so the branch is jit-safe (no host sync, no non-array pytree
+        leaf): 0 classes = regression, 1 = one-class, >= 2 = classifier."""
+        if self.classes.shape[0] == 0:
+            return "svr"
+        if self.classes.shape[0] == 1:
+            return "ocsvm"
+        return "svc"
 
 
 def export_serving_model(model, noise: float = 1e-2,
@@ -108,7 +121,20 @@ def export_serving_model(model, noise: float = 1e-2,
     kern = model.config.kernel
     alpha = np.asarray(model.alpha)
     task = getattr(model, "task", None)
-    if task is not None and task.is_regression:
+    rho = 0.0
+    rho_c = np.zeros((0,), np.float32)
+    model_rho_c = getattr(model, "rho_clusters", None)
+    if model_rho_c is not None:
+        rho_c = np.asarray(model_rho_c, np.float32)
+    if task is not None and getattr(task, "has_rho_offset", False):
+        # one-class: one beta column + the offset; classes has the static
+        # length-1 marker shape and serve_batch thresholds score - rho at 0
+        w = np.asarray(model.weights)
+        W = w[:, None]
+        classes = np.asarray([1.0], np.float32)
+        active = w != 0
+        rho = float(model.rho or 0.0)
+    elif task is not None and task.is_regression:
         # regression: one beta column, no classes — serve_batch skips argmax
         w = np.asarray(model.weights)                        # collapsed beta
         W = w[:, None]                                       # (n, 1)
@@ -181,6 +207,7 @@ def export_serving_model(model, noise: float = 1e-2,
         Xsv=Xsv_j, Wsv=jnp.asarray(Wsv), svmask=jnp.asarray(svmask),
         Xall=jnp.asarray(Xall), Wall=jnp.asarray(Wall),
         Lchol=Lchol, classes=jnp.asarray(classes),
+        rho=jnp.asarray(rho, jnp.float32), rho_c=jnp.asarray(rho_c),
     )
     return jax.device_put(sm)
 
@@ -189,20 +216,35 @@ def export_serving_model(model, noise: float = 1e-2,
 # jitted request programs (scores (nq, n_classes); argmax happens on device)
 # ---------------------------------------------------------------------------
 
+def _cluster_offsets(sm: ServingModel) -> Array:
+    """(k,) decision offsets, one per cluster: the per-cluster multipliers
+    rho_c of an early-stopped one-class export when present, else the
+    global rho broadcast (0 for every non-ocsvm model, so applying these
+    unconditionally is a uniform no-op outside the equality family)."""
+    if sm.rho_c.shape[0]:
+        return sm.rho_c
+    return jnp.broadcast_to(jnp.asarray(sm.rho, jnp.float32), (sm.k,))
+
+
 @partial(jax.jit, static_argnames=("kern", "use_pallas"))
 def serve_scores_exact(sm: ServingModel, Xq: Array, kern: Kernel,
                        use_pallas: bool = False) -> Array:
-    return gram(kern, Xq, sm.Xall, use_pallas=use_pallas) @ sm.Wall
+    # sm.rho == 0 for non-ocsvm models; every scorer applies its own offset
+    # so serve_batch never has to know which strategy already subtracted it
+    return gram(kern, Xq, sm.Xall, use_pallas=use_pallas) @ sm.Wall - sm.rho
 
 
 def serve_scores_early(sm: ServingModel, Xq: Array, kern: Kernel, cap: int,
                        use_pallas: bool = False) -> Array:
     """Route + bucketed SV-block scoring — the same jitted program as
     training-side early prediction (``predict._early_program``), fed the
-    packed serving blocks."""
+    packed serving blocks.  The routed cluster's offset (per-cluster rho_c
+    of an early-stopped one-class export, global rho otherwise) is applied
+    inside the fused program."""
     route = KKMeansModel(Xm=sm.Xm, W=sm.Wm, s=sm.sm)
     return _early_program(kern, Xq, route, sm.Xsv, sm.Wsv, cap,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas,
+                          offsets=_cluster_offsets(sm)[:, None])
 
 
 @partial(jax.jit, static_argnames=("kern",))
@@ -210,16 +252,18 @@ def serve_scores_bcm(sm: ServingModel, Xq: Array, kern: Kernel,
                      noise: float = 1e-2) -> Array:
     diag = kern.diag(Xq)
 
-    def per_cluster(Xc, Wc, Lc, mc):
+    def per_cluster(Xc, Wc, Lc, mc, off):
         Kqs = kern.pairwise(Xq, Xc) * mc[None, :]
-        f = Kqs @ Wc                                         # (nq, C)
+        # committee member c votes with ITS local decision f_c - rho_c
+        f = Kqs @ Wc - off                                   # (nq, C)
         # Lchol was factored at export: two triangular solves per request
         sol = jax.scipy.linalg.cho_solve((Lc, True), Kqs.T)  # (s, nq)
         var = jnp.maximum(diag - jnp.einsum("qs,sq->q", Kqs, sol), noise)
         prec = jnp.where(jnp.any(mc), 1.0 / var, 0.0)        # skip empty blocks
         return f * prec[:, None], prec
 
-    fs, ps = jax.vmap(per_cluster)(sm.Xsv, sm.Wsv, sm.Lchol, sm.svmask)
+    fs, ps = jax.vmap(per_cluster)(sm.Xsv, sm.Wsv, sm.Lchol, sm.svmask,
+                                   _cluster_offsets(sm))
     return jnp.sum(fs, 0) / (jnp.sum(ps, 0) + 1e-12)[:, None]
 
 
@@ -228,9 +272,11 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
     """One batched request: returns (predictions, scores).
 
     Predictions are class labels (argmax over score columns) for
-    classification models and raw regression values for ``task == "svr"``
-    models (the single beta-score column, no argmax) — the branch is on a
-    static shape, so both paths stay one compiled program per strategy.
+    classification models, raw regression values for ``task == "svr"``
+    models (the single beta-score column, no argmax), and +/-1
+    inlier/outlier labels for ``task == "ocsvm"`` (sign of score - rho; the
+    returned scores are the offset decision values) — every branch is on a
+    static shape, so each path stays one compiled program per strategy.
     """
     up = resolve_use_pallas(use_pallas)
     if strategy == "exact":
@@ -247,6 +293,10 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
         raise ValueError(f"unknown strategy: {strategy}")
     if sm.task == "svr":
         return scores[:, 0], scores
+    if sm.task == "ocsvm":
+        # every scorer already applied its offset (rho / per-cluster rho_c)
+        raw = scores[:, 0]
+        return jnp.where(raw >= 0, 1.0, -1.0).astype(raw.dtype), raw[:, None]
     return sm.classes[jnp.argmax(scores, axis=1)], scores
 
 
@@ -282,14 +332,15 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
 
 def main(argv=None) -> None:
     from repro.core.dcsvm import fit
-    from repro.core.predict import accuracy_multiclass, mse
-    from repro.core.tasks import EpsilonSVR
+    from repro.core.predict import accuracy_multiclass, f1, mse, recall
+    from repro.core.tasks import EpsilonSVR, OneClassSVM
     from repro.data import (
-        friedman1, gaussian_mixture_multiclass, train_test_split,
+        friedman1, gaussian_mixture_multiclass, gaussian_with_outliers,
+        train_test_split,
     )
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", default="svc", choices=["svc", "svr"])
+    ap.add_argument("--task", default="svc", choices=["svc", "svr", "ocsvm"])
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--classes", type=int, default=3)
     ap.add_argument("--levels", type=int, default=2)
@@ -301,6 +352,8 @@ def main(argv=None) -> None:
     ap.add_argument("--gamma", type=float, default=8.0)
     ap.add_argument("--C", type=float, default=4.0)
     ap.add_argument("--eps", type=float, default=0.1)
+    ap.add_argument("--nu", type=float, default=0.1,
+                    help="one-class support/outlier mass bound")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -308,6 +361,8 @@ def main(argv=None) -> None:
     t0 = time.perf_counter()
     if args.task == "svr":
         X, y = friedman1(jax.random.PRNGKey(args.seed), args.n)
+    elif args.task == "ocsvm":
+        X, y = gaussian_with_outliers(jax.random.PRNGKey(args.seed), args.n)
     else:
         X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(args.seed),
                                            args.n, n_classes=args.classes)
@@ -319,6 +374,11 @@ def main(argv=None) -> None:
         model = fit(cfg, Xtr, ytr, task=EpsilonSVR(eps=args.eps))
         print(f"fit svr: {time.perf_counter()-t0:.1f}s  "
               f"n_sv={len(model.sv_index)}/{Xtr.shape[0]}")
+    elif args.task == "ocsvm":
+        model = fit(cfg, Xtr, task=OneClassSVM(nu=args.nu))  # label-free
+        print(f"fit ocsvm: {time.perf_counter()-t0:.1f}s  "
+              f"n_sv={len(model.sv_index)}/{Xtr.shape[0]}  "
+              f"rho={model.rho:.4f}")
     else:
         model = fit_ova(cfg, Xtr, ytr)
         print(f"fit_ova: {time.perf_counter()-t0:.1f}s  "
@@ -328,6 +388,9 @@ def main(argv=None) -> None:
     pred, _ = serve_batch(sm, Xte, kern, args.strategy)
     if sm.task == "svr":
         print(f"serving mse ({args.strategy}): {mse(yte, pred):.5f}")
+    elif sm.task == "ocsvm":
+        print(f"serving outlier recall ({args.strategy}): "
+              f"{recall(yte, pred, -1.0):.4f}  f1: {f1(yte, pred, -1.0):.4f}")
     else:
         acc = accuracy_multiclass(yte, pred)
         print(f"serving accuracy ({args.strategy}): {acc:.4f}")

@@ -6,11 +6,18 @@
         --dataset friedman1 --eps 0.1
     PYTHONPATH=src python -m repro.launch.train_svm --task weighted-svc \
         --dataset imbalanced --class-weight 20
+    PYTHONPATH=src python -m repro.launch.train_svm --task one-class \
+        --dataset outliers --nu 0.1
+    PYTHONPATH=src python -m repro.launch.train_svm --task nu-svc --nu 0.3
 
 Tasks: ``svc`` (hinge C-SVC), ``weighted-svc`` (cost-sensitive box
 ``c_i = C * w_{y_i}``; ``--class-weight POS[,NEG]``), ``svr``
-(epsilon-insensitive regression; ``--eps``).  Regression reports MSE/MAE,
-weighted classification additionally reports per-class recall.
+(epsilon-insensitive regression; ``--eps``), ``nu-svc`` (nu-parameterized
+classification; ``--nu`` bounds the support mass) and ``one-class``
+(label-free anomaly detection via the equality-constrained dual; ``--nu``
+bounds the outlier fraction).  Regression reports MSE/MAE, weighted
+classification additionally reports per-class recall, one-class reports
+outlier precision/recall/F1 against the generator's ground-truth labels.
 
 Fault tolerance: after every level the (alpha, level, assign) state is
 checkpointed; restart resumes at the next level (the expensive bottom levels
@@ -29,14 +36,15 @@ import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.core import (
-    DCSVMConfig, EpsilonSVR, Kernel, WeightedCSVC, accuracy, fit, mae, mse,
-    predict_early, predict_exact, recall,
+    DCSVMConfig, EpsilonSVR, Kernel, NuSVC, OneClassSVM, WeightedCSVC,
+    accuracy, f1, fit, mae, mse, precision, predict_early, predict_exact,
+    recall,
 )
 from repro.core.dcsvm import DCSVMModel
 from repro.data import (
     checkerboard, covtype_like, friedman1, gaussian_mixture,
-    gaussian_mixture_imbalanced, sinc1d, stratified_split, train_test_split,
-    webspam_like,
+    gaussian_mixture_imbalanced, gaussian_with_outliers, sinc1d,
+    stratified_split, train_test_split, webspam_like,
 )
 
 DATASETS = {
@@ -45,10 +53,12 @@ DATASETS = {
     "checkerboard": lambda k, n: checkerboard(k, n, cells=4),
     "gaussian": lambda k, n: gaussian_mixture(k, n, d=16, modes_per_class=8),
     "imbalanced": lambda k, n: gaussian_mixture_imbalanced(k, n, d=10),
+    "outliers": gaussian_with_outliers,
     "sinc1d": sinc1d,
     "friedman1": friedman1,
 }
 REGRESSION_DATASETS = {"sinc1d", "friedman1"}
+ONECLASS_DATASETS = {"outliers"}
 
 
 def parse_class_weight(spec: str):
@@ -64,7 +74,8 @@ def parse_class_weight(spec: str):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", default="svc",
-                    choices=["svc", "weighted-svc", "svr"])
+                    choices=["svc", "weighted-svc", "svr", "nu-svc",
+                             "one-class"])
     ap.add_argument("--dataset", default="gaussian", choices=sorted(DATASETS))
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--C", type=float, default=4.0)
@@ -74,6 +85,8 @@ def main(argv=None) -> None:
                     help="weighted-svc cost multipliers POS[,NEG] on top of C")
     ap.add_argument("--eps", type=float, default=0.1,
                     help="epsilon-SVR insensitivity tube half-width")
+    ap.add_argument("--nu", type=float, default=0.1,
+                    help="nu-svc / one-class support-mass bound in (0, 1]")
     ap.add_argument("--levels", type=int, default=3)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--m", type=int, default=1000)
@@ -92,6 +105,10 @@ def main(argv=None) -> None:
                  f"{'regression' if args.task == 'svr' else 'classification'} "
                  f"dataset; --dataset {args.dataset} is not one "
                  f"(regression: {sorted(REGRESSION_DATASETS)})")
+    if args.task == "one-class" and args.dataset not in ONECLASS_DATASETS:
+        ap.error(f"--task one-class needs a dataset with inlier/outlier "
+                 f"ground truth for evaluation: {sorted(ONECLASS_DATASETS)}; "
+                 f"got --dataset {args.dataset}")
 
     task = None
     if args.task == "weighted-svc":
@@ -99,6 +116,10 @@ def main(argv=None) -> None:
         task = WeightedCSVC(w_pos=w_pos, w_neg=w_neg)
     elif args.task == "svr":
         task = EpsilonSVR(eps=args.eps)
+    elif args.task == "nu-svc":
+        task = NuSVC(nu=args.nu)
+    elif args.task == "one-class":
+        task = OneClassSVM(nu=args.nu)
 
     key = jax.random.PRNGKey(args.seed)
     X, y = DATASETS[args.dataset](key, args.n)
@@ -145,6 +166,12 @@ def main(argv=None) -> None:
     n_sv = len(model.sv_index)
     if args.task == "svr":
         metrics = f"test mse {mse(yte, pred):.5f} mae {mae(yte, pred):.5f}"
+    elif args.task == "one-class":
+        metrics = (f"outlier recall {recall(yte, pred, -1.0):.4f} "
+                   f"precision {precision(yte, pred, -1.0):.4f} "
+                   f"f1 {f1(yte, pred, -1.0):.4f} | "
+                   f"pred outlier rate {float(np.mean(np.asarray(pred) < 0)):.4f} "
+                   f"(nu={args.nu}) rho={model.rho:.4f}")
     else:
         metrics = f"test acc {accuracy(yte, pred):.4f}"
         if args.task == "weighted-svc":

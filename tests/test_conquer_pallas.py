@@ -254,6 +254,115 @@ def test_svr_fit_backend_parity():
                                rtol=1e-3, atol=2e-3)
 
 
+# ---------------------------------------------------------------------------
+# ISSUE-4: pairwise (equality-constrained) CD parity.  The pairwise engine
+# runs the SAME fused kernels (cd_column_update rank-2 updates, streaming
+# kernel_matvec gradient init) with mixed-sign equality coefficients a over
+# non-tile-aligned shapes — pin Pallas/XLA parity and the on-device property.
+# ---------------------------------------------------------------------------
+
+def _eq_problem(kern, key=31):
+    """Non-tile-aligned n per kernel kind (full-rank Grams => the strictly
+    convex equality QP has a unique optimum, so alpha parity is well
+    posed), mixed-sign a bounded away from zero, interior target d."""
+    shapes = {"rbf": (83, 7), "poly": (61, 7), "linear": (37, 40)}
+    n, d_feat = shapes[kern.kind]
+    rng = np.random.default_rng(key)
+    X = jnp.asarray(((rng.uniform(size=(n, d_feat)) - 0.5) * 2.0)
+                    .astype(np.float32))
+    y = jnp.asarray(np.where(rng.uniform(size=n) > 0.5, 1.0, -1.0)
+                    .astype(np.float32))
+    a = jnp.asarray((np.where(rng.uniform(size=n) > 0.5, 1.0, -1.0)
+                     * rng.uniform(0.5, 1.5, size=n)).astype(np.float32))
+    ac = np.asarray(a, np.float64)
+    lo, hi = np.minimum(ac, 0).sum(), np.maximum(ac, 0).sum()
+    d = float(lo + 0.4 * (hi - lo))
+    return X, y, a, d
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=[k.kind for k in KERNELS])
+def test_eq_pairwise_cd_pallas_parity(kern):
+    """solve_eq_qp_matvec with mixed-sign a on non-tile-aligned shapes:
+    use_pallas=True (fused rank-2 cd_column_update + streaming matvec init)
+    must match the XLA reference path to 1e-5, stay box- and equality-
+    feasible, and reach the same stopping residual.  tol is scale-aware:
+    the poly kernel's values reach (1 + d)^3 here, so 1e-6 sits below the
+    f32 resolution of the multiplier bracket."""
+    from repro.core import solve_eq_qp_matvec
+
+    tol = {"rbf": 1e-6, "poly": 1e-5, "linear": 1e-6}[kern.kind]
+    X, y, a, d = _eq_problem(kern)
+    r_x = solve_eq_qp_matvec(X, y, kern, 1.0, a, d, tol=tol,
+                             max_iters=100_000)
+    r_p = solve_eq_qp_matvec(X, y, kern, 1.0, a, d, tol=tol,
+                             max_iters=100_000, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(r_p.alpha), np.asarray(r_x.alpha),
+                               atol=1e-5)
+    for res in (r_x, r_p):
+        u = np.asarray(res.alpha, np.float64)
+        an = np.asarray(a, np.float64)
+        assert int(res.iters) < 100_000
+        assert u.min() >= -1e-7 and u.max() <= 1.0 + 1e-6
+        scale = np.abs(an * u).sum() + abs(d)
+        assert abs(an @ u - d) <= 4e-6 * max(scale, 1.0)
+        assert float(res.pg_max) <= tol * 1.5
+
+
+def test_eq_pairwise_warm_start_pallas():
+    """Warm-started fused pairwise path converges immediately at the
+    optimum (the feasible-projection entry step must not perturb it)."""
+    from repro.core import solve_eq_qp_matvec
+
+    kern = Kernel("rbf", gamma=2.0)
+    X, y, a, d = _eq_problem(kern, key=33)
+    ref = solve_eq_qp_matvec(X, y, kern, 1.0, a, d, tol=1e-5,
+                             max_iters=200_000)
+    warm = solve_eq_qp_matvec(X, y, kern, 1.0, a, d, alpha0=ref.alpha,
+                              tol=1e-4, max_iters=200_000, use_pallas=True)
+    assert int(warm.iters) <= 2
+    np.testing.assert_allclose(np.asarray(warm.alpha), np.asarray(ref.alpha),
+                               atol=1e-5)
+
+
+def test_eq_solve_loop_stays_on_device():
+    """Satellite: the whole pairwise solve (projection, selection, rank-2
+    updates, feasibility restore) is ONE jitted program — no device-to-host
+    transfer once compiled."""
+    from repro.core import solve_eq_qp_matvec
+
+    kern = Kernel("rbf", gamma=2.0)
+    X, y, a, d = _eq_problem(kern, key=35)
+    args = (X, y, kern, 1.0, a, d)
+    kw = dict(tol=1e-5, max_iters=50_000, use_pallas=True)
+    warm = solve_eq_qp_matvec(*args, **kw)       # compile outside the guard
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = solve_eq_qp_matvec(*args, **kw)
+    np.testing.assert_allclose(np.asarray(res.alpha), np.asarray(warm.alpha))
+
+
+def test_oneclass_fit_backend_parity():
+    """End-to-end one-class fit through the divide/conquer driver: XLA and
+    Pallas backends produce the same decision function and offset."""
+    from repro.core import OneClassSVM
+    from repro.core.predict import decision_exact
+    from repro.data import gaussian_with_outliers
+
+    X, _ = gaussian_with_outliers(jax.random.PRNGKey(6), 700)
+    kern = Kernel("rbf", gamma=4.0)
+    cfg_x = DCSVMConfig(kernel=kern, k=3, levels=1, m=250, tol=1e-4,
+                        kmeans_iters=8, use_pallas=False,
+                        full_gram_threshold=64)
+    cfg_p = dataclasses.replace(cfg_x, use_pallas=True)
+    task = OneClassSVM(nu=0.1)
+    m_x = fit(cfg_x, X, task=task)
+    m_p = fit(cfg_p, X, task=task)
+    assert abs(m_x.rho - m_p.rho) < 1e-3 * (1 + abs(m_x.rho))
+    d_x = decision_exact(m_x, X[:64], use_pallas=False)
+    d_p = decision_exact(m_p, X[:64], use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_x),
+                               rtol=1e-3, atol=2e-3)
+
+
 def test_shrinking_iters_accumulate_on_device():
     """Satellite: solve_with_shrinking returns a device scalar equal to the
     sum of per-round iteration counts (no per-round host sync)."""

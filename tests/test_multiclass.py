@@ -136,6 +136,58 @@ def test_ova_gram_budget_fallback_matches_vmapped():
                                np.asarray(mc_big.alpha), atol=5e-3)
 
 
+def test_ova_cost_vectors_construction():
+    """ova_cost_vectors: machine c's box is C*w_c on its positive side and C
+    elsewhere; dict and array forms agree; bad inputs are rejected."""
+    from repro.core import labels_to_ova, ova_cost_vectors
+
+    classes, Y = labels_to_ova(jnp.asarray([0, 1, 2, 0]))
+    cv = ova_cost_vectors(Y, 2.0, {0: 5.0}, classes)
+    np.testing.assert_allclose(np.asarray(cv[0]), [10.0, 2.0, 2.0, 10.0])
+    np.testing.assert_allclose(np.asarray(cv[1]), [2.0, 2.0, 2.0, 2.0])
+    cv2 = ova_cost_vectors(Y, 2.0, [5.0, 1.0, 1.0], classes)
+    np.testing.assert_allclose(np.asarray(cv2), np.asarray(cv))
+    with pytest.raises(ValueError):
+        ova_cost_vectors(Y, 2.0, {7: 3.0}, classes)
+    with pytest.raises(ValueError):
+        ova_cost_vectors(Y, 2.0, [1.0, 2.0], classes)
+
+
+def test_weighted_ova_improves_minority_recall():
+    """ROADMAP item: per-class cost vectors through fit_ova.  On a heavily
+    imbalanced, overlapping 3-class mixture the plain OVA abandons the
+    minority class; upweighting its machine's positive box buys recall back
+    without collapsing the majority classes."""
+    from repro.core import predict_exact_ova
+    from repro.data import stratified_split
+
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), 4000,
+                                       n_classes=3, d=8, spread=0.45)
+    Xn, yn = np.asarray(X), np.asarray(y)
+    keep = (yn != 0) | (np.random.default_rng(0).uniform(size=len(yn)) < 0.06)
+    Xtr, ytr, Xte, yte = stratified_split(
+        jax.random.PRNGKey(1), jnp.asarray(Xn[keep]), jnp.asarray(yn[keep]),
+        test_frac=0.25)
+    cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=0.5), C=1.0, k=3, levels=1,
+                      m=300, tol=1e-3, kmeans_iters=8, use_pallas=False)
+    plain = fit_ova(cfg, Xtr, ytr)
+    weighted = fit_ova(cfg, Xtr, ytr, class_weight={0: 20.0})
+    pred_plain = np.asarray(predict_exact_ova(plain, Xte))
+    pred_weighted = np.asarray(predict_exact_ova(weighted, Xte))
+
+    def per_class_recall(pred, c):
+        mask = np.asarray(yte) == c
+        return float(np.mean(pred[mask] == c))
+
+    rec_plain = per_class_recall(pred_plain, 0)
+    rec_weighted = per_class_recall(pred_weighted, 0)
+    assert rec_plain <= 0.1, rec_plain           # the failure mode is real
+    assert rec_weighted >= rec_plain + 0.25, (rec_weighted, rec_plain)
+    # majority classes must not collapse
+    assert per_class_recall(pred_weighted, 1) >= 0.7
+    assert per_class_recall(pred_weighted, 2) >= 0.7
+
+
 def test_ova_sv_union_covers_class_svs():
     Xtr, ytr, _, _ = _dataset(500, key=13)
     cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=8.0), C=2.0, k=3, levels=1,
