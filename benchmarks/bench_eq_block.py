@@ -1,0 +1,106 @@
+"""Blocked vs pairwise equality-family conquer benchmark (ISSUE-5).
+
+Times the one-class conquer solve (``solve_eq_qp_matvec``) with the rank-2
+pairwise engine (block=1) against the rank-2B blocked engine (block=B) on
+both backends — on the XLA path the blocked update is a skinny
+``(n, 2B) @ (2B,)`` matmul, on the Pallas path the fused rank-2B
+``cd_column_update`` — plus the end-to-end multilevel one-class ``fit``
+wall-clock with ``eq_block_size`` 1 vs B.  Asserts blocked/pairwise parity
+on the strictly convex dual and MERGES its results into BENCH_oneclass.json
+under the ``eq_block`` key (this benchmark and ``bench_oneclass`` document
+the same workload).
+
+    PYTHONPATH=src python -m benchmarks.run --only eq_block [--dry-run]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, emit_json, timed
+from repro.core import DCSVMConfig, Kernel, OneClassSVM, fit
+from repro.core.solver import solve_eq_qp_matvec
+from repro.data import gaussian_with_outliers, train_test_split
+
+BLOCK = 8
+
+
+def _merge_into_oneclass_json(section: dict) -> None:
+    """BENCH_oneclass.json carries both benches; keep the other sections."""
+    payload = {}
+    if os.path.exists("BENCH_oneclass.json"):
+        try:
+            with open("BENCH_oneclass.json") as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload["eq_block"] = section
+    emit_json("BENCH_oneclass.json", payload)
+
+
+def run(dry_run: bool = False) -> list:
+    n, tol = (240, 1e-4) if dry_run else (1536, 1e-4)
+    nu, gamma = 0.1, 4.0
+    kern = Kernel("rbf", gamma=gamma)
+    X, y = gaussian_with_outliers(jax.random.PRNGKey(0), n)
+    Xtr, _, _, _ = train_test_split(jax.random.PRNGKey(1), X, y)
+    ntr = Xtr.shape[0]
+    ones = jnp.ones(ntr, Xtr.dtype)
+    d = nu * ntr
+    max_iters = 4_000 if dry_run else 40_000
+
+    def solve(block, **kw):
+        return solve_eq_qp_matvec(Xtr, ones, kern, 1.0, 1.0, d, tol=tol,
+                                  max_iters=max_iters, block=block, **kw)
+
+    rows, section, alphas = [], {"block": BLOCK}, {}
+    for backend, kw in {"xla": dict(), "pallas": dict(use_pallas=True)}.items():
+        for engine, block in {"pairwise": 1, "blocked": BLOCK}.items():
+            solve(block, **kw).alpha.block_until_ready()     # warm (compile)
+            res, t = timed(solve, block, **kw)
+            alphas[engine, backend] = res.alpha
+            feas = abs(float(np.asarray(res.alpha, np.float64).sum()) - d)
+            section[f"conquer.{engine}.{backend}"] = {
+                "wall_s": t, "iters": int(res.iters),
+                "pg_max": float(res.pg_max), "eq_residual": feas}
+            rows.append((f"eq_block.conquer.{engine}.{backend}.{ntr}",
+                         t * 1e6, f"iters={int(res.iters)};eq_res={feas:.2e}"))
+        # the RBF Gram is PD on distinct points: the dual optimum is unique,
+        # so blocked must land on the pairwise solution
+        dev = float(jnp.max(jnp.abs(alphas["blocked", backend]
+                                    - alphas["pairwise", backend])))
+        section[f"alpha_max_dev.{backend}"] = dev
+        assert dev < 1e-3, (backend, dev)
+
+    # end-to-end: multilevel one-class fit, rank-2 vs rank-2B cluster solves
+    cfg = DCSVMConfig(kernel=kern, k=4, levels=1 if dry_run else 2,
+                      m=min(500, ntr), tol=1e-3, kmeans_iters=10,
+                      use_pallas=False)
+    task = OneClassSVM(nu=nu)
+    models = {}
+    for engine, bs in {"pairwise": 1, "blocked": BLOCK}.items():
+        c = dataclasses.replace(cfg, eq_block_size=bs)
+        fit(c, Xtr, task=task)                               # warm (compile)
+        models[engine], t = timed(lambda c=c: fit(c, Xtr, task=task))
+        section[f"fit.{engine}"] = {
+            "wall_s": t, "eq_block_size": bs,
+            "rho": float(models[engine].rho),
+            "n_sv": int(len(models[engine].sv_index))}
+        rows.append((f"eq_block.fit.{engine}.{ntr}", t * 1e6,
+                     f"eq_block_size={bs}"))
+    rho_dev = abs(models["blocked"].rho - models["pairwise"].rho)
+    section["fit_rho_dev"] = rho_dev
+    assert rho_dev < 1e-2 * (1 + abs(models["pairwise"].rho)), rho_dev
+    section["problem"] = {"n_train": int(ntr), "nu": nu, "gamma": gamma,
+                          "tol": tol, "dry_run": dry_run}
+    _merge_into_oneclass_json(section)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

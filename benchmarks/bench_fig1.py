@@ -36,10 +36,13 @@ def run(n: int = 2000) -> list:
         from repro.core.dcsvm import _solve_clusters
         part = Partition.build(rand_assign, k, model.partition.model)
         mask = jnp.asarray(part.mask)
-        # _solve_clusters takes class-stacked (k, n_classes, nc) labels/duals
+        # _solve_clusters takes class-stacked (k, n_rows, nc) sign/linear/
+        # box/dual vectors (the generalized dual; hinge: s=y, p=-1, c=C)
         yc = part.gather(ytr)[:, None, :]
+        pc = jnp.full_like(yc, -1.0)
+        cc = jnp.full_like(yc, C)
         ac = jnp.where(mask, part.gather(jnp.zeros(Xtr.shape[0])), 0.0)[:, None, :]
-        ac = _solve_clusters(cfg, part.gather(Xtr), yc, ac, mask)
+        ac = _solve_clusters(cfg, part.gather(Xtr), yc, pc, cc, ac, mask)
         a_rand = part.scatter(ac[:, 0, :], Xtr.shape[0])
         f_rand = float(0.5 * a_rand @ Q @ a_rand - a_rand.sum())
         bound_rand = theorem1_bound(kern, Xtr, jnp.asarray(rand_assign), C)

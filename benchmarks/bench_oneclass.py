@@ -7,6 +7,15 @@ backends, then runs the full multilevel ``fit`` + beta-plus-rho serving
 export.  Emits BENCH_oneclass.json with wall times, backend parity, the
 equality-feasibility residual, and outlier-detection F1 vs the
 predict-the-majority baseline.
+
+Also runs the early-prediction bound experiment (ROADMAP item 3): measures
+``max |f_early(x) - f(x)|`` of eq.-11 one-class serving against the
+``D(pi)`` + rho_c-spread bound of ``bounds.oneclass_early_gap_bound`` —
+both the a-priori Theorem-1 form and the semi-empirical form with the
+measured dual drift — and records the per-term decomposition plus
+tightness ratios under ``early_bound``.  (The blocked-vs-pairwise conquer
+comparison lives in ``bench_eq_block.py`` and merges into the same
+BENCH_oneclass.json.)
 """
 from __future__ import annotations
 
@@ -85,6 +94,32 @@ def run(dry_run: bool = False) -> list:
     assert test_f1 > 0.0, "detector must beat the all-inlier baseline"
     rows.append((f"oneclass.fit.{ntr}", t_fit * 1e6,
                  f"f1={test_f1:.4f};n_sv={len(model.sv_index)}"))
+
+    # ---- early-prediction bound experiment (ROADMAP item 3) --------------
+    from repro.core.bounds import oneclass_early_gap_bound
+    from repro.core.kkmeans import assign_points
+    from repro.core.predict import decision_early, decision_exact
+
+    nq = min(256, Xte.shape[0])
+    Xq = Xte[:nq]
+    f_e = np.asarray(decision_early(model_e, Xq), np.float64)
+    f_x = np.asarray(decision_exact(model, Xq), np.float64)
+    gap = float(np.max(np.abs(f_e - f_x)))
+    sigma_n = float(np.linalg.eigvalsh(
+        np.asarray(kern.pairwise(Xtr, Xtr), np.float64)).min())
+    cid_q = assign_points(kern, model_e.partition.model, Xq)[0]
+    b = oneclass_early_gap_bound(
+        kern, Xtr, model_e.partition.assign, model_e.alpha, model.rho,
+        model_e.rho_clusters, Xq, cid_q, sigma_n, alpha_exact=model.alpha)
+    assert gap <= b["bound_measured"] * (1 + 1e-6) + 1e-6, (gap, b)
+    assert gap <= b["bound"] * (1 + 1e-6) + 1e-6, (gap, b)
+    results["early_bound"] = dict(
+        b, measured_gap=gap, n_queries=int(nq),
+        tightness_measured=gap / max(b["bound_measured"], 1e-12),
+        tightness_apriori=gap / max(b["bound"], 1e-12))
+    rows.append((f"oneclass.early_bound.{ntr}", 0.0,
+                 f"gap={gap:.4f};bound_meas={b['bound_measured']:.4f};"
+                 f"bound={b['bound']:.2e}"))
     emit_json("BENCH_oneclass.json", results)
     return rows
 

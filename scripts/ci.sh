@@ -3,8 +3,11 @@
 # fused conquer path / serving engine (and their BENCH_*.json artifacts) are
 # caught early.
 #
-#   scripts/ci.sh            # full tier-1 + kernels/serve bench smoke
-#   scripts/ci.sh --fast     # tests only
+#   scripts/ci.sh            # full tier-1 + kernels/serve/svr/oneclass/
+#                            # eq-block bench smoke
+#   scripts/ci.sh --fast     # quick local loop: tests only, and the
+#                            # hypothesis-backed property suite is skipped
+#                            # via its pytest marker (-m "not properties")
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -26,11 +29,16 @@ if python -c "import hypothesis" >/dev/null 2>&1; then
 fi
 # the ${arr[@]+...} guard keeps the empty-array expansion safe under
 # `set -u` on bash < 4.4 (macOS system bash)
-python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
-
-if [[ "${1:-}" != "--fast" ]]; then
+if [[ "${1:-}" == "--fast" ]]; then
+    # quick local loop: skip the (hypothesis-backed or fixed-seed-grid)
+    # solver conformance suite via its marker; everything else still runs
+    python -m pytest -x -q -m "not properties" ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
+else
+    python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
-    # kernel, on the conquer solver, and on the generalized SVR + one-class
-    # duals; writes BENCH_{conquer,serve,svr,oneclass}.json
-    python -m benchmarks.run --only kernels,serve,svr,oneclass --dry-run
+    # kernel, on the conquer solver, on the generalized SVR + one-class
+    # duals, and on the blocked (rank-2B) vs pairwise equality engines;
+    # writes BENCH_{conquer,serve,svr,oneclass}.json
+    python -m benchmarks.run --only kernels,serve,svr,oneclass,eq_block \
+        --dry-run
 fi

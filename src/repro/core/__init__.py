@@ -11,7 +11,9 @@ from repro.core.kernels import (
 from repro.core.solver import (
     SolveResult,
     equality_interval,
+    equality_interval_grouped,
     equality_rho,
+    equality_rho_grouped,
     kkt_residual,
     kkt_residual_eq,
     objective,
@@ -21,6 +23,7 @@ from repro.core.solver import (
     solve_box_qp_block,
     solve_box_qp_matvec,
     solve_eq_qp,
+    solve_eq_qp_block,
     solve_eq_qp_matvec,
     solve_eq_qp_shrink,
     solve_with_shrinking,

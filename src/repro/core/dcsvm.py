@@ -54,6 +54,11 @@ class DCSVMConfig:
     max_iters: int = 30_000        # per-(sub)problem CD iteration cap
     block: int = 0                 # 0 = paper-faithful 1-coordinate CD; >0 = block CD
     sweeps: int = 4                # inner sweeps for block CD
+    eq_block_size: int = 1         # equality-family rank-2B block: B maximal-
+                                   # violating pairs per outer iteration
+                                   # (solve_eq_qp_block / blocked matvec);
+                                   # <= 1 falls back to the rank-2 pairwise
+                                   # engine (solve_eq_qp)
     adaptive: bool = True          # sample kmeans points from lower-level SVs
     refine: bool = True            # refine pass on level-1 SVs before final solve
     balanced: bool = True
@@ -118,33 +123,42 @@ def _map_classes(fn, args, fits_budget: bool):
     return jax.lax.map(lambda t: fn(*t), args)
 
 
-def _split_eq_targets(Ac: Array, Cc: Array, mask: Array, d_total: Array) -> Array:
-    """Proportional split of the global equality target over clusters.
+def _split_eq_targets(Ac: Array, Cc: Array, mask: Array, Gc: Array,
+                      d_total: Array, n_groups: int) -> Array:
+    """Proportional split of the global equality target(s) over clusters.
 
-    ``Ac``/``Cc``: (k, n_rows, nc) gathered equality coefficients and boxes,
-    ``mask``: (k, nc), ``d_total``: (n_rows,).  Each cluster's sub-target
-    ``d_c`` sits at the same relative position inside the cluster's
-    attainable interval [lo_c, hi_c] = [sum_{a<0} a c, sum_{a>0} a c] as
-    ``d`` sits inside the global one — so every sub-QP is feasible and the
-    sub-targets sum exactly to ``d`` (the concatenated cluster solutions are
-    a feasible global warm start).  For the all-positive ``a`` of one-class
-    SVM / nu-SVC this is the capacity-proportional split d_c = d * cap_c/cap.
+    ``Ac``/``Cc``/``Gc``: (k, n_rows, nc) gathered equality coefficients,
+    boxes, and constraint-group ids, ``mask``: (k, nc), ``d_total``:
+    (n_rows, n_groups).  Per group g, each cluster's sub-target ``d_c,g``
+    sits at the same relative position inside the cluster's attainable
+    interval [lo_c, hi_c] = [sum_{a<0} a c, sum_{a>0} a c] (over the
+    cluster's group-g members) as ``d_g`` sits inside the global one — so
+    every sub-QP is feasible and the sub-targets sum exactly to ``d_g``
+    (the concatenated cluster solutions are a feasible global warm start);
+    a cluster with no group-g members gets ``d_c,g = 0``.  For the
+    all-positive ``a`` of the shipping tasks this is the
+    capacity-proportional split d_c = d * cap_c/cap per group.  Returns
+    (k, n_rows, n_groups).
     """
     m = mask[:, None, :]
-    contrib = jnp.where(m, Ac * Cc, 0.0)
-    hi_c = jnp.sum(jnp.maximum(contrib, 0.0), axis=-1)     # (k, n_rows)
-    lo_c = jnp.sum(jnp.minimum(contrib, 0.0), axis=-1)
-    lo = jnp.sum(lo_c, axis=0)                             # (n_rows,)
-    hi = jnp.sum(hi_c, axis=0)
-    span = jnp.maximum(hi - lo, 1e-12)
-    frac = (jnp.clip(d_total, lo, hi) - lo) / span
-    return lo_c + frac[None, :] * (hi_c - lo_c)
+    out = []
+    for g in range(n_groups):
+        contrib = jnp.where(m & (Gc == g), Ac * Cc, 0.0)
+        hi_c = jnp.sum(jnp.maximum(contrib, 0.0), axis=-1)     # (k, n_rows)
+        lo_c = jnp.sum(jnp.minimum(contrib, 0.0), axis=-1)
+        lo = jnp.sum(lo_c, axis=0)                             # (n_rows,)
+        hi = jnp.sum(hi_c, axis=0)
+        span = jnp.maximum(hi - lo, 1e-12)
+        frac = (jnp.clip(d_total[:, g], lo, hi) - lo) / span
+        out.append(lo_c + frac[None, :] * (hi_c - lo_c))
+    return jnp.stack(out, axis=-1)
 
 
 def _solve_clusters(
     cfg: DCSVMConfig, Xc: Array, sc: Array, pc: Array, cc: Array, ac: Array,
     mask: Array, use_pallas: bool = False,
-    aeq: Optional[Array] = None, deq: Optional[Array] = None,
+    aeq: Optional[Array] = None, geq: Optional[Array] = None,
+    deq: Optional[Array] = None, n_groups: int = 1,
 ) -> Array:
     """Solve the independent generalized sub-QPs of one level.
     Xc: (k, nc, d), mask: (k, nc); sc/pc/cc/ac are class-stacked
@@ -153,10 +167,12 @@ def _solve_clusters(
     label-independent, so one Gram per cluster serves every row and all
     k * n_rows sub-QPs run in a single vmapped CD call.
 
-    ``aeq``/``deq`` (equality family): (k, n_rows, nc) coefficients and the
-    (k, n_rows) per-cluster targets from ``_split_eq_targets`` — each
-    sub-QP keeps its own hyperplane ``a'u_c = d_c`` via the pairwise engine
-    (warm starts are projected feasible inside the solver)."""
+    ``aeq``/``geq``/``deq`` (equality family): (k, n_rows, nc) coefficients
+    and group ids plus the (k, n_rows, n_groups) per-cluster targets from
+    ``_split_eq_targets`` — each sub-QP keeps its own hyperplane(s)
+    ``a'u_c = d_c,g`` via the pairwise (``eq_block_size <= 1``) or rank-2B
+    blocked engine (warm starts are projected feasible inside the
+    solver)."""
     k, nc, _ = Xc.shape
     n_cls = sc.shape[1]
     has_eq = aeq is not None
@@ -172,12 +188,19 @@ def _solve_clusters(
             Qi = (si[:, None] * si[None, :]) * Kz + eye_pad
             ai = jnp.where(mi, ai, 0.0)
             if has_eq:
-                aqi, dqi = eqi
-                res = S.solve_eq_qp(
-                    Qi, jnp.where(mi, ci, 0.0), jnp.where(mi, aqi, 0.0), dqi,
-                    alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
-                    active_mask=mi, p=pi,
-                )
+                aqi, gqi, dqi = eqi
+                eq_kw = dict(alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                             active_mask=mi, p=pi, gid=gqi,
+                             n_groups=n_groups)
+                cb = jnp.where(mi, ci, 0.0)
+                ab = jnp.where(mi, aqi, 0.0)
+                if cfg.eq_block_size > 1:
+                    res = S.solve_eq_qp_block(
+                        Qi, cb, ab, dqi, block=cfg.eq_block_size,
+                        sweeps=cfg.sweeps, **eq_kw,
+                    )
+                else:
+                    res = S.solve_eq_qp(Qi, cb, ab, dqi, **eq_kw)
             elif cfg.block > 0 and cfg.block < nc:
                 res = S.solve_box_qp_block(
                     Qi, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
@@ -192,7 +215,7 @@ def _solve_clusters(
 
         return jax.vmap(per_class)(Si, Pi, Ci, Ai, *eq)      # (n_cls, nc)
 
-    args = (Xc, sc, pc, cc, ac, mask) + ((aeq, deq) if has_eq else ())
+    args = (Xc, sc, pc, cc, ac, mask) + ((aeq, geq, deq) if has_eq else ())
     # sequential sweep bounds peak memory at one cluster's Grams
     return _map_classes(one, args, k * n_cls * nc * nc <= cfg.gram_budget)
 
@@ -211,19 +234,29 @@ def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
     fits = td.S.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget
 
     if td.has_equality:
-        # sub-target: the full target minus the frozen complement's a'u
-        # (the complement is the non-SV set, i.e. u = 0, so d_sub == d —
-        # computed explicitly to stay correct for any idx)
-        ds = td.Deq - jnp.sum(td.A * alpha, axis=-1) \
-            + jnp.sum(td.A[:, idx] * alpha[:, idx], axis=-1)
+        # per-group sub-targets: the full targets minus the frozen
+        # complement's a'u (the complement is the non-SV set, i.e. u = 0,
+        # so d_sub == d — computed explicitly to stay correct for any idx)
+        G = td.n_groups
+        gids = td.group_ids
+        oh = gids[..., None] == jnp.arange(G)            # (n_rows, nd, G)
+        au = (td.A * alpha)[..., None] * oh
+        ds = td.Deq - jnp.sum(au, axis=1) + jnp.sum(au[:, idx], axis=1)
 
-        def per_class_eq(si, pi, ci, ai, aqi, dqi):
+        def per_class_eq(si, pi, ci, ai, aqi, gqi, dqi):
             Qs = (si[:, None] * si[None, :]) * Ks
-            res = S.solve_eq_qp(Qs, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
-                                max_iters=cfg.max_iters, p=pi)
+            eq_kw = dict(alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
+                         p=pi, gid=gqi, n_groups=G)
+            if cfg.eq_block_size > 1:
+                res = S.solve_eq_qp_block(Qs, ci, aqi, dqi,
+                                          block=cfg.eq_block_size,
+                                          sweeps=cfg.sweeps, **eq_kw)
+            else:
+                res = S.solve_eq_qp(Qs, ci, aqi, dqi, **eq_kw)
             return res.alpha
 
-        new = _map_classes(per_class_eq, (ss, ps, cs, as_, td.A[:, idx], ds),
+        new = _map_classes(per_class_eq,
+                           (ss, ps, cs, as_, td.A[:, idx], gids[:, idx], ds),
                            fits)
         return alpha.at[:, idx].set(new)
 
@@ -259,15 +292,18 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
         K = gram(cfg.kernel, td.Xd, td.Xd, use_pallas=use_pallas)
 
         if td.has_equality:
-            def per_class_eq(si, pi, ci, ai, aqi, dqi):
+            def per_class_eq(si, pi, ci, ai, aqi, gqi, dqi):
                 Q = (si[:, None] * si[None, :]) * K
                 return S.solve_eq_qp_shrink(
                     Q, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
                     max_iters=cfg.max_iters, rounds=cfg.shrink_rounds, p=pi,
+                    block=cfg.eq_block_size, sweeps=cfg.sweeps, gid=gqi,
+                    n_groups=td.n_groups,
                 )
 
             return _map_classes(
-                per_class_eq, (td.S, td.P, td.Cvec, alpha, td.A, td.Deq),
+                per_class_eq,
+                (td.S, td.P, td.Cvec, alpha, td.A, td.group_ids, td.Deq),
                 n_cls * n * n <= cfg.gram_budget)
 
         def per_class(si, pi, ci, ai):
@@ -281,14 +317,16 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                             n_cls * n * n <= cfg.gram_budget)
 
     if td.has_equality:
-        def per_class_eq_mv(si, pi, ci, ai, aqi, dqi):
+        def per_class_eq_mv(si, pi, ci, ai, aqi, gqi, dqi):
             return S.solve_eq_qp_matvec(
                 td.Xd, si, cfg.kernel, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
                 max_iters=cfg.max_iters, use_pallas=use_pallas, p=pi,
+                block=cfg.eq_block_size, sweeps=cfg.sweeps, gid=gqi,
+                n_groups=td.n_groups,
             )
 
         return jax.vmap(per_class_eq_mv)(td.S, td.P, td.Cvec, alpha,
-                                         td.A, td.Deq)
+                                         td.A, td.group_ids, td.Deq)
 
     # the (cap, n) cache buffer(s) count against the same memory budget as
     # the stacked cluster Grams
@@ -370,15 +408,18 @@ def _fit_algorithm1(
         cc = jnp.moveaxis(dpart.gather(td.Cvec.T), -1, 1)
         ac = jnp.moveaxis(dpart.gather(alpha.T), -1, 1)
         ac = jnp.where(mask[:, None, :], ac, 0.0)
-        aeqc = deqc = None
+        aeqc = geqc = deqc = None
         if td.has_equality:
-            # split the global target a'u = d proportionally over clusters;
-            # the pairwise sub-solver projects each gathered warm start onto
-            # its own hyperplane a'u_c = d_c
+            # split the global target(s) a'u = d_g proportionally over
+            # clusters per constraint group; the pairwise/blocked sub-solver
+            # projects each gathered warm start onto its own hyperplane(s)
             aeqc = jnp.moveaxis(dpart.gather(td.A.T), -1, 1)
-            deqc = _split_eq_targets(aeqc, cc, mask, jnp.asarray(td.Deq))
+            geqc = jnp.moveaxis(dpart.gather(td.group_ids.T), -1, 1)
+            deqc = _split_eq_targets(aeqc, cc, mask, geqc,
+                                     jnp.asarray(td.Deq), td.n_groups)
         ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
-                             use_pallas=use_pallas, aeq=aeqc, deq=deqc)
+                             use_pallas=use_pallas, aeq=aeqc, geq=geqc,
+                             deq=deqc, n_groups=max(td.n_groups, 1))
         alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
@@ -420,17 +461,20 @@ def _fit_algorithm1(
     return alpha, partition, stats, False
 
 
-def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
-                          partition: Partition) -> Array:
-    """Per-cluster equality multipliers of an early-stopped model: cluster
-    c's local sub-QP was solved with its own constraint a'u_c = d_c, so its
-    decision offset is the LOCAL multiplier rho_c (the global interval of a
-    concatenated early solution is meaningless — the local levels differ by
-    O(1)).  One per-cluster Gram matvec, same memory shape as a level
-    solve — including the level solve's budget fallback (a sequential sweep
-    when the stacked cluster Grams exceed ``gram_budget``).  Equality tasks
-    keep n_dual == n_base, so the base partition indexes the dual
-    coordinates directly."""
+def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, task: Task,
+                          alpha: Array, partition: Partition) -> Array:
+    """Per-cluster decision offsets of an early-stopped model: cluster c's
+    local sub-QP was solved with its own constraint(s) a'u_c = d_c,g, so
+    its offset is the LOCAL multiplier combination rho_c (the global
+    interval of a concatenated early solution is meaningless — the local
+    levels differ by O(1)).  The offset recovery is delegated to
+    ``task.recover_offset`` (single-constraint bracket midpoint for
+    one-class SVM; the per-group r_+/r_- bias combination for two-
+    constraint nu-SVC).  One per-cluster Gram matvec, same memory shape as
+    a level solve — including the level solve's budget fallback (a
+    sequential sweep when the stacked cluster Grams exceed
+    ``gram_budget``).  Equality tasks keep n_dual == n_base, so the base
+    partition indexes the dual coordinates directly."""
     use_pallas = resolve_use_pallas(cfg.use_pallas)
     Xc = partition.gather(td.Xd)
     mask = jnp.asarray(partition.mask)
@@ -438,30 +482,35 @@ def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
     pc = partition.gather(td.P[0])
     cc = partition.gather(td.Cvec[0])
     aq = partition.gather(td.A[0])
+    gq = partition.gather(td.group_ids[0])
     uc = partition.gather(alpha[0])
 
-    def one(Xi, si, pi, ci, ai, ui, mi):
+    def one(Xi, si, pi, ci, ai, gi_, ui, mi):
         Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
         mm = mi[:, None] & mi[None, :]
         Kz = jnp.where(mm, Ki, 0.0)
         ui = jnp.where(mi, ui, 0.0)
         gi = si * (Kz @ (si * ui)) + pi
-        return S.equality_rho(ui, gi, jnp.where(mi, ci, 0.0),
-                              jnp.where(mi, ai, 0.0), active_mask=mi)
+        return task.recover_offset(ui, gi, jnp.where(mi, ci, 0.0),
+                                   jnp.where(mi, ai, 0.0), gi_,
+                                   active_mask=mi)
 
-    return _map_classes(one, (Xc, sc, pc, cc, aq, uc, mask),
+    return _map_classes(one, (Xc, sc, pc, cc, aq, gq, uc, mask),
                         partition.k * partition.nc ** 2 <= cfg.gram_budget)
 
 
-def _recover_rho(cfg: DCSVMConfig, td: TaskDual, alpha: Array) -> float:
-    """Equality multiplier rho at the returned dual (the decision offset of
-    one-class SVM): recomputes the full gradient with one kernel matvec and
-    takes the midpoint of the KKT multiplier bracket."""
+def _recover_rho(cfg: DCSVMConfig, td: TaskDual, task: Task,
+                 alpha: Array) -> float:
+    """Decision offset rho at the returned dual (one-class SVM's equality
+    multiplier; minus the bias for two-constraint nu-SVC): recomputes the
+    full gradient with one kernel matvec and reads the task's combination
+    of the KKT multiplier bracket(s)."""
     up = resolve_use_pallas(cfg.use_pallas)
     s = td.S[0]
     g = s * gram_matvec(cfg.kernel, td.Xd, s * alpha[0], use_pallas=up) \
         + td.P[0]
-    return float(S.equality_rho(alpha[0], g, td.Cvec[0], td.A[0]))
+    return float(task.recover_offset(alpha[0], g, td.Cvec[0], td.A[0],
+                                     td.group_ids[0]))
 
 
 def fit(
@@ -494,9 +543,10 @@ def fit(
     beta = td.collapse(alpha)[0]
     rho = rho_clusters = None
     if task.has_rho_offset:
-        rho = _recover_rho(cfg, td, alpha)
+        rho = _recover_rho(cfg, td, task, alpha)
         if is_early and partition is not None:
-            rho_clusters = _recover_rho_clusters(cfg, td, alpha, partition)
+            rho_clusters = _recover_rho_clusters(cfg, td, task, alpha,
+                                                 partition)
     return DCSVMModel(cfg, X, y, alpha[0], partition, is_early, stats,
                       task=task, beta=beta, rho=rho,
                       rho_clusters=rho_clusters)

@@ -36,13 +36,30 @@ a single vmapped call):
                             materializes Q (top-level conquer at large n).
 * ``solve_eq_qp``         — pairwise maximal-violating-pair CD on a dense Q
                             for the equality-constrained family.
-* ``solve_eq_qp_shrink``  — LIBSVM-style outer shrinking rounds around it.
+* ``solve_eq_qp_block``   — rank-2B blocked variant: B maximal-violating
+                            pairs per outer iteration, solved as a coupled
+                            2Bx2B sub-QP with one coupling row per group
+                            (MXU-shaped like ``solve_box_qp_block``).
+* ``solve_eq_qp_shrink``  — LIBSVM-style outer shrinking rounds around the
+                            pairwise / blocked engines.
 * ``solve_eq_qp_matvec``  — the same pairwise engine with on-the-fly kernel
-                            columns (fused Pallas path available).
+                            columns (fused Pallas path available); with
+                            ``block > 1`` the gradient update is the fused
+                            rank-2B ``cd_column_update``.
+
+Group decomposition (``gid``/``n_groups``): the equality solvers accept a
+partition of the coordinates into ``n_groups`` disjoint groups, each with
+its OWN single constraint ``sum_{i in g} a_i u_i = d_g``.  Pairs are always
+drawn within one group, so every constraint is preserved exactly.  This is
+how the two-constraint nu-SVC dual (``e'u = nu n`` and ``y'u = 0``) is
+solved: with +/-1 labels the pair decomposes into one mass constraint per
+class group (DESIGN.md §10).  ``n_groups = 1`` (the default) is the plain
+one-constraint family.
 
 Stopping criterion: max |projected gradient| < tol for the box family;
-``rho_lo - rho_hi < tol`` (the maximal-violating-pair gap of the equality
-multiplier bracket, LIBSVM's working-set criterion) for the equality family.
+``max_g (rho_lo_g - rho_hi_g) < tol`` (the maximal-violating-pair gap of
+the per-group equality multiplier brackets, LIBSVM's working-set
+criterion) for the equality family.
 """
 from __future__ import annotations
 
@@ -455,6 +472,35 @@ def _eq_direction_sets(alpha: Array, cvec: Array, avec: Array, mask: Array):
     return i_plus, i_minus
 
 
+def _as_gid(gid, n: int) -> Array:
+    """``None``-or-array group ids -> (n,) int32 (single group by default)."""
+    if gid is None:
+        return jnp.zeros(n, jnp.int32)
+    return jnp.asarray(gid, jnp.int32)
+
+
+def _broadcast_d(d, n_groups: int, dtype) -> Array:
+    """Scalar-or-vector equality target(s) -> (n_groups,) vector."""
+    return jnp.broadcast_to(jnp.asarray(d, dtype).reshape(-1), (n_groups,))
+
+
+def equality_interval_grouped(alpha: Array, grad: Array, C, a, gid,
+                              n_groups: int,
+                              active_mask: Optional[Array] = None):
+    """Per-group brackets [rho_lo_g, rho_hi_g] of the equality multipliers
+    at ``alpha`` — (n_groups,) arrays; empty sides return -inf/+inf."""
+    n = alpha.shape[0]
+    cvec = _broadcast(C, n, alpha.dtype)
+    avec = _broadcast(a, n, alpha.dtype)
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    ingrp = _as_gid(gid, n)[None, :] == jnp.arange(n_groups)[:, None]
+    i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
+    h = grad / _safe_a(avec)
+    rho_lo = jnp.max(jnp.where(ingrp & i_minus, h, -jnp.inf), axis=1)
+    rho_hi = jnp.min(jnp.where(ingrp & i_plus, h, jnp.inf), axis=1)
+    return rho_lo, rho_hi
+
+
 def equality_interval(alpha: Array, grad: Array, C, a,
                       active_mask: Optional[Array] = None):
     """Bracket [rho_lo, rho_hi] of the equality multiplier at ``alpha``.
@@ -463,23 +509,32 @@ def equality_interval(alpha: Array, grad: Array, C, a,
     maximal-violating-pair violation (LIBSVM's working-set criterion,
     generalized to arbitrary nonzero ``a``).  Empty sides return -inf/+inf.
     """
-    n = alpha.shape[0]
-    cvec = _broadcast(C, n, alpha.dtype)
-    avec = _broadcast(a, n, alpha.dtype)
-    mask = jnp.ones(n, bool) if active_mask is None else active_mask
-    i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
-    h = grad / _safe_a(avec)
-    rho_lo = jnp.max(jnp.where(i_minus, h, -jnp.inf))
-    rho_hi = jnp.min(jnp.where(i_plus, h, jnp.inf))
-    return rho_lo, rho_hi
+    rho_lo, rho_hi = equality_interval_grouped(alpha, grad, C, a, None, 1,
+                                               active_mask=active_mask)
+    return rho_lo[0], rho_hi[0]
 
 
-def kkt_residual_eq(Q: Array, alpha: Array, C, a, p=0.0) -> Array:
+def kkt_residual_eq(Q: Array, alpha: Array, C, a, p=0.0, gid=None,
+                    n_groups: int = 1) -> Array:
     """Maximal-violating-pair gap at ``alpha`` on the FULL problem (the
-    equality-family analogue of ``kkt_residual``); 0 at any KKT point."""
+    equality-family analogue of ``kkt_residual``), maximized over the
+    constraint groups; 0 at any KKT point."""
     g = Q @ alpha + jnp.asarray(p, alpha.dtype)
-    rho_lo, rho_hi = equality_interval(alpha, g, C, a)
-    return jnp.maximum(rho_lo - rho_hi, 0.0)
+    rho_lo, rho_hi = equality_interval_grouped(alpha, g, C, a, gid, n_groups)
+    return jnp.maximum(jnp.max(rho_lo - rho_hi), 0.0)
+
+
+def equality_rho_grouped(alpha: Array, grad: Array, C, a, gid, n_groups: int,
+                         active_mask: Optional[Array] = None) -> Array:
+    """Per-group equality multipliers (n_groups,) from the bracket
+    midpoints, with the same finite-side fallback as ``equality_rho``."""
+    rho_lo, rho_hi = equality_interval_grouped(alpha, grad, C, a, gid,
+                                               n_groups,
+                                               active_mask=active_mask)
+    mid = 0.5 * (rho_lo + rho_hi)
+    return jnp.where(jnp.isfinite(mid), mid,
+                     jnp.where(jnp.isfinite(rho_lo), rho_lo,
+                               jnp.where(jnp.isfinite(rho_hi), rho_hi, 0.0)))
 
 
 def equality_rho(alpha: Array, grad: Array, C, a,
@@ -609,8 +664,36 @@ def _restore_equality(alpha: Array, grad: Array, Q_col, cvec: Array,
     return alpha, grad
 
 
-def _pairwise_mvp_loop(alpha, cvec, avec, mask, qdiag, qij_fn, rank2_fn,
-                       full_grad, tol, max_iters, refresh_every):
+def _project_box_equality_grouped(alpha, cvec, avec, dvec, gid, n_groups,
+                                  mask, iters: int = 64):
+    """Project onto the box intersected with EVERY group's hyperplane.
+
+    Groups are disjoint, so the per-group projections commute: each moves
+    only its own coordinates along its own (group-masked) ``a``.  The
+    static-group Python loop unrolls under jit/vmap."""
+    for g in range(n_groups):
+        sel = gid == g
+        alpha = project_box_equality(alpha, cvec, jnp.where(sel, avec, 0.0),
+                                     dvec[g], active_mask=mask & sel,
+                                     iters=iters)
+    return alpha
+
+
+def _restore_equality_grouped(alpha, grad, Q_col, cvec, avec, dvec, gid,
+                              n_groups, mask):
+    """Per-group feasibility restoration: absorb each group's accumulated
+    a'u - d_g rounding drift into one strictly interior coordinate OF THAT
+    GROUP (see ``_restore_equality``)."""
+    for g in range(n_groups):
+        sel = gid == g
+        alpha, grad = _restore_equality(alpha, grad, Q_col, cvec,
+                                        jnp.where(sel, avec, 0.0), dvec[g],
+                                        mask & sel)
+    return alpha, grad
+
+
+def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
+                       rank2_fn, full_grad, tol, max_iters, refresh_every):
     """Shared pairwise maximal-violating-pair engine (dense and matvec
     front-ends differ only in how Q entries and the rank-2 gradient update
     are produced).
@@ -625,18 +708,26 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, qdiag, qij_fn, rank2_fn,
     sees the TRUE gradient, so f32 drift accumulated across the block's
     rank-2 updates cannot make the stopping test lie at tight tolerances.
     Returns (alpha, grad, iters, pg_max) with ``iters`` counting pair steps
-    and ``pg_max`` the last fresh-gradient violation.
+    and ``pg_max`` the last fresh-gradient violation.  Pairs are drawn
+    within one group (``gid``/``n_groups``): the selected pair belongs to
+    the group with the widest multiplier-bracket violation, so every
+    group's constraint is preserved exactly and the stopping test is the
+    max gap over groups.
     """
     safe = _safe_a(avec)
+    ingrp = gid[None, :] == jnp.arange(n_groups)[:, None]      # (G, n)
 
     def select(alpha, g):
         i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
         h = g / safe
-        hi_side = jnp.where(i_plus, h, jnp.inf)
-        lo_side = jnp.where(i_minus, h, -jnp.inf)
-        i = jnp.argmin(hi_side)
-        j = jnp.argmax(lo_side)
-        return i, j, lo_side[j] - hi_side[i]
+        hi_side = jnp.where(ingrp & i_plus, h, jnp.inf)        # (G, n)
+        lo_side = jnp.where(ingrp & i_minus, h, -jnp.inf)
+        ig = jnp.argmin(hi_side, axis=1)
+        jg = jnp.argmax(lo_side, axis=1)
+        gr = jnp.arange(n_groups)
+        gaps = lo_side[gr, jg] - hi_side[gr, ig]
+        gs = jnp.argmax(gaps)
+        return ig[gs], jg[gs], gaps[gs]
 
     def inner_cond(state):
         _, _, _, k, viol = state
@@ -645,13 +736,19 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, qdiag, qij_fn, rank2_fn,
     def inner_body(state):
         alpha, g, it, k, _ = state
         i, j, viol = select(alpha, g)
-        ai, aj = avec[i], avec[j]
+        # ``safe`` (a with 0 -> 1), not raw a: if the violating sets collapse
+        # to one side mid-block, argmin/argmax over an all-inf side return an
+        # arbitrary index whose a may be 0 (padding) — the step length is 0
+        # there (viol <= 0), but raw-a division would still produce
+        # inf - inf = NaN in curv and poison the iterate.  Real pairs always
+        # have a != 0, so safe == a on every selected coordinate that moves.
+        ai, aj = safe[i], safe[j]
         # exact minimizer along v = e_i/a_i - e_j/a_j: phi'(0) = h_i - h_j,
         # phi'' = Q_ii/a_i^2 + Q_jj/a_j^2 - 2 Q_ij/(a_i a_j) >= 0 (Q PSD)
         curv = qdiag[i] / (ai * ai) + qdiag[j] / (aj * aj) \
             - 2.0 * qij_fn(i, j) / (ai * aj)
         t = jnp.maximum(viol, 0.0) / jnp.maximum(curv, 1e-12)
-        new_ai, di, new_aj, dj = _pair_step(alpha, cvec, avec, i, j, t)
+        new_ai, di, new_aj, dj = _pair_step(alpha, cvec, safe, i, j, t)
         alpha = alpha.at[i].set(new_ai).at[j].set(new_aj)
         g = rank2_fn(g, i, j, di, dj)
         return alpha, g, it + 1, k + 1, jnp.maximum(viol, 0.0)
@@ -676,7 +773,7 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, qdiag, qij_fn, rank2_fn,
                           (alpha, g, 0, jnp.maximum(viol0, 0.0)))
 
 
-@partial(jax.jit, static_argnames=("max_iters", "refresh_every"))
+@partial(jax.jit, static_argnames=("max_iters", "refresh_every", "n_groups"))
 def solve_eq_qp(
     Q: Array,
     C,
@@ -688,18 +785,23 @@ def solve_eq_qp(
     active_mask: Optional[Array] = None,
     p=0.0,
     refresh_every: int = 256,
+    gid=None,
+    n_groups: int = 1,
 ) -> SolveResult:
     """Pairwise maximal-violating-pair CD on a dense Q; every iterate stays
-    on the hyperplane a'u = d.  vmap over leading dims is fine.
+    on the hyperplane(s) a'u = d.  vmap over leading dims is fine.
 
     The (possibly infeasible) warm start is first projected onto the
     feasible set along ``a`` (``project_box_equality``), so cluster
     sub-solutions gathered by the divide step are always valid starts.
     ``C``/``a``/``p`` broadcast from scalars; ``active_mask`` freezes
     coordinates (shrinking / padding) — frozen coordinates keep their value
-    and their a'u contribution.  Stops when the multiplier bracket gap
-    rho_lo - rho_hi, measured on a freshly recomputed gradient every
-    ``refresh_every`` pair steps (one Q @ u matvec, amortized
+    and their a'u contribution.  ``gid``/``n_groups`` decompose the
+    coordinates into disjoint groups with one constraint each (``d`` is
+    then the (n_groups,) target vector; a scalar broadcasts); pairs are
+    drawn within one group.  Stops when the multiplier bracket gap
+    max_g (rho_lo_g - rho_hi_g), measured on a freshly recomputed gradient
+    every ``refresh_every`` pair steps (one Q @ u matvec, amortized
     O(n/refresh_every) per step — see ``_pairwise_mvp_loop``), drops below
     ``tol``.
     """
@@ -709,18 +811,237 @@ def solve_eq_qp(
     avec = _broadcast(a, n, dtype)
     pvec = _broadcast(p, n, dtype)
     mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    gidv = _as_gid(gid, n)
+    dvec = _broadcast_d(d, n_groups, dtype)
     alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
-    alpha = project_box_equality(alpha, cvec, avec, d, active_mask=mask)
+    alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
+                                          n_groups, mask)
 
     alpha, g, iters, pg_max = _pairwise_mvp_loop(
-        alpha, cvec, avec, mask,
+        alpha, cvec, avec, mask, gidv, n_groups,
         qdiag=jnp.diagonal(Q),
         qij_fn=lambda i, j: Q[i, j],
         rank2_fn=lambda g, i, j, di, dj: g + di * Q[:, i] + dj * Q[:, j],
         full_grad=lambda al: Q @ al + pvec,
         tol=tol, max_iters=max_iters, refresh_every=refresh_every)
-    alpha, g = _restore_equality(alpha, g, lambda k: Q[:, k], cvec, avec, d,
-                                 mask)
+    alpha, g = _restore_equality_grouped(alpha, g, lambda k: Q[:, k], cvec,
+                                         avec, dvec, gidv, n_groups, mask)
+    return SolveResult(alpha, g, iters, pg_max)
+
+
+# ---------------------------------------------------------------------------
+# Rank-2B blocked pairwise CD: B maximal-violating pairs per outer iteration,
+# solved as a coupled 2Bx2B sub-QP that carries one coupling row per group
+# (a_b'u_b = const) — the equality-family analogue of solve_box_qp_block.
+# Derivation and the B=1 reduction to the pairwise step: DESIGN.md §10.
+# ---------------------------------------------------------------------------
+
+_SELECT_BIG = 1e30   # finite tier-2 selection score: "no violation, but a
+                     # real in-group coordinate" — sorts strictly above the
+                     # -inf non-candidates, strictly below any real h score
+
+
+def _solve_small_eq_qp(Qbb: Array, gb: Array, ub: Array, ab: Array, cb: Array,
+                       gidb: Array, n_groups: int, active: Array,
+                       steps: int) -> Array:
+    """Grouped MVP pair-sweeps on the (m, m) sub-QP around the entry point.
+
+    Each inner step selects the block-local maximal violating pair (within
+    one group) and takes the exact clipped minimizer along
+    ``e_i/a_i - e_j/a_j`` — the same rank-2 step as the pairwise engine, so
+    EVERY inner iterate stays on each group's hyperplane
+    ``a_b'u_b = const``.  ``active`` freezes slots (padding from a
+    short-sided selection; possibly duplicate indices — frozen slots never
+    move, so duplicates stay inert).  The local gradient ``gb`` is
+    maintained by rank-2 updates on the (m,) slice; at block optimality the
+    selected step length underflows to an exact no-op, so running all
+    ``steps`` iterations is safe.  This is ``_solve_small_qp`` generalized
+    to carry the coupling rows.
+    """
+    diag = jnp.diagonal(Qbb)
+    safe = _safe_a(ab)
+    ingrp = gidb[None, :] == jnp.arange(n_groups)[:, None]
+
+    def body(_, carry):
+        u, g = carry
+        i_plus, i_minus = _eq_direction_sets(u, cb, ab, active)
+        h = g / safe
+        hi_side = jnp.where(ingrp & i_plus, h, jnp.inf)
+        lo_side = jnp.where(ingrp & i_minus, h, -jnp.inf)
+        ig = jnp.argmin(hi_side, axis=1)
+        jg = jnp.argmax(lo_side, axis=1)
+        gr = jnp.arange(n_groups)
+        gaps = lo_side[gr, jg] - hi_side[gr, ig]
+        gs = jnp.argmax(gaps)
+        i, j = ig[gs], jg[gs]
+        viol = gaps[gs]
+        # safe (0 -> 1), not raw ab: a one-sided block returns arbitrary
+        # indices with possibly-zero a (frozen padding slots) — the step is
+        # 0 there, but raw-a division would turn it into NaN
+        ai, aj = safe[i], safe[j]
+        curv = diag[i] / (ai * ai) + diag[j] / (aj * aj) \
+            - 2.0 * Qbb[i, j] / (ai * aj)
+        t = jnp.maximum(viol, 0.0) / jnp.maximum(curv, 1e-12)
+        new_ui, di, new_uj, dj = _pair_step(u, cb, safe, i, j, t)
+        u = u.at[i].set(new_ui).at[j].set(new_uj)
+        g = g + di * Qbb[:, i] + dj * Qbb[:, j]
+        return u, g
+
+    u, _ = lax.fori_loop(0, steps, body, (ub, gb))
+    return u
+
+
+def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
+                      qbb_fn, rank2b_fn, full_grad, tol, max_iters,
+                      refresh_every):
+    """Shared rank-2B blocked engine (dense and matvec front-ends differ
+    only in how the sub-block of Q and the rank-2B gradient update are
+    produced).
+
+    Selection per outer iteration and group: the top-``block`` i-slot
+    candidates (smallest multiplier bounds h among the upward-movable set)
+    and, disjointly, the top-``block`` j-slot candidates (largest h among
+    the downward-movable set) — so the global maximal violating pair is
+    always inside the block and one blocked iteration makes at least as
+    much progress as one exact pairwise step.  Tier-2 fallback: when a side
+    has fewer than ``block`` violating candidates, remaining slots are
+    filled with arbitrary distinct in-group coordinates (still useful: the
+    sub-QP may move them); slots that cannot be filled at all (group
+    smaller than 2*block) come back non-finite and are frozen in the
+    sub-QP, their writes routed onto a valid slot so duplicate scatter
+    writes are identical and therefore deterministic.
+
+    Same outer structure as ``_pairwise_mvp_loop``: refresh blocks of up to
+    ``refresh_every`` rank-2B iterations on the maintained gradient, then
+    an unconditional from-scratch recompute and a stopping test on the
+    fresh gradient (vmap-safe, drift-bounded).  ``iters`` counts outer
+    blocked iterations.
+    """
+    n = alpha.shape[0]
+    safe = _safe_a(avec)
+    ingrp = gid[None, :] == jnp.arange(n_groups)[:, None]      # (G, n)
+    okg = ingrp & (mask & (avec != 0.0))[None, :]
+    steps = 2 * sweeps * block
+
+    def sides(alpha, g):
+        i_plus, i_minus = _eq_direction_sets(alpha, cvec, avec, mask)
+        h = g / safe
+        return i_plus, i_minus, h
+
+    def gap(i_plus, i_minus, h):
+        hi = jnp.min(jnp.where(ingrp & i_plus, h, jnp.inf), axis=1)
+        lo = jnp.max(jnp.where(ingrp & i_minus, h, -jnp.inf), axis=1)
+        return jnp.max(lo - hi)
+
+    def select(alpha, g):
+        i_plus, i_minus, h = sides(alpha, g)
+        viol = gap(i_plus, i_minus, h)
+        big = jnp.asarray(_SELECT_BIG, h.dtype)
+        sc_i = jnp.where(ingrp & i_plus, -h, jnp.where(okg, -big, -jnp.inf))
+        iv, ii = lax.top_k(sc_i, block)                        # (G, B)
+        taken = jnp.zeros(n, jnp.int32).at[ii.reshape(-1)].max(
+            jnp.isfinite(iv).reshape(-1).astype(jnp.int32)).astype(bool)
+        open_j = ~taken[None, :]
+        sc_j = jnp.where(ingrp & i_minus & open_j, h,
+                         jnp.where(okg & open_j, -big, -jnp.inf))
+        jv, jj = lax.top_k(sc_j, block)
+        idx = jnp.concatenate([ii, jj], axis=1).reshape(-1)    # (G * 2B,)
+        valid = jnp.concatenate([jnp.isfinite(iv), jnp.isfinite(jv)],
+                                axis=1).reshape(-1)
+        return idx, valid, viol
+
+    def inner_cond(state):
+        _, _, _, k, viol = state
+        return (viol > tol) & (k < refresh_every)
+
+    def inner_body(state):
+        alpha, g, it, k, _ = state
+        idx, valid, viol = select(alpha, g)
+        ub, gb = alpha[idx], g[idx]
+        new_ub = _solve_small_eq_qp(qbb_fn(idx), gb, ub, avec[idx], cvec[idx],
+                                    gid[idx], n_groups, valid, steps)
+        # invalid slots may duplicate a valid slot's index: route their
+        # writes onto one valid slot so duplicate writes carry identical
+        # values (deterministic under scatter), and zero their deltas
+        s0 = jnp.argmax(valid)
+        alpha = alpha.at[jnp.where(valid, idx, idx[s0])].set(
+            jnp.where(valid, new_ub, new_ub[s0]))
+        delta = jnp.where(valid, new_ub - ub, 0.0)
+        g = rank2b_fn(g, idx, delta)
+        return alpha, g, it + 1, k + 1, jnp.maximum(viol, 0.0)
+
+    def outer_cond(state):
+        _, _, it, viol = state
+        return (viol > tol) & (it < max_iters)
+
+    def outer_body(state):
+        alpha, g, it, viol = state
+        blk = jnp.minimum(refresh_every, max_iters - it)
+        alpha, g, it, _, _ = lax.while_loop(
+            lambda st: inner_cond(st) & (st[3] < blk), inner_body,
+            (alpha, g, it, 0, viol))
+        g = full_grad(alpha)
+        return alpha, g, it, jnp.maximum(gap(*sides(alpha, g)), 0.0)
+
+    g = full_grad(alpha)
+    viol0 = jnp.maximum(gap(*sides(alpha, g)), 0.0)
+    return lax.while_loop(outer_cond, outer_body, (alpha, g, 0, viol0))
+
+
+@partial(jax.jit, static_argnames=("block", "sweeps", "max_iters",
+                                   "refresh_every", "n_groups"))
+def solve_eq_qp_block(
+    Q: Array,
+    C,
+    a,
+    d,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 5_000,
+    block: int = 8,
+    sweeps: int = 4,
+    active_mask: Optional[Array] = None,
+    p=0.0,
+    refresh_every: int = 32,
+    gid=None,
+    n_groups: int = 1,
+) -> SolveResult:
+    """Rank-2B blocked pairwise CD on a dense Q: each outer iteration
+    selects the ``block`` maximal-violating pairs per group from the KKT
+    multiplier bracket and solves the coupled 2Bx2B sub-QP (one coupling
+    row per group) with grouped MVP pair-sweeps, then applies the rank-2B
+    gradient update ``g += Q[:, idx] @ delta`` — a skinny matmul, the
+    MXU-friendly reshaping of the pairwise engine exactly as
+    ``solve_box_qp_block`` is of ``solve_box_qp``.
+
+    Every iterate stays on every group's hyperplane (the sub-QP moves only
+    along within-group pair directions), and the feasibility-restore and
+    rho-bracket machinery of the rank-2 engine is reused unchanged.  At
+    ``block = 1`` this is the pairwise step with ``sweeps`` extra polishing
+    steps on the selected pair; ``DCSVMConfig.eq_block_size = 1`` routes to
+    ``solve_eq_qp`` instead.  vmap over leading dims is fine.
+    """
+    n = Q.shape[0]
+    dtype = Q.dtype
+    cvec = _broadcast(C, n, dtype)
+    avec = _broadcast(a, n, dtype)
+    pvec = _broadcast(p, n, dtype)
+    mask = jnp.ones(n, bool) if active_mask is None else active_mask
+    gidv = _as_gid(gid, n)
+    dvec = _broadcast_d(d, n_groups, dtype)
+    B = max(1, min(block, n // (2 * n_groups)))
+    alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
+    alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
+                                          n_groups, mask)
+
+    alpha, g, iters, pg_max = _blocked_mvp_loop(
+        alpha, cvec, avec, mask, gidv, n_groups, B, sweeps,
+        qbb_fn=lambda idx: Q[idx][:, idx],
+        rank2b_fn=lambda g, idx, delta: g + Q[:, idx] @ delta,
+        full_grad=lambda al: Q @ al + pvec,
+        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+    alpha, g = _restore_equality_grouped(alpha, g, lambda k: Q[:, k], cvec,
+                                         avec, dvec, gidv, n_groups, mask)
     return SolveResult(alpha, g, iters, pg_max)
 
 
@@ -735,14 +1056,20 @@ def solve_eq_qp_shrink(
     rounds: int = 3,
     shrink_margin: float = 10.0,
     p=0.0,
+    block: int = 0,
+    sweeps: int = 4,
+    gid=None,
+    n_groups: int = 1,
 ) -> SolveResult:
     """Outer shrinking rounds around the pairwise engine (the equality-family
     ``solve_with_shrinking``): coordinates pinned at a bound whose multiplier
-    bound h_i sits beyond the current rho estimate by more than
+    bound h_i sits beyond THEIR GROUP's current rho estimate by more than
     ``shrink_margin * tol`` are frozen for the next round; the final round
     re-activates everything and the returned residual is the full-problem
     maximal-violating-pair gap.  Frozen coordinates keep their a'u
     contribution, so every round solves the SAME constrained problem.
+    ``block > 1`` runs the rank-2B blocked engine (``solve_eq_qp_block``)
+    inside each round instead of the rank-2 pairwise engine.
     """
     if rounds < 1:
         raise ValueError(f"shrinking needs rounds >= 1, got {rounds}")
@@ -750,6 +1077,7 @@ def solve_eq_qp_shrink(
     dtype = Q.dtype
     cvec = _broadcast(C, n, dtype)
     avec = _broadcast(a, n, dtype)
+    gidv = _as_gid(gid, n)
     alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
     mask = jnp.ones(n, bool)
     res = None
@@ -757,11 +1085,19 @@ def solve_eq_qp_shrink(
     for r in range(rounds):
         final = r == rounds - 1
         m = jnp.ones(n, bool) if final else mask
-        res = solve_eq_qp(Q, C, a, d, alpha0=alpha, tol=tol,
-                          max_iters=max_iters, active_mask=m, p=p)
+        if block > 1:
+            res = solve_eq_qp_block(Q, C, a, d, alpha0=alpha, tol=tol,
+                                    max_iters=max_iters, block=block,
+                                    sweeps=sweeps, active_mask=m, p=p,
+                                    gid=gidv, n_groups=n_groups)
+        else:
+            res = solve_eq_qp(Q, C, a, d, alpha0=alpha, tol=tol,
+                              max_iters=max_iters, active_mask=m, p=p,
+                              gid=gidv, n_groups=n_groups)
         alpha, g = res.alpha, res.grad
         total_iters = total_iters + res.iters
-        rho = equality_rho(alpha, g, cvec, avec)
+        rho = equality_rho_grouped(alpha, g, cvec, avec, gidv,
+                                   n_groups)[gidv]
         h = g / _safe_a(avec)
         mtol = shrink_margin * tol
         at_lo = alpha <= 0.0
@@ -769,12 +1105,14 @@ def solve_eq_qp_shrink(
         lock_lo = at_lo & jnp.where(avec > 0, h > rho + mtol, h < rho - mtol)
         lock_hi = at_hi & jnp.where(avec > 0, h < rho - mtol, h > rho + mtol)
         mask = ~(lock_lo | lock_hi)
-    pg_full = kkt_residual_eq(Q, res.alpha, cvec, avec, p=p)
+    pg_full = kkt_residual_eq(Q, res.alpha, cvec, avec, p=p, gid=gidv,
+                              n_groups=n_groups)
     return SolveResult(res.alpha, res.grad, total_iters, pg_full)
 
 
 @partial(jax.jit, static_argnames=("kernel", "max_iters", "grad_chunks",
-                                   "use_pallas", "refresh_every"))
+                                   "use_pallas", "refresh_every", "block",
+                                   "sweeps", "n_groups"))
 def solve_eq_qp_matvec(
     X: Array,
     y: Array,
@@ -789,14 +1127,22 @@ def solve_eq_qp_matvec(
     use_pallas: bool = False,
     p=0.0,
     refresh_every: int = 512,
+    block: int = 1,
+    sweeps: int = 4,
+    gid=None,
+    n_groups: int = 1,
 ) -> SolveResult:
-    """Pairwise maximal-violating-pair CD with on-the-fly kernel columns:
-    Q = (y y') ∘ K(X, X) is never materialized.  ``y`` is the task sign
-    vector ``s`` (all ones for one-class SVM, labels for nu-SVC); ``a`` may
-    be mixed-sign.  On the fused path (``use_pallas=True``) the rank-2
-    gradient update streams through ``repro.kernels.ops.cd_column_update``
-    and the gradient init through the streaming ``kernel_matvec`` — the
-    whole solve is ONE jitted program with no host transfer.
+    """Pairwise / blocked maximal-violating-pair CD with on-the-fly kernel
+    columns: Q = (y y') ∘ K(X, X) is never materialized.  ``y`` is the task
+    sign vector ``s`` (all ones for one-class SVM, labels for nu-SVC);
+    ``a`` may be mixed-sign.  On the fused path (``use_pallas=True``) the
+    rank-2 (``block <= 1``) or rank-2B (``block > 1``) gradient update
+    streams through ``repro.kernels.ops.cd_column_update`` — the (n, 2B)
+    kernel block lives only in VMEM — and the gradient init through the
+    streaming ``kernel_matvec``: the whole solve is ONE jitted program with
+    no host transfer.  ``refresh_every`` counts pair steps on the rank-2
+    path and is rescaled by 2B on the blocked path, so the gradient-drift
+    budget between from-scratch refreshes is comparable.
     """
     n = X.shape[0]
     dtype = X.dtype
@@ -804,8 +1150,11 @@ def solve_eq_qp_matvec(
     avec = _broadcast(a, n, dtype)
     pvec = _broadcast(p, n, dtype)
     mask = jnp.ones(n, bool)
+    gidv = _as_gid(gid, n)
+    dvec = _broadcast_d(d, n_groups, dtype)
     alpha = jnp.zeros(n, dtype) if alpha0 is None else alpha0
-    alpha = project_box_equality(alpha, cvec, avec, d)
+    alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
+                                          n_groups, mask)
 
     from repro.core.kernels import gram_matvec
 
@@ -819,31 +1168,49 @@ def solve_eq_qp_matvec(
                                 use_pallas=use_pallas)
                 + pvec).astype(acc)
 
-    def qij_fn(i, j):
-        Xb = X[jnp.stack([i, j])]
-        return (y[i] * y[j] * kernel.pairwise(Xb, Xb)[0, 1]).astype(acc)
-
-    def rank2_fn(g, i, j, di, dj):
-        idx = jnp.stack([i, j])
+    def rank2b_fn(g, idx, delta):
+        """Rank-|idx| gradient update, shared by the rank-2 and rank-2B
+        paths: fused cd_column_update on the Pallas path (the (n, |idx|)
+        kernel block stays in VMEM), an on-the-fly column matmul on XLA."""
         Xb, yb = X[idx], y[idx]
-        delta = jnp.stack([di, dj])
         if use_pallas:
-            # fused rank-2 update: the (n, 2) kernel block stays in VMEM
             return g + kops.cd_column_update(X, y, Xb, yb * delta,
                                              kernel).astype(acc)
-        Kb = kernel.pairwise(X, Xb)                          # (n, 2)
+        Kb = kernel.pairwise(X, Xb)                          # (n, |idx|)
         Qb = ((y[:, None] * yb[None, :]) * Kb).astype(acc)
         return g + Qb @ delta
 
-    alpha, g, iters, pg_max = _pairwise_mvp_loop(
-        alpha, cvec, avec, mask,
-        qdiag=(y * y * kernel.diag(X)).astype(acc),
-        qij_fn=qij_fn, rank2_fn=rank2_fn, full_grad=full_grad,
-        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+    if block > 1:
+        B = max(1, min(block, n // (2 * n_groups)))
+
+        def qbb_fn(idx):
+            Xb, yb = X[idx], y[idx]
+            Kbb = kernel.pairwise(Xb, Xb)
+            return ((yb[:, None] * yb[None, :]) * Kbb).astype(acc)
+
+        alpha, g, iters, pg_max = _blocked_mvp_loop(
+            alpha, cvec, avec, mask, gidv, n_groups, B, sweeps,
+            qbb_fn=qbb_fn, rank2b_fn=rank2b_fn, full_grad=full_grad,
+            tol=tol, max_iters=max_iters,
+            refresh_every=max(1, refresh_every // (2 * B)))
+    else:
+        def qij_fn(i, j):
+            Xb = X[jnp.stack([i, j])]
+            return (y[i] * y[j] * kernel.pairwise(Xb, Xb)[0, 1]).astype(acc)
+
+        def rank2_fn(g, i, j, di, dj):
+            return rank2b_fn(g, jnp.stack([i, j]), jnp.stack([di, dj]))
+
+        alpha, g, iters, pg_max = _pairwise_mvp_loop(
+            alpha, cvec, avec, mask, gidv, n_groups,
+            qdiag=(y * y * kernel.diag(X)).astype(acc),
+            qij_fn=qij_fn, rank2_fn=rank2_fn, full_grad=full_grad,
+            tol=tol, max_iters=max_iters, refresh_every=refresh_every)
 
     def q_col(k):
         Kk = kernel.pairwise(X, X[k][None, :])[:, 0]
         return (y * y[k] * Kk).astype(acc)
 
-    alpha, g = _restore_equality(alpha, g, q_col, cvec, avec, d, mask)
+    alpha, g = _restore_equality_grouped(alpha, g, q_col, cvec, avec, dvec,
+                                         gidv, n_groups, mask)
     return SolveResult(alpha, g, iters, pg_max)

@@ -40,6 +40,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.solver import equality_interval_grouped, equality_rho
+
 Array = jax.Array
 
 
@@ -53,8 +55,14 @@ class TaskDual(NamedTuple):
     dual coordinate (identity except for SVR's duplicated rows).
 
     ``A``/``Deq`` select the dual family: ``None`` for the box family, else
-    the (n_rows, n_dual) equality coefficients and (n_rows,) targets of
-    ``a'u = d`` (one-class SVM / nu-SVC — solved by the pairwise engine).
+    the (n_rows, n_dual) equality coefficients and (n_rows, n_groups)
+    targets of the per-group constraints ``sum_{i in g} a_i u_i = d_g``
+    (one-class SVM / nu-SVC — solved by the pairwise/blocked engine).
+    ``Geq`` (n_rows, n_dual) int32 assigns each coordinate to its
+    constraint group; ``None`` means one global constraint (group 0).  The
+    two-constraint nu-SVC dual (``e'u = nu n`` and ``y'u = 0``) decomposes
+    into one mass constraint per class group, so ``Geq`` is the class
+    indicator and ``Deq`` carries nu*n/2 per group (DESIGN.md §10).
     """
 
     Xd: Array
@@ -64,10 +72,25 @@ class TaskDual(NamedTuple):
     base_index: np.ndarray
     A: Optional[Array] = None
     Deq: Optional[Array] = None
+    Geq: Optional[Array] = None
 
     @property
     def has_equality(self) -> bool:
         return self.A is not None
+
+    @property
+    def n_groups(self) -> int:
+        """Number of equality-constraint groups (static: read off Deq's
+        trailing shape); 0 for the box family."""
+        return 0 if self.Deq is None else self.Deq.shape[-1]
+
+    @property
+    def group_ids(self) -> Array:
+        """(n_rows, n_dual) int32 constraint-group ids (zeros when the task
+        carries one global constraint)."""
+        if self.Geq is not None:
+            return self.Geq
+        return jnp.zeros(self.S.shape, jnp.int32)
 
     @property
     def n_dual(self) -> int:
@@ -97,6 +120,16 @@ class Task:
     def build(self, X: Array, Y: Array, C: float) -> TaskDual:
         """Reduce (X, class-stacked Y, cost C) to the generalized dual."""
         raise NotImplementedError
+
+    def recover_offset(self, alpha: Array, grad: Array, cvec: Array,
+                       avec: Array, gid: Array,
+                       active_mask: Optional[Array] = None) -> Array:
+        """Decision offset rho (``f(x) = sum_i beta_i K(x_i, x) - rho``) of
+        an equality-constrained task, read off the KKT multiplier
+        bracket(s) at the returned dual.  Default: the single-constraint
+        bracket midpoint (one-class SVM).  Pure jnp — called inside
+        jit/vmap for per-cluster offsets of early-stopped models."""
+        return equality_rho(alpha, grad, cvec, avec, active_mask=active_mask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,13 +247,15 @@ class OneClassSVM(Task):
             Cvec=ones,
             base_index=np.arange(n),
             A=ones,
-            Deq=jnp.asarray([self.nu * n], X.dtype),
+            Deq=jnp.asarray([[self.nu * n]], X.dtype),
         )
 
 
 @dataclasses.dataclass(frozen=True)
 class NuSVC(Task):
-    """nu-parameterized classifier — the bias-free nu-SVC dual
+    """nu-parameterized classifier, with or without the bias term.
+
+    ``with_bias=False`` (default — the PR-4 behavior): the bias-free dual
 
         min 1/2 u' Q u   s.t.  0 <= u <= 1,  sum_i u_i = nu * n
 
@@ -231,17 +266,56 @@ class NuSVC(Task):
     bias-free C-SVC: if ``alpha`` solves C-SVC at cost C then ``alpha / C``
     solves NuSVC at ``nu = sum(alpha) / (C n)`` and the decision functions
     agree up to the positive scale C (pinned in tests/test_oneclass_nusvm.py).
+
+    ``with_bias=True``: the full (libsvm) nu-SVC dual restores ``y'u = 0``
+    alongside ``e'u = nu n``.  With +/-1 labels the two constraints
+    decompose into one mass constraint per class group,
+
+        sum_{y_i = +1} u_i = sum_{y_i = -1} u_i = nu * n / 2,
+
+    so the pairwise/blocked engine applies per label group (``Geq`` is the
+    class indicator; pairs are drawn within a group).  The bias is
+    recovered from the per-group multipliers r_+/r_-: ``b = (r_- - r_+)/2``
+    and the margin ``rho_m = (r_+ + r_-)/2`` — the decision
+    ``f(x) = sum_i u_i y_i K(x_i, x) + b`` is exposed through the uniform
+    offset convention ``f = sum beta_i K - rho`` with ``rho = -b``
+    (``has_rho_offset``), so prediction and serving reuse the one-class
+    sign-threshold path unchanged; dividing by rho_m reproduces libsvm's
+    rescaled decision function (pinned against sklearn.svm.NuSVC).
+    Feasible iff ``nu <= 2 min(n_+, n_-) / n`` (checked at build).
     """
 
     nu: float = 0.5
+    with_bias: bool = False
 
     name = "nu-svc"
+
+    @property
+    def has_rho_offset(self) -> bool:
+        return self.with_bias
 
     def build(self, X: Array, Y: Array, C: float) -> TaskDual:
         if not 0.0 < self.nu <= 1.0:
             raise ValueError(f"nu-SVC nu must lie in (0, 1], got {self.nu}")
         Y = jnp.asarray(Y)
         n = Y.shape[-1]
+        if not self.with_bias:
+            return TaskDual(
+                Xd=X,
+                S=Y,
+                P=jnp.zeros_like(Y),
+                Cvec=jnp.ones_like(Y),
+                base_index=np.arange(n),
+                A=jnp.ones_like(Y),
+                Deq=jnp.full((Y.shape[0], 1), self.nu * n, X.dtype),
+            )
+        n_pos = np.asarray(Y > 0).sum(axis=-1)
+        n_min = np.minimum(n_pos, n - n_pos)
+        if np.any(self.nu * n > 2 * n_min + 1e-9):
+            raise ValueError(
+                f"nu-SVC with bias needs nu <= 2 min(n+, n-)/n = "
+                f"{2 * n_min.min() / n:.4f} (each class must carry mass "
+                f"nu*n/2 with u <= 1); got nu = {self.nu}")
         return TaskDual(
             Xd=X,
             S=Y,
@@ -249,8 +323,34 @@ class NuSVC(Task):
             Cvec=jnp.ones_like(Y),
             base_index=np.arange(n),
             A=jnp.ones_like(Y),
-            Deq=jnp.full((Y.shape[0],), self.nu * n, X.dtype),
+            Deq=jnp.full((Y.shape[0], 2), 0.5 * self.nu * n, X.dtype),
+            Geq=jnp.where(Y > 0, 0, 1).astype(jnp.int32),
         )
+
+    def recover_offset(self, alpha: Array, grad: Array, cvec: Array,
+                       avec: Array, gid: Array,
+                       active_mask: Optional[Array] = None) -> Array:
+        # rho = -b: for free SVs of group +/-, h = g_i equals r_+/- with
+        # r_+ = rho_m - b, r_- = rho_m + b  =>  -b = (r_+ - r_-) / 2
+        if not self.with_bias:
+            return Task.recover_offset(self, alpha, grad, cvec, avec, gid,
+                                       active_mask=active_mask)
+        lo, hi = equality_interval_grouped(alpha, grad, cvec, avec, gid, 2,
+                                           active_mask=active_mask)
+        mid = 0.5 * (lo + hi)
+        r = jnp.where(jnp.isfinite(mid), mid,
+                      jnp.where(jnp.isfinite(lo), lo, hi))
+        # A group with no coordinates at all (a single-class cluster of an
+        # early-stopped model) has an EMPTY bracket and no multiplier: its
+        # local bias is undefined, and substituting a 0 level would shift
+        # every routed query by half the present group's level — toward the
+        # ABSENT class.  Substitute the present group's level instead:
+        # offset 0, the degenerate cluster scores with its raw
+        # (own-class-signed) local decision.
+        has = jnp.isfinite(r)
+        r0 = jnp.where(has[0], r[0], jnp.where(has[1], r[1], 0.0))
+        r1 = jnp.where(has[1], r[1], jnp.where(has[0], r[0], 0.0))
+        return 0.5 * (r0 - r1)
 
 
 def resolve_task(task: Optional[Task]) -> Task:

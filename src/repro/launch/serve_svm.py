@@ -55,7 +55,10 @@ class ServingModel(NamedTuple):
     skipped for regression.  One-class SVM models are exported with one
     beta column, a length-1 ``classes`` array (the static task marker) and
     the decision offset ``rho``: predictions are sign(score - rho), +1 =
-    inlier.
+    inlier.  Two-constraint nu-SVC (``NuSVC(with_bias=True)``) shares this
+    offset-threshold path with ``rho = -b`` (the recovered bias), so its
+    biased decision function round-trips through serving with no extra
+    machinery.
     """
 
     # routing (implicit kernel-kmeans centers, empty centers masked upstream)

@@ -13,11 +13,15 @@
 Tasks: ``svc`` (hinge C-SVC), ``weighted-svc`` (cost-sensitive box
 ``c_i = C * w_{y_i}``; ``--class-weight POS[,NEG]``), ``svr``
 (epsilon-insensitive regression; ``--eps``), ``nu-svc`` (nu-parameterized
-classification; ``--nu`` bounds the support mass) and ``one-class``
-(label-free anomaly detection via the equality-constrained dual; ``--nu``
-bounds the outlier fraction).  Regression reports MSE/MAE, weighted
-classification additionally reports per-class recall, one-class reports
-outlier precision/recall/F1 against the generator's ground-truth labels.
+classification; ``--nu`` bounds the support mass, ``--nu-bias`` restores
+the bias term via the two-constraint dual solved per label group) and
+``one-class`` (label-free anomaly detection via the equality-constrained
+dual; ``--nu`` bounds the outlier fraction).  Regression reports MSE/MAE,
+weighted classification additionally reports per-class recall, one-class
+reports outlier precision/recall/F1 against the generator's ground-truth
+labels.  ``--eq-block B`` runs the equality-family conquer with the
+rank-2B blocked pairwise engine (B maximal-violating pairs per iteration;
+1 = the paper-faithful SMO-style rank-2 engine).
 
 Fault tolerance: after every level the (alpha, level, assign) state is
 checkpointed; restart resumes at the next level (the expensive bottom levels
@@ -87,6 +91,12 @@ def main(argv=None) -> None:
                     help="epsilon-SVR insensitivity tube half-width")
     ap.add_argument("--nu", type=float, default=0.1,
                     help="nu-svc / one-class support-mass bound in (0, 1]")
+    ap.add_argument("--nu-bias", action="store_true",
+                    help="nu-svc only: restore the bias term (two-constraint "
+                         "dual, solved per label group)")
+    ap.add_argument("--eq-block", type=int, default=1,
+                    help="equality-family rank-2B block size B (pairs per "
+                         "outer iteration); 1 = rank-2 pairwise engine")
     ap.add_argument("--levels", type=int, default=3)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--m", type=int, default=1000)
@@ -117,9 +127,11 @@ def main(argv=None) -> None:
     elif args.task == "svr":
         task = EpsilonSVR(eps=args.eps)
     elif args.task == "nu-svc":
-        task = NuSVC(nu=args.nu)
+        task = NuSVC(nu=args.nu, with_bias=args.nu_bias)
     elif args.task == "one-class":
         task = OneClassSVM(nu=args.nu)
+    if args.nu_bias and args.task != "nu-svc":
+        ap.error("--nu-bias applies to --task nu-svc only")
 
     key = jax.random.PRNGKey(args.seed)
     X, y = DATASETS[args.dataset](key, args.n)
@@ -128,6 +140,7 @@ def main(argv=None) -> None:
     kern = Kernel(args.kernel, gamma=args.gamma)
     cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
                       m=args.m, tol=args.tol, block=args.block,
+                      eq_block_size=args.eq_block,
                       early_stop_level=args.early, seed=args.seed)
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None

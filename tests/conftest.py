@@ -16,3 +16,7 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration tests")
+    config.addinivalue_line(
+        "markers",
+        "properties: hypothesis-backed (or fixed-seed fallback) solver "
+        "conformance suite — skipped by scripts/ci.sh --fast")

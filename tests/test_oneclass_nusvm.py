@@ -102,6 +102,127 @@ def test_nusvc_rejects_bad_nu():
             NuSVC(nu=bad).build(X, y[None, :], 1.0)
     with pytest.raises(ValueError):
         OneClassSVM(nu=0.0).build(X, y[None, :], 1.0)
+    # with bias: class-balance feasibility nu <= 2 min(n+, n-)/n
+    y_imb = jnp.asarray([1.0, 1.0, 1.0, -1.0])
+    with pytest.raises(ValueError):
+        NuSVC(nu=0.9, with_bias=True).build(X, y_imb[None, :], 1.0)
+    td = NuSVC(nu=0.4, with_bias=True).build(X, y_imb[None, :], 1.0)
+    assert td.n_groups == 2 and td.Geq is not None
+
+
+# ---------------------------------------------------------------------------
+# (a') two-constraint nu-SVC: the bias restored via per-label-group
+# constraints sum_{y=+1} u = sum_{y=-1} u = nu n / 2 (ISSUE-5)
+# ---------------------------------------------------------------------------
+
+def _nusvc_problem(n=400, key=0, d=6):
+    X, y = gaussian_mixture(jax.random.PRNGKey(key), n, d=d,
+                            modes_per_class=3, spread=0.15)
+    return train_test_split(jax.random.PRNGKey(key + 1), X, y)
+
+
+def _nusvc_margin_and_bias(model, kern):
+    """(rho_m, b) of a fitted two-constraint NuSVC from the per-group
+    multiplier brackets at the returned dual: r_+/- are the free-SV levels
+    of g_i per class group, rho_m = (r_+ + r_-)/2, b = (r_- - r_+)/2."""
+    from repro.core.solver import equality_rho_grouped
+    from repro.core.kernels import gram_matvec
+
+    td = model.task.build(model.X, model.y[None, :], model.config.C)
+    s = td.S[0]
+    g = s * gram_matvec(kern, model.X, s * model.alpha) + td.P[0]
+    r = equality_rho_grouped(model.alpha, g, td.Cvec[0], td.A[0],
+                             td.group_ids[0], 2)
+    return 0.5 * float(r[0] + r[1]), 0.5 * float(r[1] - r[0])
+
+
+def test_nusvc_bias_decision_matches_sklearn():
+    """Decision parity vs sklearn.svm.NuSVC (rbf): libsvm rescales the
+    dual by the margin rho_m so free SVs sit at +/-1 — dividing our raw
+    decision (sum u_i y_i K + b) by rho_m must reproduce sklearn's
+    decision_function to 2e-4, and b/rho_m its intercept."""
+    sklearn_svm = pytest.importorskip("sklearn.svm")
+
+    Xtr, ytr, Xte, _ = _nusvc_problem(n=400, key=0)
+    gamma, nu = 4.0, 0.3
+    kern = Kernel("rbf", gamma=gamma)
+    cfg = DCSVMConfig(kernel=kern, k=3, levels=1, m=200, tol=1e-7,
+                      kmeans_iters=8, use_pallas=False)
+    model = fit(cfg, Xtr, ytr, task=NuSVC(nu=nu, with_bias=True))
+    rho_m, b = _nusvc_margin_and_bias(model, kern)
+    assert rho_m > 0
+    # model.rho is -b: the uniform offset convention f = sum beta K - rho
+    assert abs(model.rho + b) <= 1e-5 * (1 + abs(b))
+    f_raw = np.asarray(decision_exact(model, Xte), np.float64)  # already + b
+    f_ours = f_raw / rho_m
+
+    sk = sklearn_svm.NuSVC(nu=nu, kernel="rbf", gamma=gamma,
+                           tol=1e-8).fit(np.asarray(Xtr), np.asarray(ytr))
+    f_sk = sk.decision_function(np.asarray(Xte))
+    np.testing.assert_allclose(f_ours, f_sk, atol=2e-4)
+    assert abs(b / rho_m - float(sk.intercept_[0])) <= 2e-4
+
+
+def test_nusvc_bias_group_feasibility_sandwich():
+    """Per class group g: the group mass lands exactly on nu n / 2, and the
+    nu sandwich holds groupwise — #(bound SVs in g) <= nu n / 2 <= #(SVs
+    in g) (each coordinate is capped at 1, so the mass constraint forces
+    at least nu n/2 supports and at most nu n/2 cap-pinned coordinates)."""
+    Xtr, ytr, Xte, yte = _nusvc_problem(n=600, key=4, d=8)
+    n = Xtr.shape[0]
+    nu = 0.3
+    cfg = DCSVMConfig(kernel=Kernel("rbf", gamma=8.0), k=3, levels=2, m=250,
+                      tol=1e-5, kmeans_iters=8, use_pallas=False,
+                      eq_block_size=8)
+    model = fit(cfg, Xtr, ytr, task=NuSVC(nu=nu, with_bias=True))
+    u = np.asarray(model.alpha, np.float64)
+    yn = np.asarray(model.y)
+    for sign in (1.0, -1.0):
+        grp = yn * sign > 0
+        mass = u[grp].sum()
+        assert abs(mass - nu * n / 2) <= 1e-2, (sign, mass)
+        n_sv = int((u[grp] > 1e-6).sum())
+        n_bound = int((u[grp] >= 1.0 - 1e-6).sum())
+        assert n_bound <= nu * n / 2 + 1, sign
+        assert n_sv >= nu * n / 2 - 1, sign
+    assert accuracy(yte, predict_exact(model, Xte)) >= 0.9
+
+
+def test_nusvc_bias_serving_round_trip():
+    """export_serving_model/serve_batch with the recovered bias: the export
+    carries rho = -b through the offset-threshold path (shared with
+    one-class), exact serving reproduces decision_exact, predictions are
+    the +/-1 sign labels, and the early export carries per-cluster
+    offsets."""
+    from repro.launch.serve_svm import export_serving_model, serve_batch
+
+    Xtr, ytr, Xte, _ = _nusvc_problem(n=500, key=8)
+    kern = Kernel("rbf", gamma=4.0)
+    cfg = DCSVMConfig(kernel=kern, k=3, levels=1, m=200, tol=1e-5,
+                      kmeans_iters=8, use_pallas=False, eq_block_size=4)
+    task = NuSVC(nu=0.3, with_bias=True)
+    model = fit(cfg, Xtr, ytr, task=task)
+    assert model.rho is not None
+    sm = export_serving_model(model, with_bcm=False)
+    assert float(sm.rho) == pytest.approx(model.rho, abs=1e-7)
+    Xq = Xte[:100]
+    pred, scores = serve_batch(sm, Xq, kern, "exact")
+    assert bool(jnp.all(jnp.abs(pred) == 1.0))
+    d_ref = decision_exact(model, Xq)
+    np.testing.assert_allclose(np.asarray(scores[:, 0]), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(pred), np.asarray(predict_exact(model, Xq)))
+
+    model_e = fit(dataclasses.replace(cfg, early_stop_level=1), Xtr, ytr,
+                  task=task)
+    assert model_e.rho_clusters is not None
+    sm_e = export_serving_model(model_e, with_bcm=False)
+    assert sm_e.rho_c.shape == (model_e.partition.k,)
+    pred_e, scores_e = serve_batch(sm_e, Xq, kern, "early")
+    np.testing.assert_allclose(np.asarray(scores_e[:, 0]),
+                               np.asarray(decision_early(model_e, Xq)),
+                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +352,76 @@ def test_oneclass_early_uses_per_cluster_rho():
             raw[q] = Kq @ u[mem] - rho_c[c]
     got = np.asarray(decision_early(model, X))
     np.testing.assert_allclose(got, raw, atol=1e-4)
+
+
+def test_nusvc_bias_early_single_class_clusters():
+    """Regression: an early-stopped biased NuSVC whose clusters are PURE
+    (label-free kmeans on well-separated class blobs splits by class) has
+    one empty constraint group per cluster — its local bias is undefined,
+    and the recovery must fall back to a ZERO offset (the cluster scores
+    with its raw own-class-signed decision), not to a half-level shift
+    toward the absent class."""
+    rng = np.random.default_rng(0)
+    n_half, dim = 150, 4
+    Xp = rng.normal(size=(n_half, dim)) * 0.2 + 3.0
+    Xm = rng.normal(size=(n_half, dim)) * 0.2 - 3.0
+    X = jnp.asarray(np.vstack([Xp, Xm]).astype(np.float32))
+    y = jnp.asarray(np.concatenate([np.ones(n_half), -np.ones(n_half)])
+                    .astype(np.float32))
+    kern = Kernel("rbf", gamma=0.5)
+    cfg = DCSVMConfig(kernel=kern, k=2, levels=1, m=150, tol=1e-5,
+                      kmeans_iters=10, use_pallas=False, early_stop_level=1)
+    model = fit(cfg, X, y, task=NuSVC(nu=0.3, with_bias=True))
+    assert model.rho_clusters is not None
+    rho_c = np.asarray(model.rho_clusters)
+    assert np.isfinite(rho_c).all()
+    # the clusters really are single-class (the premise of the regression)
+    assign = np.asarray(model.partition.assign)
+    yn = np.asarray(y)
+    purity = [np.abs(yn[assign == c].mean()) for c in range(2)]
+    assert min(purity) > 0.99, purity
+    # a pure cluster's offset is exactly 0 -> every query routed to it is
+    # graded by the raw own-class-signed score, i.e. predicted as ITS class
+    np.testing.assert_allclose(rho_c, 0.0, atol=1e-6)
+    pred = np.asarray(predict_early(model, X))
+    assert (pred == yn).mean() == 1.0
+
+
+def test_oneclass_early_prediction_bound_holds():
+    """ROADMAP item 3 pinned: on fixed-seed gaussian_with_outliers data the
+    measured early-prediction error max |f_early(x) - f(x)| respects the
+    D(pi) + rho_c-spread bound of ``bounds.oneclass_early_gap_bound`` —
+    both the a-priori form (Theorem-1 drift through sigma_n-strong
+    convexity) and the semi-empirical form with the measured dual drift."""
+    from repro.core.bounds import oneclass_early_gap_bound
+    from repro.core.kkmeans import assign_points
+
+    X, _ = _ocsvm_problem(n=500, key=21)
+    kern = Kernel("rbf", gamma=4.0)
+    nu = 0.15
+    cfg = DCSVMConfig(kernel=kern, k=3, levels=1, m=250, tol=1e-5,
+                      kmeans_iters=8, use_pallas=False,
+                      full_gram_threshold=64)
+    model_e = fit(dataclasses.replace(cfg, early_stop_level=1), X,
+                  task=OneClassSVM(nu=nu))
+    model = fit(cfg, X, task=OneClassSVM(nu=nu))
+    Xq = X[:200]
+    f_e = np.asarray(decision_early(model_e, Xq), np.float64)
+    f = np.asarray(decision_exact(model, Xq), np.float64)
+    gap = float(np.max(np.abs(f_e - f)))
+
+    sigma_n = float(np.linalg.eigvalsh(
+        np.asarray(kern.pairwise(X, X), np.float64)).min())
+    cid_q = assign_points(kern, model_e.partition.model, Xq)[0]
+    b = oneclass_early_gap_bound(
+        kern, X, model_e.partition.assign, model_e.alpha, model.rho,
+        model_e.rho_clusters, Xq, cid_q, sigma_n,
+        alpha_exact=model.alpha)
+    assert np.isfinite(b["bound"]) and np.isfinite(b["bound_measured"])
+    # the semi-empirical bound is the tight(er) one; both must hold
+    assert gap <= b["bound_measured"] * (1 + 1e-6) + 1e-6, (gap, b)
+    assert gap <= b["bound"] * (1 + 1e-6) + 1e-6, (gap, b)
+    assert b["term_rho"] > 0.0       # the clusters really carry distinct rho_c
 
 
 def test_oneclass_serving_export_round_trip():

@@ -1,11 +1,12 @@
-"""Property-based solver conformance suite (ISSUE-4).
+"""Property-based solver conformance suite (ISSUE-4, extended by ISSUE-5).
 
 Every solver variant — box family (``solve_box_qp``, ``solve_box_qp_block``,
 ``solve_with_shrinking``, ``solve_box_qp_matvec``) and equality family
-(``solve_eq_qp``, ``solve_eq_qp_shrink``, ``solve_eq_qp_matvec``) — is run
-on randomized problems (random SPD Q, random linear term p, scalar-or-vector
-box c, and for the equality family random mixed-sign a with a strictly
-interior target d) and must return iterates that are
+(``solve_eq_qp``, ``solve_eq_qp_block``, ``solve_eq_qp_shrink``,
+``solve_eq_qp_matvec``) — is run on randomized problems (random SPD Q,
+random linear term p, scalar-or-vector box c, and for the equality family
+random mixed-sign a with a strictly interior target d) and must return
+iterates that are
 
 * box-feasible (0 <= u <= c),
 * equality-feasible to 1e-6 where applicable (x64 pass; the f32 pass is
@@ -16,10 +17,18 @@ interior target d) and must return iterates that are
 * no worse than an independent scipy reference solve (L-BFGS-B for the box
   family, SLSQP for the equality family) in final objective.
 
+New in ISSUE-5: the rank-2B blocked variants run the same conformance
+properties, plus a cross-engine property — ``solve_eq_qp_block(B)`` agrees
+with ``solve_eq_qp`` in final objective to 1e-5 for B in {1, 2, 8} on
+non-tile-aligned sizes — and a grouped (two-constraint) conformance pass
+against scipy SLSQP with both constraints active.
+
 The suite is hypothesis-driven when hypothesis is installed (CI pins
 --hypothesis-seed); in this container hypothesis is absent, so the same
 property functions run over a fixed seed grid — deterministic either way,
-with a bounded example budget so tier-1 stays fast.
+with a bounded example budget so tier-1 stays fast.  The whole module is
+marked ``properties`` so ``scripts/ci.sh --fast`` can skip it
+(``pytest -m "not properties"``) for a quick local loop.
 """
 import numpy as np
 import pytest
@@ -38,10 +47,13 @@ from repro.core import (
     solve_box_qp_block,
     solve_box_qp_matvec,
     solve_eq_qp,
+    solve_eq_qp_block,
     solve_eq_qp_matvec,
     solve_eq_qp_shrink,
     solve_with_shrinking,
 )
+
+pytestmark = pytest.mark.properties
 
 try:
     from hypothesis import HealthCheck, given, settings, strategies as st
@@ -191,8 +203,14 @@ def test_eq_solver_feasible_kkt_and_vs_reference_x64(seed):
         for name, run in {
             "pairwise": lambda: solve_eq_qp(Q, c, a, d, tol=1e-8,
                                             max_iters=500_000, p=p),
+            "block": lambda: solve_eq_qp_block(Q, c, a, d, tol=1e-8,
+                                               max_iters=100_000, block=4,
+                                               p=p),
             "shrink": lambda: solve_eq_qp_shrink(Q, c, a, d, tol=1e-8,
                                                  max_iters=500_000, p=p),
+            "shrink_block": lambda: solve_eq_qp_shrink(Q, c, a, d, tol=1e-8,
+                                                       max_iters=100_000,
+                                                       block=4, p=p),
         }.items():
             res = run()
             u = np.asarray(res.alpha)
@@ -221,15 +239,102 @@ def test_eq_solver_feasible_kkt_and_vs_reference_x64(seed):
 def test_eq_solver_f32_feasibility_floor(seed):
     """The f32 path keeps |a'u - d| at the f32 summation-noise floor of the
     constraint itself (scale-relative 1e-6-grade), not at accumulated-drift
-    scale."""
+    scale — for the rank-2 AND the rank-2B blocked engine."""
     Q, p, c, n = _box_qp(seed)
     a, d = _eq_extras(seed, c, n)
-    res = solve_eq_qp(Q, c, a, d, tol=1e-5, max_iters=300_000, p=p)
-    u = np.asarray(res.alpha, np.float64)
-    an = np.asarray(a, np.float64)
-    scale = np.abs(an * u).sum() + abs(d)
-    assert abs(an @ u - d) <= 4e-6 * max(scale, 1.0)
-    assert float(kkt_residual_eq(Q, res.alpha, c, a, p=p)) <= 1e-3
+    for run in (
+        lambda: solve_eq_qp(Q, c, a, d, tol=1e-5, max_iters=300_000, p=p),
+        lambda: solve_eq_qp_block(Q, c, a, d, tol=1e-5, max_iters=100_000,
+                                  block=8, p=p),
+    ):
+        res = run()
+        u = np.asarray(res.alpha, np.float64)
+        an = np.asarray(a, np.float64)
+        scale = np.abs(an * u).sum() + abs(d)
+        assert abs(an @ u - d) <= 4e-6 * max(scale, 1.0)
+        assert float(kkt_residual_eq(Q, res.alpha, c, a, p=p)) <= 1e-3
+
+
+@each_seed
+def test_eq_block_matches_pairwise_objective(seed):
+    """Acceptance criterion (cross-engine property): solve_eq_qp_block
+    reaches the same final objective as the rank-2 pairwise engine to 1e-5
+    for B in {1, 2, 8} on the non-tile-aligned conformance grid, while
+    staying box- and equality-feasible at the returned iterate."""
+    with enable_x64():
+        Q, p, c, n = _box_qp(seed, f64=True)
+        a, d = _eq_extras(seed, c, n, f64=True)
+        an = np.asarray(a)
+        cn = np.broadcast_to(np.asarray(c, np.float64), (n,))
+        ref = solve_eq_qp(Q, c, a, d, tol=1e-8, max_iters=500_000, p=p)
+        f_ref = _np_obj(Q, p, ref.alpha)
+        for B in (1, 2, 8):
+            res = solve_eq_qp_block(Q, c, a, d, tol=1e-8, max_iters=100_000,
+                                    block=B, p=p)
+            u = np.asarray(res.alpha)
+            assert u.min() >= -1e-12, B
+            assert (u <= cn + 1e-12).all(), B
+            assert abs(an @ u - d) <= 1e-6, (B, abs(an @ u - d))
+            f_b = _np_obj(Q, p, res.alpha)
+            assert abs(f_b - f_ref) <= 1e-5 * (1 + abs(f_ref)), (B, f_b, f_ref)
+
+
+@each_seed
+def test_eq_grouped_two_constraints_vs_slsqp(seed):
+    """Grouped decomposition (the two-constraint nu-SVC machinery): random
+    two-group partition, one interior mass target per group.  Both engines
+    must satisfy BOTH constraints to 1e-6, pass the grouped KKT residual,
+    and match a scipy SLSQP solve of the doubly-constrained QP."""
+    from scipy.optimize import minimize
+
+    with enable_x64():
+        Q, p, c, n = _box_qp(seed, f64=True)
+        a, _ = _eq_extras(seed, c, n, f64=True)
+        rng = np.random.default_rng(seed + 7)
+        gid_n = (rng.uniform(size=n) > 0.5).astype(np.int32)
+        if gid_n.min() == gid_n.max():       # degenerate draw: force 2 groups
+            gid_n[: n // 2] = 1 - gid_n[0]
+        an = np.asarray(a)
+        cn = np.broadcast_to(np.asarray(c, np.float64), (n,))
+        d2 = []
+        for g in (0, 1):
+            acg = (an * cn)[gid_n == g]
+            lo, hi = np.minimum(acg, 0).sum(), np.maximum(acg, 0).sum()
+            d2.append(float(lo + rng.uniform(0.2, 0.8) * (hi - lo)))
+        gid = jnp.asarray(gid_n)
+        d = jnp.asarray(d2)
+        for name, run in {
+            "pairwise": lambda: solve_eq_qp(Q, c, a, d, tol=1e-8,
+                                            max_iters=500_000, p=p, gid=gid,
+                                            n_groups=2),
+            "block": lambda: solve_eq_qp_block(Q, c, a, d, tol=1e-8,
+                                               max_iters=100_000, block=4,
+                                               p=p, gid=gid, n_groups=2),
+        }.items():
+            res = run()
+            u = np.asarray(res.alpha)
+            assert u.min() >= -1e-12 and (u <= cn + 1e-12).all(), name
+            for g in (0, 1):
+                got = (an * u)[gid_n == g].sum()
+                assert abs(got - d2[g]) <= 1e-6, (name, g, got, d2[g])
+            assert float(kkt_residual_eq(Q, res.alpha, c, a, p=p, gid=gid,
+                                         n_groups=2)) <= 1e-6, name
+
+        cons = [{"type": "eq",
+                 "fun": (lambda u, g=g: (an * u)[gid_n == g].sum() - d2[g]),
+                 "jac": (lambda u, g=g: np.where(gid_n == g, an, 0.0))}
+                for g in (0, 1)]
+        x0 = np.clip(np.full(n, 0.5) * cn, 0, cn)
+        ref = minimize(
+            lambda u: 0.5 * u @ np.asarray(Q) @ u + np.asarray(p) @ u,
+            x0, jac=lambda u: np.asarray(Q) @ u + np.asarray(p),
+            method="SLSQP", bounds=list(zip(np.zeros(n), cn)),
+            constraints=cons, options={"maxiter": 3000, "ftol": 1e-14})
+        res = solve_eq_qp_block(Q, c, a, d, tol=1e-8, max_iters=100_000,
+                                block=4, p=p, gid=gid, n_groups=2)
+        if ref.success:
+            f_ours = _np_obj(Q, p, res.alpha)
+            assert f_ours <= ref.fun + 1e-6 * (1 + abs(ref.fun))
 
 
 @each_seed
@@ -271,6 +376,8 @@ def test_objective_monotone_in_iteration_budget(seed):
     for run in (
         lambda k: solve_box_qp(Q, c, tol=0.0, max_iters=k, p=p),
         lambda k: solve_eq_qp(Q, c, a, d, tol=0.0, max_iters=k, p=p),
+        lambda k: solve_eq_qp_block(Q, c, a, d, tol=0.0, max_iters=k,
+                                    block=4, p=p),
     ):
         objs = [_np_obj(Q, p, run(k).alpha) for k in budgets]
         for f_prev, f_next in zip(objs, objs[1:]):
