@@ -4,7 +4,8 @@
 # caught early.
 #
 #   scripts/ci.sh            # full tier-1 + kernels/serve/svr/oneclass/
-#                            # eq-block bench smoke
+#                            # eq-block/dist bench smoke (dist spawns 1- and
+#                            # 8-forced-host-device subprocesses)
 #   scripts/ci.sh --fast     # quick local loop: tests only, and the
 #                            # hypothesis-backed property suite is skipped
 #                            # via its pytest marker (-m "not properties")
@@ -37,8 +38,10 @@ else
     python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
     # kernel, on the conquer solver, on the generalized SVR + one-class
-    # duals, and on the blocked (rank-2B) vs pairwise equality engines;
-    # writes BENCH_{conquer,serve,svr,oneclass}.json
-    python -m benchmarks.run --only kernels,serve,svr,oneclass,eq_block \
+    # duals, on the blocked (rank-2B) vs pairwise equality engines, and on
+    # the sharded parallel-block conquer (multi-device subprocesses assert
+    # fewer rounds-to-tol than the replicated baseline at 8 devices);
+    # writes BENCH_{conquer,serve,svr,oneclass,dist}.json
+    python -m benchmarks.run --only kernels,serve,svr,oneclass,eq_block,dist \
         --dry-run
 fi

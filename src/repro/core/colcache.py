@@ -37,9 +37,13 @@ class ColumnCache(NamedTuple):
     misses: Array    # ()       int32 rows recomputed
 
 
-def init(cap: int, n: int, dtype=jnp.float32) -> ColumnCache:
+def init(cap: int, n: int, dtype=jnp.float32, width: int = None) -> ColumnCache:
+    """``width`` decouples the cached-row length from the index space: the
+    distributed conquer caches (n_local,)-wide Q-row *slices* keyed by GLOBAL
+    coordinate index (n = global count, width = local shard width).  Default
+    ``None`` keeps the single-device shape (cap, n)."""
     return ColumnCache(
-        cols=jnp.zeros((cap, n), dtype),
+        cols=jnp.zeros((cap, n if width is None else width), dtype),
         owner=jnp.full((cap,), -1, jnp.int32),
         slot_of=jnp.full((n,), -1, jnp.int32),
         stamp=jnp.full((cap,), jnp.int32(-2 ** 30)),

@@ -553,11 +553,14 @@ def fit(
 
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
-                    num_chunks: int = 8) -> Array:
-    """f(alpha) on the FULL problem, computed without materializing Q.
-
-    On the Pallas path the Q @ alpha matvec streams through the fused
-    ``kernel_matvec`` kernel instead of the chunked ``lax.map``."""
+                    num_chunks: int = 8, p=-1.0) -> Array:
+    """f(alpha) = 1/2 alpha' Q alpha + p' alpha on the FULL generalized dual
+    (Q = (s s') ∘ K), computed without materializing Q.  ``y`` is the task's
+    sign vector ``s`` over the dual points ``X``; the default ``p = -1``
+    is the hinge objective.  On the Pallas path the Q @ alpha matvec streams
+    through the fused ``kernel_matvec`` kernel instead of the chunked
+    ``lax.map``."""
     Kv = gram_matvec(cfg.kernel, X, y * alpha, num_chunks=num_chunks,
                      use_pallas=resolve_use_pallas(cfg.use_pallas))
-    return 0.5 * jnp.vdot(alpha, y * Kv) - jnp.sum(alpha)
+    pvec = jnp.broadcast_to(jnp.asarray(p, alpha.dtype), alpha.shape)
+    return 0.5 * jnp.vdot(alpha, y * Kv) + jnp.vdot(pvec, alpha)

@@ -1,46 +1,75 @@
-"""Distributed DC-SVM: the paper's algorithm mapped onto a TPU pod via shard_map.
+"""Distributed DC-SVM: the paper's algorithm mapped onto a device mesh via
+shard_map, with a communication-efficient parallel-block conquer.
 
-Two SPMD programs:
+Two SPMD programs over the generalized box dual
+``min 1/2 u'Qu + p'u, 0 <= u <= c`` with ``Q = (s s') ∘ K`` (C-SVC,
+weighted C-SVC, epsilon-SVR — everything ``repro.core.tasks`` reduces to
+the box family):
 
-1. ``divide_step`` — clusters sharded across devices; each device solves its
-   local clusters with the vmapped CD solver.  ZERO collectives: DC-SVM's
-   divide step is embarrassingly parallel *by construction* (Lemma 1 makes
-   the subproblems exactly independent), which is why the algorithm maps so
-   well onto a pod.  With the multi-pod mesh, clusters are assigned to pods
-   first (outer axis), so the divide step is also DCN-quiet.
+1. ``divide_step`` — clusters sharded across devices; each device solves
+   its local clusters with the vmapped CD solver against *locally resident*
+   Gram blocks (built once per cluster on-device; a sequential ``lax.map``
+   sweep caps peak memory at one cluster's Grams when the per-device batch
+   exceeds ``gram_budget``).  ZERO collectives: DC-SVM's divide step is
+   embarrassingly parallel *by construction* (Lemma 1 makes the subproblems
+   exactly independent), which is why the algorithm maps so well onto a pod.
 
-2. ``conquer_step`` — distributed block greedy CD on the full problem.
-   Layout: rows of (X, y, alpha, g) sharded over the flattened mesh axis;
-   per outer iteration:
-     a. each device takes its local top-B coordinates by |projected gradient|
-     b. one all-gather of the candidates' (score, feature-row, g, alpha, y)
-        — O(P * B * d) bytes, the only communication
-     c. every device deterministically selects the same global top-B,
-        solves the same small BxB QP (replicated compute, no broadcast)
-     d. local rank-B gradient update  g_l += (y_l y_b K(X_l, X_b)) @ delta
-        — the O(n d B) hot loop, fully local (Pallas `cd_update` on TPU)
-     e. owners scatter the alpha update into their shard
-   Selection is exact global Gauss-Southwell-B (same trajectory as the
-   single-device solver whenever per-device candidate counts B are not
-   exceeded by clustered violations).
+2. ``conquer_step`` — parallel block minimization (CE-PBM; Hsieh, Si &
+   Dhillon 2016) on the full problem.  Rows of (X, s, alpha, g) are sharded
+   over the mesh axis; per communication round:
+
+     a. every device takes its LOCAL top-B coordinates by |projected
+        gradient| and solves its OWN BxB sub-QP against on-the-fly kernel
+        columns — P independent block solves per round;
+     b. ONE all-gather ships the P rank-B updates (feature rows, signs,
+        deltas, indices) — O(P * B * d) bytes, the only bulk communication;
+     c. each device applies the rank-P*B gradient update as a single skinny
+        matmul ``g_l += gamma * (s_l ∘ (K(X_l, X_sel) @ (s_sel ∘ delta)))``
+        (fused Pallas ``cd_column_update`` on the Pallas path; the
+        ``core.colcache`` LRU serves repeat blocks without recomputing);
+     d. the combination step size ``gamma = clip(-g'Δ / Δ'QΔ, 0, 1)``
+        (solver.combination_step_size) keeps the P simultaneous block
+        updates convergent WITHOUT backtracking — ``Δ'QΔ`` from the
+        replicated gathered-block Gram, ``g'Δ`` from one scalar psum, so
+        the loop condition stays uniform across devices.  Scaled steps
+        that a block solve aimed AT a box bound snap onto it once within
+        an O(tol) band (a ``(1-gamma)``-contraction never lands exactly,
+        and the projected gradient would report the gap forever);
+     e. owners write the post-snap block values into their alpha shard
+        (blocks live on disjoint shards, so there are no collisions), and
+        the exactly-applied step — not the proposal — is what entered the
+        gradient matmul in (c), keeping the maintained gradient drift-free.
+
+   That is P× more coordinate updates per round at the same bytes on the
+   wire as a single replicated global block step.  ``mode="replicated"``
+   keeps the legacy scheme — exact global Gauss-Southwell-B where all
+   devices deterministically solve the SAME global top-B block — as the
+   communication-round baseline (benchmarks/bench_dist.py).
+
+``fit_distributed`` runs the multilevel pipeline device-resident: SV
+detection between levels is a scatter-add on device, adaptive kmeans
+sampling draws on device (``_sv_sample``), and alpha never round-trips
+through NumPy until the caller asks for it.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core.kernels import Kernel
-from repro.core.solver import SolveResult, _solve_small_qp, proj_grad
+from repro.core import colcache
+from repro.core.kernels import Kernel, gram, resolve_use_pallas
+from repro.core.solver import (_solve_small_qp, combination_step_size,
+                               proj_grad)
 from repro.core import solver as S
+from repro.core.tasks import Task, TaskDual, resolve_task
 
 Array = jax.Array
 
@@ -54,42 +83,64 @@ def divide_step(
     axis: str,
     cfg,
     Xc: Array,
-    yc: Array,
+    sc: Array,
+    pc: Array,
+    cc: Array,
     ac: Array,
     mask: Array,
 ) -> Array:
-    """Solve all clusters, sharded over ``axis``. Xc: (k, nc, d) with k a
-    multiple of the axis size. Returns updated (k, nc) alphas."""
-    C, tol, max_iters = cfg.C, cfg.tol, cfg.max_iters
-    kernel, block, sweeps = cfg.kernel, cfg.block, cfg.sweeps
+    """Solve one level's clusters of the generalized dual, sharded over
+    ``axis``.
 
-    def local(Xl, yl, al, ml):
-        def one(Xi, yi, ai, mi):
-            nc = Xi.shape[0]
-            Ki = kernel.pairwise(Xi, Xi)
-            Qi = (yi[:, None] * yi[None, :]) * Ki
+    ``Xc``: (k, nc, d) with k a multiple of the axis size; ``sc``/``pc``/
+    ``cc``/``ac``/``mask``: (k, nc) per-cluster sign vectors, linear terms,
+    boxes, warm starts and pad masks.  Each device's Gram blocks are built
+    and consumed locally (per-device Gram residency: no cluster data or
+    kernel block ever crosses the mesh); when the local stacked Grams
+    ``(k/P) * nc^2`` exceed ``cfg.gram_budget`` the vmapped solve falls back
+    to a sequential ``lax.map`` sweep — one cluster Gram live at a time.
+    Returns the updated (k, nc) dual variables.
+    """
+    tol, max_iters = cfg.tol, cfg.max_iters
+    kernel, block, sweeps = cfg.kernel, cfg.block, cfg.sweeps
+    use_pallas = resolve_use_pallas(cfg.use_pallas)
+    P_ = mesh.shape[axis]
+    k, nc, _ = Xc.shape
+    if k % P_ != 0:
+        raise ValueError(
+            f"cluster count {k} must be a multiple of the mesh axis size "
+            f"{P_} (fit_distributed rounds k up for you)")
+    resident = (k // P_) * nc * nc <= cfg.gram_budget
+
+    def local(Xl, sl, pl, cl, al, ml):
+        def one(Xi, si, pi, ci, ai, mi):
+            Ki = gram(kernel, Xi, Xi, use_pallas=use_pallas)
             mm = mi[:, None] & mi[None, :]
-            Qi = jnp.where(mm, Qi, 0.0)
+            Qi = (si[:, None] * si[None, :]) * jnp.where(mm, Ki, 0.0)
             Qi = Qi + jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Qi.dtype)
             ai = jnp.where(mi, ai, 0.0)
             if block > 0 and block < nc:
-                res = S.solve_box_qp_block(Qi, C, alpha0=ai, tol=tol,
+                res = S.solve_box_qp_block(Qi, ci, alpha0=ai, tol=tol,
                                            max_iters=max_iters, block=block,
-                                           sweeps=sweeps, active_mask=mi)
+                                           sweeps=sweeps, active_mask=mi,
+                                           p=pi)
             else:
-                res = S.solve_box_qp(Qi, C, alpha0=ai, tol=tol,
-                                     max_iters=max_iters, active_mask=mi)
+                res = S.solve_box_qp(Qi, ci, alpha0=ai, tol=tol,
+                                     max_iters=max_iters, active_mask=mi,
+                                     p=pi)
             return res.alpha
 
-        return jax.vmap(one)(Xl, yl, al, ml)
+        if resident:
+            return jax.vmap(one)(Xl, sl, pl, cl, al, ml)
+        return lax.map(lambda t: one(*t), (Xl, sl, pl, cl, al, ml))
 
     spec = P(axis)
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(spec, spec, spec, spec),
+        in_specs=(spec,) * 6,
         out_specs=spec,
     )
-    return fn(Xc, yc, ac, mask)
+    return fn(Xc, sc, pc, cc, ac, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -99,11 +150,17 @@ def divide_step(
 @dataclasses.dataclass(frozen=True)
 class ConquerConfig:
     kernel: Kernel
-    C: float
+    C: float = 1.0           # scalar box; per-coordinate via conquer_step(c=...)
     tol: float = 1e-3
-    max_iters: int = 2_000
-    block: int = 64          # global block size AND per-device candidate count
+    max_iters: int = 2_000   # communication-round cap
+    block: int = 64          # per-device block size B
     sweeps: int = 4
+    mode: str = "parallel"   # "parallel" = CE-PBM (P local blocks/round);
+                             # "replicated" = legacy global top-B baseline
+    use_pallas: Optional[bool] = None  # None = auto (Pallas on TPU)
+    cache_cap: int = 0       # LRU slots for (P*B, n_local) Q-row slices;
+                             # 0 = fully fused recompute (parallel mode only)
+    grad_chunks: int = 16    # row chunks for the XLA initial-gradient matvec
 
 
 def conquer_step(
@@ -111,107 +168,305 @@ def conquer_step(
     axis: str,
     cfg: ConquerConfig,
     X: Array,
-    y: Array,
+    s: Array,
     alpha0: Array,
+    p=-1.0,
+    c=None,
+    valid: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array]:
-    """Distributed block greedy CD on the full problem, warm-started.
+    """Distributed conquer on the full generalized dual, warm-started.
 
-    X: (n, d), y/alpha0: (n,) with n a multiple of the axis size.
-    Returns (alpha, iters, pg_max)."""
-    kernel, C, B = cfg.kernel, cfg.C, cfg.block
+    ``X``: (n, d) dual points, ``s``/``alpha0``: (n,) sign vector and warm
+    start — any n: rows are padded internally with masked c=0 coordinates
+    up to a multiple of the axis size and sliced back on return.  ``p`` and
+    ``c`` may be scalars or (n,) vectors (weighted boxes / the SVR linear
+    term); ``valid`` masks coordinates out of selection (used for padding).
+    Returns ``(alpha, rounds, pg_max)`` where ``rounds`` counts
+    communication rounds and ``pg_max`` is the projected-gradient residual
+    recomputed AT the returned alpha (the pre-fix code reported the
+    stopping value of the previous iterate).
+    """
+    if cfg.mode not in ("parallel", "replicated"):
+        raise ValueError(f"unknown conquer mode {cfg.mode!r} "
+                         f"(expected 'parallel' or 'replicated')")
+    kernel = cfg.kernel
+    use_pallas = resolve_use_pallas(cfg.use_pallas)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
     P_ = mesh.shape[axis]
-    n = X.shape[0]
-    assert n % P_ == 0, (n, P_)
+    n0, d = X.shape
+    dtype = X.dtype
+    acc = jnp.promote_types(dtype, jnp.float32)
+    s = jnp.asarray(s, dtype)
+    alpha0 = jnp.asarray(alpha0, dtype)
+    cvec = jnp.broadcast_to(
+        jnp.asarray(cfg.C if c is None else c, dtype), (n0,))
+    pvec = jnp.broadcast_to(jnp.asarray(p, dtype), (n0,))
+    vvec = (jnp.ones(n0, bool) if valid is None
+            else jnp.asarray(valid).astype(bool))
 
-    def local(Xl, yl, al):
-        # ---- initial local gradient: g_l = Q[l, :] @ alpha - 1 -------------
-        Xg = lax.all_gather(Xl, axis).reshape(n, Xl.shape[1])
-        wg = lax.all_gather(yl * al, axis).reshape(n)
-        g_l = yl * (kernel.pairwise(Xl, Xg) @ wg) - 1.0
+    # ---- pad to a multiple of the device count with inert coordinates ----
+    pad = (-n0) % P_
+    if pad:
+        X = jnp.concatenate([X, jnp.zeros((pad, d), dtype)])
+        s = jnp.concatenate([s, jnp.ones(pad, dtype)])
+        alpha0 = jnp.concatenate([alpha0, jnp.zeros(pad, dtype)])
+        cvec = jnp.concatenate([cvec, jnp.zeros(pad, dtype)])
+        pvec = jnp.concatenate([pvec, jnp.zeros(pad, dtype)])
+        vvec = jnp.concatenate([vvec, jnp.zeros(pad, bool)])
+    n = n0 + pad
+    n_l = n // P_
+    B = max(1, min(cfg.block, n_l))
+    cache_cap = 0 if cfg.mode != "parallel" else cfg.cache_cap
+    if cache_cap > 0:
+        cache_cap = max(cache_cap, P_ * B)   # insert needs one full block
+
+    def cross_matvec(Xl, Z, w):
+        """K(X_l, Z) @ w without materializing the (n_l, n) block."""
+        if use_pallas:
+            return kops.kernel_matvec(Xl, Z, w, kernel)
+        nl = Xl.shape[0]
+        chunks = max(1, min(cfg.grad_chunks, nl))
+        padl = (-nl) % chunks
+        Xp = jnp.pad(Xl, ((0, padl), (0, 0))) if padl else Xl
+        out = lax.map(lambda Xi: kernel.pairwise(Xi, Z) @ w,
+                      Xp.reshape(chunks, -1, d))
+        return out.reshape(-1)[:nl]
+
+    def local(Xl, sl, al, pl, cl, vl):
+        me = lax.axis_index(axis)
+        # ---- initial local gradient: g_l = Q[l, :] @ alpha + p ------------
+        Xg = lax.all_gather(Xl, axis).reshape(n, d)
+        wg = lax.all_gather(sl * al, axis).reshape(n)
+        g_l = (sl * cross_matvec(Xl, Xg, wg)).astype(acc) + pl.astype(acc)
+
+        def scores_of(al, g_l):
+            # pads (and caller-invalidated rows) never enter selection;
+            # proj_grad alone is not enough — a c=0 coordinate still
+            # reports max(g, 0) as "violation" at its (degenerate) bound
+            return jnp.abs(jnp.where(vl, proj_grad(al, g_l, cl), 0.0))
+
+        def qdelta(Xsel, ssel, w):
+            """(QΔ) restricted to local rows: s_l ∘ (K(X_l, X_sel) @ w),
+            w = s_sel ∘ Δ_sel — the rank-P*B skinny matmul (fused Pallas
+            cd_column_update on the Pallas path)."""
+            if use_pallas:
+                return kops.cd_column_update(Xl, sl, Xsel, w, kernel
+                                             ).astype(acc)
+            return (sl * (kernel.pairwise(Xl, Xsel) @ w)).astype(acc)
+
+        def propose(al, g_l):
+            """One CE-PBM proposal: local GS-B block, local BxB solve, one
+            all-gather of the P rank-B updates, combination step size.
+
+            gamma is decided BEFORE the gradient update: ``dQd`` comes from
+            the replicated (P*B, P*B) selected-block Gram (O((PB)^2 d)
+            flops, zero communication) and ``gTd`` from a scalar psum.
+            Coordinates whose block solve targeted a box bound are SNAPPED
+            onto it when the gamma-scaled step lands within eps — without
+            this, gamma < 1 makes bound-bound coordinates approach their
+            bound geometrically but never reach it, so their projected
+            gradient (which treats any interior point as free) stays O(1)
+            forever and the stopping test cannot fire.  eps is tied to
+            cfg.tol so a snapped coordinate's residual bound-distance can
+            never re-trip selection.  The skinny gradient matmul then uses
+            the exactly-APPLIED step (all-gathered, P*B floats), so the
+            maintained gradient stays drift-free through snapping.
+            """
+            sc_ = scores_of(al, g_l)
+            _, ib = lax.top_k(sc_, B)
+            Xb, sb, ab, gb, cb = Xl[ib], sl[ib], al[ib], g_l[ib], cl[ib]
+            Qbb = ((sb[:, None] * sb[None, :])
+                   * kernel.pairwise(Xb, Xb)).astype(acc)
+            target = _solve_small_qp(Qbb, gb, ab.astype(acc), cb, cfg.sweeps)
+            delta = target - ab.astype(acc)
+            gath = {k2: lax.all_gather(v, axis) for k2, v in
+                    dict(x=Xb, s=sb, d=delta,
+                         i=ib.astype(jnp.int32)).items()}
+            Xsel = gath["x"].reshape(P_ * B, d)
+            ssel = gath["s"].reshape(-1)
+            dsel = gath["d"].reshape(-1)
+            gidx = (jnp.arange(P_, dtype=jnp.int32)[:, None] * n_l
+                    + gath["i"]).reshape(-1)
+            Qsel = ((ssel[:, None] * ssel[None, :])
+                    * kernel.pairwise(Xsel, Xsel)).astype(acc)
+            dQd = jnp.vdot(dsel, Qsel @ dsel)
+            gTd = lax.psum(jnp.vdot(gb.astype(acc), delta), axis)
+            gamma = combination_step_size(gTd, dQd)
+            a_new = (ab.astype(acc) + gamma * delta).astype(dtype)
+            eps = (0.1 * cfg.tol * (1.0 + cb)).astype(dtype)
+            a_new = jnp.where((target <= 0.0) & (a_new <= eps),
+                              jnp.zeros((), dtype), a_new)
+            a_new = jnp.where((target >= cb.astype(acc))
+                              & (a_new >= cb - eps), cb, a_new)
+            applied = a_new.astype(acc) - ab.astype(acc)
+            asel = lax.all_gather(applied, axis).reshape(-1)
+            pg = lax.pmax(jnp.max(sc_), axis)
+            return ib, a_new, Xsel, ssel, asel, gidx, pg
+
+        def q_rows_local(Xsel, ssel):
+            """(P*B, n_l) Q-row slices of the selected block against the
+            local shard — the cache-refill unit."""
+            if use_pallas:
+                return kops.q_rows(Xl, sl, Xsel, ssel, kernel).astype(acc)
+            return ((ssel[:, None] * sl[None, :])
+                    * kernel.pairwise(Xsel, Xl)).astype(acc)
 
         def cond(state):
-            _, _, it, pg_max = state
-            return (pg_max > cfg.tol) & (it < cfg.max_iters)
+            it, pg = state[-2], state[-1]
+            return (pg > cfg.tol) & (it < cfg.max_iters)
 
-        def body(state):
-            al, g_l, it, _ = state
-            pg = proj_grad(al, g_l, C)
-            scores = jnp.abs(pg)
-            sb, ib = lax.top_k(scores, B)                     # local candidates
-            cand = dict(
-                s=sb, x=Xl[ib], g=g_l[ib], a=al[ib], y=yl[ib],
-                idx=ib.astype(jnp.int32),
-            )
-            gath = {k: lax.all_gather(v, axis) for k, v in cand.items()}  # (P, B, ...)
-            flat_s = gath["s"].reshape(-1)                    # (P*B,)
-            _, sel = lax.top_k(flat_s, B)                     # global top-B
-            xb = gath["x"].reshape(-1, Xl.shape[1])[sel]      # (B, d) replicated
-            gb = gath["g"].reshape(-1)[sel]
-            ab = gath["a"].reshape(-1)[sel]
-            yb = gath["y"].reshape(-1)[sel]
-            owner = (sel // B).astype(jnp.int32)
-            lidx = gath["idx"].reshape(-1)[sel]
+        pg0 = lax.pmax(jnp.max(scores_of(al, g_l)), axis)
 
-            Qbb = (yb[:, None] * yb[None, :]) * kernel.pairwise(xb, xb)
-            new_ab = _solve_small_qp(Qbb, gb, ab, C, cfg.sweeps)
-            delta = new_ab - ab
+        if cfg.mode == "parallel" and cache_cap == 0:
+            def body(state):
+                al, g_l, it, _ = state
+                ib, a_new, Xsel, ssel, asel, _, pg = propose(al, g_l)
+                g_l = g_l + qdelta(Xsel, ssel, ssel * asel)
+                al = al.at[ib].set(a_new)
+                return al, g_l, it + 1, pg
 
-            # local rank-B gradient update (Pallas cd_update on TPU)
-            Kb = kernel.pairwise(Xl, xb)                      # (n_l, B)
-            g_l = g_l + (yl[:, None] * (Kb * yb[None, :])) @ delta
+            state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
+            al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
 
-            # owners scatter alpha updates into their shard
-            me = lax.axis_index(axis)
-            own = owner == me
-            safe_idx = jnp.where(own, lidx, 0)
-            al = al.at[safe_idx].add(jnp.where(own, delta, 0.0))
+        elif cfg.mode == "parallel":
+            def body(state):
+                al, g_l, cache, it, _ = state
+                ib, a_new, Xsel, ssel, asel, gidx, pg = propose(al, g_l)
+                slots, hit = colcache.lookup(cache, gidx)
+                served = jnp.all(hit)
+                Qrows = lax.cond(
+                    served,
+                    lambda: cache.cols[jnp.where(hit, slots, 0)],
+                    lambda: q_rows_local(Xsel, ssel),
+                )
+                cache = colcache.update(cache, gidx, Qrows, served, slots,
+                                        hit)
+                g_l = g_l + asel @ Qrows
+                al = al.at[ib].set(a_new)
+                return al, g_l, cache, it + 1, pg
 
-            pg_max = lax.pmax(jnp.max(scores), axis)
-            return al, g_l, it + 1, pg_max
+            cache0 = colcache.init(cache_cap, n, dtype=acc, width=n_l)
+            state0 = (al, g_l, cache0, jnp.zeros((), jnp.int32), pg0)
+            al, g_l, _, rounds, _ = lax.while_loop(cond, body, state0)
 
-        pg0 = lax.pmax(jnp.max(jnp.abs(proj_grad(al, g_l, C))), axis)
-        al, g_l, iters, pg_max = lax.while_loop(cond, body, (al, g_l, 0, pg0))
-        return al, jnp.asarray(iters)[None], pg_max[None]
+        else:   # replicated: legacy exact global GS-B baseline
+            def body(state):
+                al, g_l, it, _ = state
+                sc_ = scores_of(al, g_l)
+                sb, ib = lax.top_k(sc_, B)              # local candidates
+                cand = dict(sc=sb, x=Xl[ib], g=g_l[ib], a=al[ib], y=sl[ib],
+                            c=cl[ib], i=ib.astype(jnp.int32))
+                gath = {k2: lax.all_gather(v, axis) for k2, v in
+                        cand.items()}
+                flat = gath["sc"].reshape(-1)
+                _, sel = lax.top_k(flat, B)             # same global top-B
+                xb = gath["x"].reshape(P_ * B, d)[sel]
+                gb = gath["g"].reshape(-1)[sel]
+                ab = gath["a"].reshape(-1)[sel]
+                yb = gath["y"].reshape(-1)[sel]
+                cb = gath["c"].reshape(-1)[sel]
+                owner = (sel // B).astype(jnp.int32)
+                lidx = gath["i"].reshape(-1)[sel]
+                Qbb = ((yb[:, None] * yb[None, :])
+                       * kernel.pairwise(xb, xb)).astype(acc)
+                new_ab = _solve_small_qp(Qbb, gb, ab.astype(acc), cb,
+                                         cfg.sweeps)
+                delta = (new_ab - ab).astype(acc)
+                g_l = g_l + qdelta(xb, yb, yb * delta)
+                own = owner == me
+                safe_idx = jnp.where(own, lidx, 0)
+                al = al.at[safe_idx].add(
+                    jnp.where(own, delta, 0.0).astype(dtype))
+                pg = lax.pmax(jnp.max(sc_), axis)
+                return al, g_l, it + 1, pg
+
+            state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
+            al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
+
+        # residual at the RETURNED alpha, not the pre-update stopping value
+        pg_exit = lax.pmax(jnp.max(scores_of(al, g_l)), axis)
+        return al, rounds[None], pg_exit[None]
 
     spec = P(axis)
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(spec, spec, spec),
+        in_specs=(spec,) * 6,
         out_specs=(spec, P(axis), P(axis)),
     )
-    alpha, iters, pg = fn(X, y, alpha0)
-    return alpha, iters[0], jnp.max(pg)
+    alpha, rounds, pg = fn(X, s, alpha0, pvec, cvec, vvec)
+    return alpha[:n0], rounds[0], jnp.max(pg)
 
 
 # ---------------------------------------------------------------------------
 # full distributed DC-SVM driver
 # ---------------------------------------------------------------------------
 
+def _sv_sample(key: Array, sv_mask: Array, m: int) -> Array:
+    """Device-side adaptive kmeans sample: m indices with every support
+    vector first (random order) and random non-SV fill when fewer than m
+    SVs exist — the static-shape, no-host-round-trip replacement for
+    ``rng.choice(sv_idx)``."""
+    u = jax.random.uniform(key, sv_mask.shape)
+    _, idx = lax.top_k(jnp.where(sv_mask, 1.0 + u, u), m)
+    return idx
+
+
 def fit_distributed(
     cfg,
     mesh: Mesh,
     axis: str,
     X: Array,
-    y: Array,
+    y: Optional[Array] = None,
+    task: Optional[Task] = None,
     conquer_block: int = 64,
     conquer_iters: int = 5_000,
+    mode: str = "parallel",
+    cache_cap: int = 0,
 ):
-    """Multilevel DC-SVM where every level's cluster solves run sharded over
-    ``axis`` and the final conquer runs the distributed block CD.
+    """Multilevel DC-SVM with every level's cluster solves sharded over
+    ``axis`` and the final conquer running parallel block minimization.
 
-    ``cfg`` is a core.dcsvm.DCSVMConfig.  Cluster counts are rounded up to a
-    multiple of the axis size so every device gets equal work (balanced
-    clusters double as straggler mitigation: lockstep SPMD with equal tiles).
-    Returns (alpha, stats list).
+    ``cfg`` is a core.dcsvm.DCSVMConfig; ``task`` selects the workload
+    (C-SVC default, WeightedCSVC, EpsilonSVR — any single-row box-family
+    task; the equality-constrained family is single-host for now).  Cluster
+    counts are rounded up to a multiple of the axis size so every device
+    gets equal work (balanced clusters double as straggler mitigation:
+    lockstep SPMD with equal tiles); any dataset size works — the conquer
+    pads internally.  The pipeline is device-resident between levels: SV
+    detection is a scatter-add over ``base_index`` on device and the
+    adaptive kmeans sample draws on device, so alpha never round-trips
+    through NumPy.  Returns ``(alpha (n_dual,), stats list)``.
     """
-    from repro.core.kkmeans import two_step_kernel_kmeans
+    from repro.core.kkmeans import Partition, two_step_kernel_kmeans
 
-    P_ = mesh.shape[axis]
+    task = resolve_task(task)
+    X = jnp.asarray(X)
     n = X.shape[0]
+    if y is None:
+        if not task.label_free:
+            raise ValueError(f"task {task.name!r} requires labels y")
+        y = jnp.zeros(n, X.dtype)
+    y = jnp.asarray(y, X.dtype)
+    td = task.build(X, y[None, :], cfg.C)
+    if td.has_equality:
+        raise NotImplementedError(
+            f"distributed fit covers the box dual family (svc / "
+            f"weighted-svc / svr); task {task.name!r} carries an equality "
+            f"constraint — use core.dcsvm.fit")
+    if td.n_rows != 1:
+        raise ValueError("distributed fit is single-row (binary labels or "
+                         f"regression); got n_rows={td.n_rows}")
+    nd = td.n_dual
+    base_index = np.asarray(td.base_index)
+    bidx = jnp.asarray(base_index)
+    s1, p1, c1 = td.S[0], td.P[0], td.Cvec[0]
+    use_pallas = resolve_use_pallas(cfg.use_pallas)
+    P_ = mesh.shape[axis]
     key = jax.random.PRNGKey(cfg.seed)
-    rngnp = np.random.default_rng(cfg.seed)
-    alpha = jnp.zeros(n, X.dtype)
-    sv_idx = None
+    alpha = jnp.zeros(nd, X.dtype)
+    sv_base = None            # (n,) on-device SV mass per base point
     stats = []
 
     for l in range(cfg.levels, 0, -1):
@@ -219,28 +474,78 @@ def fit_distributed(
         kl = -(-kl // P_) * P_          # multiple of device count
         if kl >= n // 2:
             continue
-        key, sub = jax.random.split(key)
+        key, sub, ksamp = jax.random.split(key, 3)
         sample_idx = None
-        if cfg.adaptive and sv_idx is not None and len(sv_idx) > kl:
-            sample_idx = rngnp.choice(sv_idx, size=min(cfg.m, len(sv_idx)),
-                                      replace=False)
+        if cfg.adaptive and sv_base is not None:
+            sample_idx = _sv_sample(ksamp, sv_base > 0, min(cfg.m, n))
         part = two_step_kernel_kmeans(cfg.kernel, X, kl, sub, m=cfg.m,
                                       iters=cfg.kmeans_iters,
                                       sample_idx=sample_idx,
-                                      balanced=True)
-        Xc = part.gather(X)
-        yc = part.gather(y)
-        mask = jnp.asarray(part.mask)
-        ac = jnp.where(mask, part.gather(alpha), 0.0)
-        ac = divide_step(mesh, axis, cfg, Xc, yc, ac, mask)
-        alpha = part.scatter(ac, n)
-        sv_idx = np.nonzero(np.asarray(alpha) > 0)[0]
-        stats.append(dict(level=l, clusters=kl, n_sv=int(len(sv_idx))))
+                                      balanced=True, use_pallas=use_pallas)
+        # expand the base partition to dual coordinates (SVR's mirrored
+        # pair of a sample shares its cluster)
+        dpart = part if nd == n else Partition.build(
+            np.asarray(part.assign)[base_index].astype(np.int32), kl,
+            part.model)
+        mask = jnp.asarray(dpart.mask)
+        ac = jnp.where(mask, dpart.gather(alpha), 0.0)
+        ac = divide_step(mesh, axis, cfg, dpart.gather(td.Xd),
+                         dpart.gather(s1), dpart.gather(p1),
+                         dpart.gather(c1), ac, mask)
+        alpha = dpart.scatter(ac, nd)
+        # device-resident SV tracking: dual mass scatter-added per base
+        # point (the box family keeps alpha >= 0, so mass > 0 <=> any SV)
+        sv_base = jnp.zeros(n, X.dtype).at[bidx].add(alpha)
+        stats.append(dict(level=l, clusters=kl,
+                          n_sv=jnp.sum(sv_base > 0)))
 
     ccfg = ConquerConfig(kernel=cfg.kernel, C=cfg.C, tol=cfg.tol,
                          max_iters=conquer_iters, block=conquer_block,
-                         sweeps=cfg.sweeps)
-    alpha, iters, pg = conquer_step(mesh, axis, ccfg, X, y, alpha)
-    stats.append(dict(level=0, iters=int(iters), pg_max=float(pg),
-                      n_sv=int(np.sum(np.asarray(alpha) > 0))))
-    return alpha, stats
+                         sweeps=cfg.sweeps, mode=mode,
+                         use_pallas=cfg.use_pallas, cache_cap=cache_cap)
+    alpha, rounds, pg = conquer_step(mesh, axis, ccfg, td.Xd, s1, alpha,
+                                     p=p1, c=c1)
+    sv_base = jnp.zeros(n, X.dtype).at[bidx].add(alpha)
+    stats.append(dict(level=0, rounds=rounds, pg_max=pg,
+                      n_sv=jnp.sum(sv_base > 0)))
+    return alpha, _finalize_stats(stats)
+
+
+def _finalize_stats(stats):
+    """One host sync at exit: convert the accumulated device scalars."""
+    out = []
+    for st in stats:
+        fin = {}
+        for k2, v in st.items():
+            if isinstance(v, jax.Array):
+                v = v.item()
+                v = int(v) if float(v).is_integer() else float(v)
+            fin[k2] = v
+        out.append(fin)
+    return out
+
+
+def fit_distributed_model(
+    cfg,
+    mesh: Mesh,
+    axis: str,
+    X: Array,
+    y: Optional[Array] = None,
+    task: Optional[Task] = None,
+    **kw,
+):
+    """``fit_distributed`` wrapped into a ``DCSVMModel`` (collapsed beta
+    over the base points), so distributed training feeds the same
+    prediction / serving path as the single-host driver."""
+    from repro.core.dcsvm import DCSVMModel
+
+    task = resolve_task(task)
+    X = jnp.asarray(X)
+    if y is None:
+        y = jnp.zeros(X.shape[0], X.dtype)
+    y = jnp.asarray(y, X.dtype)
+    alpha, stats = fit_distributed(cfg, mesh, axis, X, y, task=task, **kw)
+    td = task.build(X, y[None, :], cfg.C)
+    beta = td.collapse(alpha[None, :])[0]
+    return DCSVMModel(cfg, X, y, alpha, None, False, stats, task=task,
+                      beta=beta)

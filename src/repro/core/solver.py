@@ -120,6 +120,32 @@ def kkt_residual(Q: Array, alpha: Array, C, p=-1.0) -> Array:
     return jnp.max(jnp.abs(proj_grad(alpha, g, C)))
 
 
+def combination_step_size(gTd: Array, dQd: Array) -> Array:
+    """CE-PBM combined step size: backtracking-free exact line search on the
+    dual quadratic (Hsieh, Si & Dhillon 2016, the distributed conquer).
+
+    P devices simultaneously minimize their own block sub-QPs and propose
+    the combined direction ``Δ = Σ_p Δ_p`` (disjoint coordinate support).
+    Applying every block at full length can overshoot — each local solve
+    ignores the cross-block curvature — so the combined update is
+    ``α + γ Δ`` with
+
+        γ* = argmin_γ f(α + γΔ) = -g'Δ / Δ'QΔ,   clipped to [0, 1].
+
+    Both α and α + Δ are box-feasible and the blocks touch disjoint
+    coordinates, so every γ in [0, 1] stays feasible.  Descent needs no
+    backtracking loop: at the interior minimizer the decrease is
+    ``-(g'Δ)² / (2 Δ'QΔ) <= 0``, and when γ* clips at 1 it is still
+    ``<= -Δ'QΔ / 2``.  Each block solve only ever decreases its own
+    sub-model, so ``g'Δ <= -½ Σ_p Δ_p' Q_pp Δ_p <= 0`` and the unclipped
+    γ* is nonnegative; ``Δ'QΔ <= 0`` (PSD Q) only when Δ vanishes, where
+    γ = 1 is a no-op.  Takes the two already-reduced scalars so the
+    distributed caller can psum them instead of gathering gradients.
+    """
+    gamma = jnp.where(dQd > 0.0, -gTd / jnp.where(dQd > 0.0, dQd, 1.0), 1.0)
+    return jnp.clip(gamma, 0.0, 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Greedy single-coordinate CD (paper-faithful conquer/sub-solver)
 # ---------------------------------------------------------------------------
@@ -321,9 +347,8 @@ def solve_box_qp_matvec(
         """(B, n) rows of Q for the selected block (Q is symmetric)."""
         Xb, yb = X[idx], y[idx]
         if use_pallas:
-            Kb = kops.kernel_matrix(Xb, X, kernel)
-        else:
-            Kb = kernel.pairwise(Xb, X)
+            return kops.q_rows(X, y, Xb, yb, kernel).astype(acc)
+        Kb = kernel.pairwise(Xb, X)
         return ((yb[:, None] * y[None, :]) * Kb).astype(acc)
 
     if cache_cap > 0:

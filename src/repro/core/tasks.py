@@ -97,6 +97,11 @@ class TaskDual(NamedTuple):
         return self.Xd.shape[0]
 
     @property
+    def n_rows(self) -> int:
+        """Leading class-stack size (1 for binary / regression)."""
+        return self.S.shape[0]
+
+    @property
     def n_base(self) -> int:
         return int(self.base_index.max()) + 1 if self.base_index.size else 0
 

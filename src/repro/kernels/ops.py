@@ -65,6 +65,16 @@ def kernel_matvec(X: jax.Array, Z: jax.Array, v: jax.Array, kernel,
     return out[:n]
 
 
+def q_rows(X: jax.Array, y: jax.Array, Xb: jax.Array, yb: jax.Array,
+           kernel, bm: int = 256, bn: int = 256) -> jax.Array:
+    """Signed generalized-dual rows ``Q[b, :] = y_b * (K(X_b, X) ∘ y)`` of
+    shape (B, n) via the tiled Pallas kernel matrix (Q is symmetric, so the
+    block's rows double as its columns — the cache-refill unit shared by the
+    matvec solver and the distributed conquer)."""
+    Kb = kernel_matrix(Xb, X, kernel, bm=bm, bn=bn)
+    return yb[:, None] * (Kb * y[None, :])
+
+
 def kmeans_assign(X: jax.Array, Xm: jax.Array, W: jax.Array, s: jax.Array,
                   gamma: float, bm: int = 256) -> Tuple[jax.Array, jax.Array]:
     """Fused assignment. W: (m, k), s: (k,). Returns (assign (n,), scores (n, k))."""

@@ -14,24 +14,43 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after the jax pinned in some containers
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on the installed jax
+    AxisType = None
 
 MeshAxis = Union[None, str, Tuple[str, ...]]
+
+
+def _auto_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = jax.device_count()
-    assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    if model_axis < 1 or n % model_axis != 0:
+        raise ValueError(
+            f"model_axis={model_axis} must be a positive divisor of the "
+            f"device count ({n}); force more host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return _auto_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_conquer_mesh(axis: str = "shard") -> Mesh:
+    """Flat 1-axis mesh over every local device — the layout the distributed
+    DC-SVM divide/conquer runs on (rows of the dual sharded over ``axis``)."""
+    return jax.make_mesh((jax.device_count(),), (axis,))
 
 
 def rules_for(mesh: Mesh) -> Dict[str, MeshAxis]:

@@ -26,7 +26,10 @@ rank-2B blocked pairwise engine (B maximal-violating pairs per iteration;
 Fault tolerance: after every level the (alpha, level, assign) state is
 checkpointed; restart resumes at the next level (the expensive bottom levels
 are never recomputed).  With --distributed the divide/conquer steps run
-shard_mapped over all local devices.
+shard_mapped over all local devices: the conquer defaults to parallel block
+minimization (every device solves its own top-B block per communication
+round, --dist-mode replicated recovers the one-global-block baseline) and
+covers svc, weighted-svc and svr through the generalized TaskDual path.
 """
 from __future__ import annotations
 
@@ -104,7 +107,19 @@ def main(argv=None) -> None:
     ap.add_argument("--block", type=int, default=0)
     ap.add_argument("--early", type=int, default=0,
                     help="stop at this level and use early prediction")
-    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="shard the divide/conquer over all local devices "
+                         "(svc, weighted-svc and svr; force host devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--dist-mode", default="parallel",
+                    choices=["parallel", "replicated"],
+                    help="conquer scheme: 'parallel' = P simultaneous local "
+                         "block solves per communication round (CE-PBM), "
+                         "'replicated' = one global block per round")
+    ap.add_argument("--dist-cache", type=int, default=0,
+                    help="per-device kernel-row LRU capacity for the "
+                         "parallel conquer (0 = recompute rows on the fly)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -156,15 +171,20 @@ def main(argv=None) -> None:
 
     t0 = time.perf_counter()
     if args.distributed:
-        if args.task != "svc":
-            raise SystemExit("--distributed currently supports --task svc only")
-        from repro.core.distributed import fit_distributed
-        from repro.launch.mesh import make_host_mesh
-        mesh = jax.make_mesh((jax.device_count(),), ("i",))
-        alpha, stats = fit_distributed(cfg, mesh, "i", Xtr, ytr)
-        model = DCSVMModel(cfg, Xtr, ytr, alpha, None, False,
-                           stats)
-        for st in stats:
+        if args.task in ("nu-svc", "one-class"):
+            raise SystemExit(
+                "--distributed covers the box-constrained duals (svc, "
+                "weighted-svc, svr); the equality-constrained tasks "
+                f"({args.task}) need the pairwise engine — drop "
+                "--distributed")
+        from repro.core.distributed import fit_distributed_model
+        from repro.launch.mesh import make_conquer_mesh
+        mesh = make_conquer_mesh("i")
+        model = fit_distributed_model(
+            cfg, mesh, "i", Xtr, ytr, task=task,
+            conquer_block=max(args.block, 64),
+            mode=args.dist_mode, cache_cap=args.dist_cache)
+        for st in model.level_stats:
             print(st, flush=True)
     else:
         model = fit(cfg, Xtr, ytr, callback=cb, task=task)
