@@ -1,0 +1,84 @@
+"""Out-of-core / precision-policy benchmark: the GramOperator curve.
+
+Solves the same C-SVC conquer dual through ``solve_box_qp_matvec``
+(in-memory) and ``solve_box_qp_spill`` (host-RAM panel tier with a device
+LRU sized to ~1/4 of the Gram) under both precision policies (f32 and
+bf16-operand/f32-accumulate), emitting wall time, iterations, objective gap
+vs the f32 in-memory solution, and the spill-tier counters.
+
+Merges the ``outofcore`` section into BENCH_conquer.json alongside
+bench_kernels' cache results (``emit_json`` overwrites, so the existing
+artifact is read first and carried over).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_dataset, emit_json, timed
+from repro.core.gramop import GramOperator, solve_box_qp_spill
+from repro.core.solver import objective, solve_box_qp_matvec
+
+ARTIFACT = "BENCH_conquer.json"
+
+
+def run(dry_run: bool = False) -> list:
+    n, block, tol = (160, 16, 1e-3) if dry_run else (1536, 32, 1e-3)
+    max_iters = 400 if dry_run else 4000
+    Xtr, ytr, _, _, kern, C = bench_dataset("gaussian", n)
+    n = Xtr.shape[0]
+    # device tier holds ~1/4 of the raw kernel rows -> real panel traffic
+    dev_budget = max(block, n // 4) * n * 4
+
+    rows, results = [], {}
+    f_ref = None
+    for cd in (None, "bfloat16"):
+        tag = cd or "f32"
+        op = GramOperator(Xd=Xtr, s=ytr, kernel=kern, compute_dtype=cd)
+
+        def in_mem():
+            return solve_box_qp_matvec(Xtr, ytr, kern, C, tol=tol,
+                                       max_iters=max_iters, block=block,
+                                       compute_dtype=cd)
+
+        in_mem().alpha.block_until_ready()          # warm (compile)
+        res_m, t_m = timed(in_mem)
+        f_m = float(objective(res_m.alpha, res_m.grad))
+        if f_ref is None:
+            f_ref = f_m                             # f32 in-memory anchor
+        res_s, t_s = timed(
+            solve_box_qp_spill, op, C, tol=tol, max_iters=max_iters,
+            block=block, device_budget_bytes=dev_budget)
+        f_s = float(objective(res_s.alpha, res_s.grad))
+        gap = lambda f: abs(f - f_ref) / (1 + abs(f_ref))
+        results[tag] = {
+            "in_memory": {"wall_s": t_m, "iters": int(res_m.iters),
+                          "obj_rel_gap": gap(f_m)},
+            "spilled": {"wall_s": t_s, "iters": int(res_s.iters),
+                        "obj_rel_gap": gap(f_s),
+                        "spills": int(res_s.spills),
+                        "spill_hits": int(res_s.spill_hits),
+                        "panel_hits": int(res_s.cache_hits),
+                        "panel_evictions": int(res_s.cache_evictions)},
+        }
+        rows.append((f"outofcore.{tag}.in_memory.{n}", t_m * 1e6,
+                     f"gap={gap(f_m):.2e}"))
+        rows.append((f"outofcore.{tag}.spilled.{n}", t_s * 1e6,
+                     f"gap={gap(f_s):.2e};spills={int(res_s.spills)}"))
+        assert gap(f_s) < (5e-2 if cd else 1e-3), (tag, gap(f_s))
+
+    payload = {}
+    if os.path.exists(ARTIFACT):                    # read-merge: emit_json
+        with open(ARTIFACT) as f:                   # overwrites whole file
+            payload = json.load(f)
+    payload["outofcore"] = results
+    emit_json(ARTIFACT, payload)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

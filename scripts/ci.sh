@@ -34,14 +34,19 @@ if [[ "${1:-}" == "--fast" ]]; then
     # quick local loop: skip the (hypothesis-backed or fixed-seed-grid)
     # solver conformance suite via its marker; everything else still runs
     python -m pytest -x -q -m "not properties" ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
+    # GramOperator smoke: the precision/spill curve asserts the out-of-core
+    # solves hit the in-memory objective (f32 to 1e-3, bf16 to 5e-2)
+    python -m benchmarks.run --only outofcore --dry-run
 else
     python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
     # kernel, on the conquer solver, on the generalized SVR + one-class
-    # duals, on the blocked (rank-2B) vs pairwise equality engines, and on
-    # the sharded parallel-block conquer (multi-device subprocesses assert
-    # fewer rounds-to-tol than the replicated baseline at 8 devices);
+    # duals, on the blocked (rank-2B) vs pairwise equality engines, on the
+    # sharded parallel-block conquer (multi-device subprocesses assert
+    # fewer rounds-to-tol than the replicated baseline at 8 devices), and
+    # on the GramOperator precision/spill tiers (outofcore runs after
+    # kernels: both merge sections into BENCH_conquer.json);
     # writes BENCH_{conquer,serve,svr,oneclass,dist}.json
-    python -m benchmarks.run --only kernels,serve,svr,oneclass,eq_block,dist \
-        --dry-run
+    python -m benchmarks.run \
+        --only kernels,outofcore,serve,svr,oneclass,eq_block,dist --dry-run
 fi

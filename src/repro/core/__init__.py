@@ -1,12 +1,19 @@
 # DC-SVM core: the paper's primary contribution as a composable JAX module.
 from repro.core import colcache
 from repro.core.kernels import (
+    DEFAULT_GRAM_BUDGET,
     Kernel,
+    auto_num_chunks,
     gram,
     gram_matvec,
     offdiag_mass,
     resolve_use_pallas,
     sqdist,
+)
+from repro.core.gramop import (
+    GramOperator,
+    fits_budget,
+    solve_box_qp_spill,
 )
 from repro.core.solver import (
     SolveResult,

@@ -35,6 +35,7 @@ class ColumnCache(NamedTuple):
     tick: Array      # ()       int32 logical clock
     hits: Array      # ()       int32 rows served from the cache
     misses: Array    # ()       int32 rows recomputed
+    evictions: Array  # ()      int32 live rows displaced by inserts
 
 
 def init(cap: int, n: int, dtype=jnp.float32, width: int = None) -> ColumnCache:
@@ -50,6 +51,7 @@ def init(cap: int, n: int, dtype=jnp.float32, width: int = None) -> ColumnCache:
         tick=jnp.zeros((), jnp.int32),
         hits=jnp.zeros((), jnp.int32),
         misses=jnp.zeros((), jnp.int32),
+        evictions=jnp.zeros((), jnp.int32),
     )
 
 
@@ -85,7 +87,9 @@ def _insert(cache: ColumnCache, idx: Array, slots: Array, hit: Array,
     owner = cache.owner.at[victims].set(idx.astype(jnp.int32))
     slot_of = slot_of.at[idx].set(victims)
     stamp = stamp.at[victims].set(cache.tick)
-    return cache._replace(cols=cols, owner=owner, slot_of=slot_of, stamp=stamp)
+    return cache._replace(
+        cols=cols, owner=owner, slot_of=slot_of, stamp=stamp,
+        evictions=cache.evictions + jnp.sum(still_mapped, dtype=jnp.int32))
 
 
 def update(cache: ColumnCache, idx: Array, rows: Array, served: Array,

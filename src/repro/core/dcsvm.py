@@ -34,8 +34,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels import Kernel, gram, gram_matvec, resolve_use_pallas
+from repro.core.kernels import (DEFAULT_GRAM_BUDGET, Kernel, gram,
+                                gram_matvec, resolve_use_pallas)
 from repro.core.kkmeans import Partition, two_step_kernel_kmeans
+from repro.core import gramop
 from repro.core import solver as S
 from repro.core.tasks import CSVC, Task, TaskDual, resolve_task
 
@@ -64,7 +66,23 @@ class DCSVMConfig:
     balanced: bool = True
     use_pallas: Optional[bool] = None  # None = auto (Pallas on TPU, XLA elsewhere)
     early_stop_level: int = 0      # 0 = exact solve; l >= 1 = stop after level l
-    gram_budget: int = 2**27       # max floats for a level's stacked cluster Grams
+    gram_budget: int = DEFAULT_GRAM_BUDGET  # BYTE budget for a level's stacked
+                                   # cluster Grams / caches / spill panels
+                                   # (2**29 B == the historical 2**27 f32 slots,
+                                   # so default residency decisions are
+                                   # unchanged)
+    compute_dtype: Optional[str] = None  # Gram matmul-operand precision, e.g.
+                                   # "bfloat16" (f32 accumulation, flash-
+                                   # attention idiom).  None = the f32 default:
+                                   # bit-identical to the pre-policy paths
+    host_spill: bool = False       # level 0 out-of-core: kernel-row panels
+                                   # spilled to host RAM, device LRU +
+                                   # double-buffered prefetch (core.gramop)
+    gram_dedup: bool = True        # base-indexed Gram view for tasks with
+                                   # duplicated dual rows (SVR): kernel rows
+                                   # computed/cached on the n base points,
+                                   # signs expanded exactly at read (~4x fewer
+                                   # cluster kernel evals, 2x cache rows)
     full_gram_threshold: int = 16384   # above this, level 0 uses the matvec solver
     col_cache_cap: int = 0         # kernel-column LRU slots for the matvec solver.
                                    # 0 (default) = fully fused recompute path; opt
@@ -159,6 +177,7 @@ def _solve_clusters(
     mask: Array, use_pallas: bool = False,
     aeq: Optional[Array] = None, geq: Optional[Array] = None,
     deq: Optional[Array] = None, n_groups: int = 1,
+    Xcb: Optional[Array] = None, lbc: Optional[Array] = None,
 ) -> Array:
     """Solve the independent generalized sub-QPs of one level.
     Xc: (k, nc, d), mask: (k, nc); sc/pc/cc/ac are class-stacked
@@ -176,9 +195,23 @@ def _solve_clusters(
     k, nc, _ = Xc.shape
     n_cls = sc.shape[1]
     has_eq = aeq is not None
+    dedup = Xcb is not None
 
-    def one(Xi, Si, Pi, Ci, Ai, mi, *eq):
-        Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
+    def one(Xi, Si, Pi, Ci, Ai, mi, *rest):
+        if dedup:
+            # base-indexed view: the cluster's kernel evaluations run on its
+            # nb unique base points (nc = 2 nb for SVR's mirrored dual), and
+            # the dual-coordinate Gram is a gather — the same dot products,
+            # so bit-identical to the direct (nc, nc) Gram at 1/4 the evals
+            Xbi, lbi = rest[0], rest[1]
+            rest = rest[2:]
+            Kb = gram(cfg.kernel, Xbi, Xbi, use_pallas=use_pallas,
+                      compute_dtype=cfg.compute_dtype)
+            Ki = Kb[lbi][:, lbi]
+        else:
+            Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas,
+                      compute_dtype=cfg.compute_dtype)
+        eq = rest
         # zero pad rows/cols so pad slots cannot leak into real gradients
         mm = mi[:, None] & mi[None, :]
         Kz = jnp.where(mm, Ki, 0.0)
@@ -215,9 +248,13 @@ def _solve_clusters(
 
         return jax.vmap(per_class)(Si, Pi, Ci, Ai, *eq)      # (n_cls, nc)
 
-    args = (Xc, sc, pc, cc, ac, mask) + ((aeq, geq, deq) if has_eq else ())
+    args = (Xc, sc, pc, cc, ac, mask) \
+        + ((Xcb, lbc) if dedup else ()) \
+        + ((aeq, geq, deq) if has_eq else ())
     # sequential sweep bounds peak memory at one cluster's Grams
-    return _map_classes(one, args, k * n_cls * nc * nc <= cfg.gram_budget)
+    return _map_classes(one, args,
+                        gramop.fits_budget(k * n_cls * nc * nc,
+                                           cfg.gram_budget))
 
 
 def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
@@ -229,9 +266,11 @@ def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
     across rows (per-row Q batches fall back to a sequential sweep when
     they would blow the Gram budget)."""
     Xs = td.Xd[idx]
-    Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas)
+    Ks = gram(cfg.kernel, Xs, Xs, use_pallas=use_pallas,
+              compute_dtype=cfg.compute_dtype)
     ss, ps, cs, as_ = td.S[:, idx], td.P[:, idx], td.Cvec[:, idx], alpha[:, idx]
-    fits = td.S.shape[0] * Xs.shape[0] ** 2 <= cfg.gram_budget
+    fits = gramop.fits_budget(td.S.shape[0] * Xs.shape[0] ** 2,
+                              cfg.gram_budget)
 
     if td.has_equality:
         # per-group sub-targets: the full targets minus the frozen
@@ -288,8 +327,21 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
     budget is split accordingly)."""
     n = td.n_dual
     n_cls = td.S.shape[0]
-    if n <= cfg.full_gram_threshold:
-        K = gram(cfg.kernel, td.Xd, td.Xd, use_pallas=use_pallas)
+    dedup = cfg.gram_dedup and td.n_base != n and not td.has_equality
+    # host_spill routes the box family out-of-core even under the dense
+    # threshold (the flag's meaning is "never materialize the level-0 Gram");
+    # equality tasks stay on their dense/matvec engines
+    spill = cfg.host_spill and not td.has_equality
+    if n <= cfg.full_gram_threshold and not spill:
+        if dedup:
+            # base-indexed dense Gram: n_base^2 kernel evals instead of
+            # n_dual^2, gathered to dual coordinates (bit-identical values)
+            Xb, bidx = td.base_view()
+            K = gram(cfg.kernel, Xb, Xb, use_pallas=use_pallas,
+                     compute_dtype=cfg.compute_dtype)[bidx][:, bidx]
+        else:
+            K = gram(cfg.kernel, td.Xd, td.Xd, use_pallas=use_pallas,
+                     compute_dtype=cfg.compute_dtype)
 
         if td.has_equality:
             def per_class_eq(si, pi, ci, ai, aqi, gqi, dqi):
@@ -304,7 +356,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
             return _map_classes(
                 per_class_eq,
                 (td.S, td.P, td.Cvec, alpha, td.A, td.group_ids, td.Deq),
-                n_cls * n * n <= cfg.gram_budget)
+                gramop.fits_budget(n_cls * n * n, cfg.gram_budget))
 
         def per_class(si, pi, ci, ai):
             Q = (si[:, None] * si[None, :]) * K
@@ -314,7 +366,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
             )
 
         return _map_classes(per_class, (td.S, td.P, td.Cvec, alpha),
-                            n_cls * n * n <= cfg.gram_budget)
+                            gramop.fits_budget(n_cls * n * n, cfg.gram_budget))
 
     if td.has_equality:
         def per_class_eq_mv(si, pi, ci, ai, aqi, gqi, dqi):
@@ -322,21 +374,45 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                 td.Xd, si, cfg.kernel, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
                 max_iters=cfg.max_iters, use_pallas=use_pallas, p=pi,
                 block=cfg.eq_block_size, sweeps=cfg.sweeps, gid=gqi,
-                n_groups=td.n_groups,
+                n_groups=td.n_groups, compute_dtype=cfg.compute_dtype,
             )
 
         return jax.vmap(per_class_eq_mv)(td.S, td.P, td.Cvec, alpha,
                                          td.A, td.group_ids, td.Deq)
 
-    # the (cap, n) cache buffer(s) count against the same memory budget as
-    # the stacked cluster Grams
-    cache_cap = min(cfg.col_cache_cap, n, cfg.gram_budget // max(n * n_cls, 1))
+    Xb, bidx = td.base_view() if dedup else (None, None)
+
+    if spill:
+        # out-of-core level 0: per class, raw kernel-row panels spilled to
+        # host RAM with a device panel LRU (core.gramop) — gram_budget is
+        # the DEVICE byte budget; Gram size is bounded by host memory
+        results = []
+        for r in range(td.S.shape[0]):
+            op = gramop.GramOperator(
+                Xd=td.Xd, s=td.S[r], Xb=Xb, bidx=bidx, kernel=cfg.kernel,
+                use_pallas=use_pallas, compute_dtype=cfg.compute_dtype,
+                budget_bytes=cfg.gram_budget)
+            results.append(gramop.solve_box_qp_spill(
+                op, td.Cvec[r], alpha0=alpha[r], tol=cfg.tol,
+                max_iters=cfg.max_iters, block=max(cfg.block, 64),
+                sweeps=cfg.sweeps, p=td.P[r],
+                device_budget_bytes=cfg.gram_budget // max(n_cls, 1)))
+        return S.SolveResult(*(jnp.stack([getattr(res, f) for res in results])
+                               for f in S.SolveResult._fields))
+
+    # the (cap, kwidth) cache buffer(s) count against the same BYTE budget
+    # as the stacked cluster Grams; bf16 storage fits twice the f32 rows
+    store = jnp.dtype(cfg.compute_dtype or jnp.float32).itemsize
+    kwidth = td.n_base if dedup else n
+    cache_cap = min(cfg.col_cache_cap, n,
+                    cfg.gram_budget // max(kwidth * n_cls * store, 1))
 
     def per_class_mv(si, pi, ci, ai):
         return S.solve_box_qp_matvec(
             td.Xd, si, cfg.kernel, ci, alpha0=ai, tol=cfg.tol,
             max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
             use_pallas=use_pallas, cache_cap=cache_cap, p=pi,
+            compute_dtype=cfg.compute_dtype, Xbase=Xb, base_index=bidx,
         )
 
     return jax.vmap(per_class_mv)(td.S, td.P, td.Cvec, alpha)
@@ -400,6 +476,22 @@ def _fit_algorithm1(
         t_cluster = time.perf_counter() - t0
 
         t0 = time.perf_counter()
+        Xcb = lbc = None
+        if cfg.gram_dedup and nd != n:
+            # base-indexed cluster Grams: map each dual slot to its base
+            # point's local slot inside the BASE partition's cluster (the
+            # mirrored pair shares a cluster by construction), so each
+            # cluster computes an (nb, nb) Gram instead of (2nb, 2nb)
+            pidx, pmask = np.asarray(partition.idx), np.asarray(partition.mask)
+            pos = np.zeros(n, np.int64)
+            ci_, si_ = np.nonzero(pmask)
+            pos[pidx[ci_, si_]] = si_
+            didx = np.asarray(dpart.idx)
+            lbc = jnp.asarray(
+                np.where(np.asarray(dpart.mask),
+                         pos[base_index[np.maximum(didx, 0)]], 0),
+                jnp.int32)
+            Xcb = partition.gather(X)
         Xc = dpart.gather(td.Xd)
         mask = jnp.asarray(dpart.mask)
         # (k, nc, n_rows) gathers -> (k, n_rows, nc) class-stacked batch
@@ -419,7 +511,8 @@ def _fit_algorithm1(
                                      jnp.asarray(td.Deq), td.n_groups)
         ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
                              use_pallas=use_pallas, aeq=aeqc, geq=geqc,
-                             deq=deqc, n_groups=max(td.n_groups, 1))
+                             deq=deqc, n_groups=max(td.n_groups, 1),
+                             Xcb=Xcb, lbc=lbc)
         alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
         alpha.block_until_ready()
         t_train = time.perf_counter() - t0
@@ -455,6 +548,10 @@ def _fit_algorithm1(
         st["cache_hits"] = hits
         st["cache_misses"] = misses
         st["cache_hit_rate"] = hits / max(hits + misses, 1)
+    for name in ("cache_evictions", "spills", "spill_hits"):
+        v = getattr(res, name, None)
+        if v is not None:
+            st[name] = int(np.sum(np.asarray(v)))
     stats.append(st)
     if callback is not None:
         callback(0, alpha, st)
@@ -486,7 +583,8 @@ def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, task: Task,
     uc = partition.gather(alpha[0])
 
     def one(Xi, si, pi, ci, ai, gi_, ui, mi):
-        Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas)
+        Ki = gram(cfg.kernel, Xi, Xi, use_pallas=use_pallas,
+                  compute_dtype=cfg.compute_dtype)
         mm = mi[:, None] & mi[None, :]
         Kz = jnp.where(mm, Ki, 0.0)
         ui = jnp.where(mi, ui, 0.0)
@@ -496,7 +594,8 @@ def _recover_rho_clusters(cfg: DCSVMConfig, td: TaskDual, task: Task,
                                    active_mask=mi)
 
     return _map_classes(one, (Xc, sc, pc, cc, aq, gq, uc, mask),
-                        partition.k * partition.nc ** 2 <= cfg.gram_budget)
+                        gramop.fits_budget(partition.k * partition.nc ** 2,
+                                           cfg.gram_budget))
 
 
 def _recover_rho(cfg: DCSVMConfig, td: TaskDual, task: Task,
@@ -507,7 +606,8 @@ def _recover_rho(cfg: DCSVMConfig, td: TaskDual, task: Task,
     of the KKT multiplier bracket(s)."""
     up = resolve_use_pallas(cfg.use_pallas)
     s = td.S[0]
-    g = s * gram_matvec(cfg.kernel, td.Xd, s * alpha[0], use_pallas=up) \
+    g = s * gram_matvec(cfg.kernel, td.Xd, s * alpha[0], use_pallas=up,
+                        compute_dtype=cfg.compute_dtype) \
         + td.P[0]
     return float(task.recover_offset(alpha[0], g, td.Cvec[0], td.A[0],
                                      td.group_ids[0]))
@@ -553,14 +653,17 @@ def fit(
 
 
 def objective_value(cfg: DCSVMConfig, X: Array, y: Array, alpha: Array,
-                    num_chunks: int = 8, p=-1.0) -> Array:
+                    num_chunks: Optional[int] = None, p=-1.0) -> Array:
     """f(alpha) = 1/2 alpha' Q alpha + p' alpha on the FULL generalized dual
     (Q = (s s') ∘ K), computed without materializing Q.  ``y`` is the task's
     sign vector ``s`` over the dual points ``X``; the default ``p = -1``
     is the hinge objective.  On the Pallas path the Q @ alpha matvec streams
     through the fused ``kernel_matvec`` kernel instead of the chunked
-    ``lax.map``."""
+    ``lax.map``; ``num_chunks=None`` sizes the chunking to the config's
+    byte budget (chunking is bit-identical — it only partitions rows)."""
     Kv = gram_matvec(cfg.kernel, X, y * alpha, num_chunks=num_chunks,
-                     use_pallas=resolve_use_pallas(cfg.use_pallas))
+                     use_pallas=resolve_use_pallas(cfg.use_pallas),
+                     compute_dtype=cfg.compute_dtype,
+                     budget_bytes=cfg.gram_budget)
     pvec = jnp.broadcast_to(jnp.asarray(p, alpha.dtype), alpha.shape)
     return 0.5 * jnp.vdot(alpha, y * Kv) + jnp.vdot(pvec, alpha)

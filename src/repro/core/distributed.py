@@ -64,7 +64,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core import colcache
+from repro.core import colcache, gramop
 from repro.core.kernels import Kernel, gram, resolve_use_pallas
 from repro.core.solver import (_solve_small_qp, combination_step_size,
                                proj_grad)
@@ -104,17 +104,20 @@ def divide_step(
     tol, max_iters = cfg.tol, cfg.max_iters
     kernel, block, sweeps = cfg.kernel, cfg.block, cfg.sweeps
     use_pallas = resolve_use_pallas(cfg.use_pallas)
+    compute_dtype = getattr(cfg, "compute_dtype", None)
     P_ = mesh.shape[axis]
     k, nc, _ = Xc.shape
     if k % P_ != 0:
         raise ValueError(
             f"cluster count {k} must be a multiple of the mesh axis size "
             f"{P_} (fit_distributed rounds k up for you)")
-    resident = (k // P_) * nc * nc <= cfg.gram_budget
+    # per-device residency decided on the BYTE budget (f32 cluster Grams)
+    resident = gramop.fits_budget((k // P_) * nc * nc, cfg.gram_budget)
 
     def local(Xl, sl, pl, cl, al, ml):
         def one(Xi, si, pi, ci, ai, mi):
-            Ki = gram(kernel, Xi, Xi, use_pallas=use_pallas)
+            Ki = gram(kernel, Xi, Xi, use_pallas=use_pallas,
+                      compute_dtype=compute_dtype)
             mm = mi[:, None] & mi[None, :]
             Qi = (si[:, None] * si[None, :]) * jnp.where(mm, Ki, 0.0)
             Qi = Qi + jnp.where(mi, 0.0, 1.0) * jnp.eye(nc, dtype=Qi.dtype)
@@ -161,6 +164,10 @@ class ConquerConfig:
     cache_cap: int = 0       # LRU slots for (P*B, n_local) Q-row slices;
                              # 0 = fully fused recompute (parallel mode only)
     grad_chunks: int = 16    # row chunks for the XLA initial-gradient matvec
+    compute_dtype: Optional[str] = None  # Gram operand precision (bf16 tiles,
+                             # f32 accumulation); None = exact f32 default.
+                             # Cached Q-row slices store in this dtype too,
+                             # doubling the rows a byte budget holds
 
 
 def conquer_step(
@@ -191,8 +198,12 @@ def conquer_step(
                          f"(expected 'parallel' or 'replicated')")
     kernel = cfg.kernel
     use_pallas = resolve_use_pallas(cfg.use_pallas)
+    compute_dtype = getattr(cfg, "compute_dtype", None)
     if use_pallas:
         from repro.kernels import ops as kops
+
+    def pairwise(A, Bm):
+        return kernel.pairwise(A, Bm, compute_dtype=compute_dtype)
 
     P_ = mesh.shape[axis]
     n0, d = X.shape
@@ -225,12 +236,13 @@ def conquer_step(
     def cross_matvec(Xl, Z, w):
         """K(X_l, Z) @ w without materializing the (n_l, n) block."""
         if use_pallas:
-            return kops.kernel_matvec(Xl, Z, w, kernel)
+            return kops.kernel_matvec(Xl, Z, w, kernel,
+                                      compute_dtype=compute_dtype)
         nl = Xl.shape[0]
         chunks = max(1, min(cfg.grad_chunks, nl))
         padl = (-nl) % chunks
         Xp = jnp.pad(Xl, ((0, padl), (0, 0))) if padl else Xl
-        out = lax.map(lambda Xi: kernel.pairwise(Xi, Z) @ w,
+        out = lax.map(lambda Xi: pairwise(Xi, Z) @ w,
                       Xp.reshape(chunks, -1, d))
         return out.reshape(-1)[:nl]
 
@@ -252,9 +264,10 @@ def conquer_step(
             w = s_sel ∘ Δ_sel — the rank-P*B skinny matmul (fused Pallas
             cd_column_update on the Pallas path)."""
             if use_pallas:
-                return kops.cd_column_update(Xl, sl, Xsel, w, kernel
-                                             ).astype(acc)
-            return (sl * (kernel.pairwise(Xl, Xsel) @ w)).astype(acc)
+                return kops.cd_column_update(
+                    Xl, sl, Xsel, w, kernel,
+                    compute_dtype=compute_dtype).astype(acc)
+            return (sl * (pairwise(Xl, Xsel) @ w)).astype(acc)
 
         def propose(al, g_l):
             """One CE-PBM proposal: local GS-B block, local BxB solve, one
@@ -278,7 +291,7 @@ def conquer_step(
             _, ib = lax.top_k(sc_, B)
             Xb, sb, ab, gb, cb = Xl[ib], sl[ib], al[ib], g_l[ib], cl[ib]
             Qbb = ((sb[:, None] * sb[None, :])
-                   * kernel.pairwise(Xb, Xb)).astype(acc)
+                   * pairwise(Xb, Xb)).astype(acc)
             target = _solve_small_qp(Qbb, gb, ab.astype(acc), cb, cfg.sweeps)
             delta = target - ab.astype(acc)
             gath = {k2: lax.all_gather(v, axis) for k2, v in
@@ -290,7 +303,7 @@ def conquer_step(
             gidx = (jnp.arange(P_, dtype=jnp.int32)[:, None] * n_l
                     + gath["i"]).reshape(-1)
             Qsel = ((ssel[:, None] * ssel[None, :])
-                    * kernel.pairwise(Xsel, Xsel)).astype(acc)
+                    * pairwise(Xsel, Xsel)).astype(acc)
             dQd = jnp.vdot(dsel, Qsel @ dsel)
             gTd = lax.psum(jnp.vdot(gb.astype(acc), delta), axis)
             gamma = combination_step_size(gTd, dQd)
@@ -309,9 +322,10 @@ def conquer_step(
             """(P*B, n_l) Q-row slices of the selected block against the
             local shard — the cache-refill unit."""
             if use_pallas:
-                return kops.q_rows(Xl, sl, Xsel, ssel, kernel).astype(acc)
+                return kops.q_rows(Xl, sl, Xsel, ssel, kernel,
+                                   compute_dtype=compute_dtype).astype(acc)
             return ((ssel[:, None] * sl[None, :])
-                    * kernel.pairwise(Xsel, Xl)).astype(acc)
+                    * pairwise(Xsel, Xl)).astype(acc)
 
         def cond(state):
             it, pg = state[-2], state[-1]
@@ -338,7 +352,7 @@ def conquer_step(
                 served = jnp.all(hit)
                 Qrows = lax.cond(
                     served,
-                    lambda: cache.cols[jnp.where(hit, slots, 0)],
+                    lambda: cache.cols[jnp.where(hit, slots, 0)].astype(acc),
                     lambda: q_rows_local(Xsel, ssel),
                 )
                 cache = colcache.update(cache, gidx, Qrows, served, slots,
@@ -347,7 +361,11 @@ def conquer_step(
                 al = al.at[ib].set(a_new)
                 return al, g_l, cache, it + 1, pg
 
-            cache0 = colcache.init(cache_cap, n, dtype=acc, width=n_l)
+            # cached Q-row slices store in the policy dtype: a bf16 policy
+            # fits twice the rows of f32 under the same byte budget
+            store = (jnp.dtype(compute_dtype) if compute_dtype is not None
+                     else acc)
+            cache0 = colcache.init(cache_cap, n, dtype=store, width=n_l)
             state0 = (al, g_l, cache0, jnp.zeros((), jnp.int32), pg0)
             al, g_l, _, rounds, _ = lax.while_loop(cond, body, state0)
 
@@ -502,7 +520,8 @@ def fit_distributed(
     ccfg = ConquerConfig(kernel=cfg.kernel, C=cfg.C, tol=cfg.tol,
                          max_iters=conquer_iters, block=conquer_block,
                          sweeps=cfg.sweeps, mode=mode,
-                         use_pallas=cfg.use_pallas, cache_cap=cache_cap)
+                         use_pallas=cfg.use_pallas, cache_cap=cache_cap,
+                         compute_dtype=getattr(cfg, "compute_dtype", None))
     alpha, rounds, pg = conquer_step(mesh, axis, ccfg, td.Xd, s1, alpha,
                                      p=p1, c=c1)
     sv_base = jnp.zeros(n, X.dtype).at[bidx].add(alpha)

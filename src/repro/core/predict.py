@@ -42,7 +42,8 @@ Array = jax.Array
 def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
                             Xblocks: Array, Wblocks: Array, cap: int,
                             use_pallas: bool = False,
-                            offsets: Optional[Array] = None) -> Array:
+                            offsets: Optional[Array] = None,
+                            compute_dtype: Optional[str] = None) -> Array:
     """Score every query against ONLY its assigned cluster's block.
 
     ``Xblocks``: (k, nc, d) per-cluster member coordinates, ``Wblocks``:
@@ -76,15 +77,17 @@ def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
         from repro.kernels import ops as kops
 
         def one(qc, Xc, wc):
-            return kops.kernel_matvec(qc, Xc, wc[:, 0], kern)[:, None]
+            return kops.kernel_matvec(qc, Xc, wc[:, 0], kern,
+                                      compute_dtype=compute_dtype)[:, None]
     elif use_pallas:
         from repro.kernels import ops as kops
 
         def one(qc, Xc, wc):
-            return kops.kernel_matrix(qc, Xc, kern) @ wc
+            return kops.kernel_matrix(qc, Xc, kern,
+                                      compute_dtype=compute_dtype) @ wc
     else:
         def one(qc, Xc, wc):
-            return kern.pairwise(qc, Xc) @ wc                    # (cap, C)
+            return kern.pairwise(qc, Xc, compute_dtype=compute_dtype) @ wc
 
     def body(carry):
         out, r = carry
@@ -110,20 +113,24 @@ def bucketed_cluster_scores(kern: Kernel, Xq: Array, cid: Array,
     return out.astype(Xq.dtype)
 
 
-@partial(jax.jit, static_argnames=("kern", "cap", "use_pallas"))
+@partial(jax.jit, static_argnames=("kern", "cap", "use_pallas", "compute_dtype"))
 def _early_program(kern: Kernel, Xq: Array, route_model: KKMeansModel,
                    Xblocks: Array, Wblocks: Array, cap: int,
                    use_pallas: bool = False,
-                   offsets: Optional[Array] = None) -> Array:
+                   offsets: Optional[Array] = None,
+                   compute_dtype: Optional[str] = None) -> Array:
     """Route + bucketed local scoring as ONE compiled program."""
     cid, _ = assign_points(kern, route_model, Xq, use_pallas=use_pallas)
     return bucketed_cluster_scores(kern, Xq, cid, Xblocks, Wblocks, cap,
-                                   use_pallas=use_pallas, offsets=offsets)
+                                   use_pallas=use_pallas, offsets=offsets,
+                                   compute_dtype=compute_dtype)
 
 
-@partial(jax.jit, static_argnames=("kern", "chunk", "use_pallas"))
+@partial(jax.jit, static_argnames=("kern", "chunk", "use_pallas",
+                                   "compute_dtype"))
 def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, W: Array,
-                   chunk: int, use_pallas: bool = False) -> Array:
+                   chunk: int, use_pallas: bool = False,
+                   compute_dtype: Optional[str] = None) -> Array:
     """K(Xq, Xs) @ W as ONE compiled scan over SV chunks (no per-chunk
     Python dispatch, and never more than an (nq, chunk) kernel block live).
     W is (ns, C) — one weight column per output (C = 1 binary,
@@ -138,8 +145,9 @@ def _decision_scan(kern: Kernel, Xq: Array, Xs: Array, W: Array,
 
     def step(acc, xw):
         Xc, wc = xw
-        Kc = (kops.kernel_matrix(Xq, Xc, kern) if use_pallas
-              else kern.pairwise(Xq, Xc))
+        Kc = (kops.kernel_matrix(Xq, Xc, kern, compute_dtype=compute_dtype)
+              if use_pallas
+              else kern.pairwise(Xq, Xc, compute_dtype=compute_dtype))
         return acc + Kc @ wc, None
 
     out, _ = jax.lax.scan(
@@ -190,11 +198,14 @@ def decision_exact(model: DCSVMModel, Xq: Array, chunk: int = 4096,
     Xs = model.X[jnp.asarray(sv)]
     w = model.weights[jnp.asarray(sv)]
     kern = model.config.kernel
+    cd = getattr(model.config, "compute_dtype", None)
     if resolve_use_pallas(use_pallas):
         from repro.kernels import ops as kops
 
-        return kops.kernel_matvec(Xq, Xs, w, kern).astype(Xq.dtype) - off
-    return _decision_scan(kern, Xq, Xs, w[:, None], chunk)[:, 0] - off
+        return kops.kernel_matvec(Xq, Xs, w, kern,
+                                  compute_dtype=cd).astype(Xq.dtype) - off
+    return _decision_scan(kern, Xq, Xs, w[:, None], chunk,
+                          compute_dtype=cd)[:, 0] - off
 
 
 def predict_exact(model: DCSVMModel, Xq: Array) -> Array:
@@ -252,7 +263,9 @@ def decision_early(model: DCSVMModel, Xq: Array,
     offsets = None if rho_c is None else jnp.asarray(rho_c)[:, None]
     off = 0.0 if offsets is not None else _offset(model)
     return _early_program(kern, Xq, part.model, Xm, wm, cap,
-                          use_pallas=use_pallas, offsets=offsets)[:, 0] - off
+                          use_pallas=use_pallas, offsets=offsets,
+                          compute_dtype=getattr(model.config, "compute_dtype",
+                                                None))[:, 0] - off
 
 
 def predict_early(model: DCSVMModel, Xq: Array) -> Array:
@@ -394,7 +407,9 @@ def decision_exact_ova(model, Xq: Array, chunk: int = 4096,
     Ws = _ova_weights(model)[jnp.asarray(sv)]                # (ns, n_classes)
     kern = model.config.kernel
     return _decision_scan(kern, Xq, Xs, Ws, chunk,
-                          use_pallas=resolve_use_pallas(use_pallas))
+                          use_pallas=resolve_use_pallas(use_pallas),
+                          compute_dtype=getattr(model.config, "compute_dtype",
+                                                None))
 
 
 def decision_early_ova(model, Xq: Array,
@@ -410,7 +425,9 @@ def decision_early_ova(model, Xq: Array,
     Xm, wm = _early_blocks(model, _ova_weights(model))
     cap = early_capacity(Xq.shape[0], part.k)
     return _early_program(model.config.kernel, Xq, part.model, Xm, wm, cap,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas,
+                          compute_dtype=getattr(model.config, "compute_dtype",
+                                                None))
 
 
 def decision_bcm_ova(model, Xq: Array, noise: float = 1e-2,

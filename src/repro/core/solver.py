@@ -71,7 +71,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import colcache
+from repro.core import colcache, gramop
 from repro.core.kernels import Kernel
 
 Array = jax.Array
@@ -90,6 +90,9 @@ class SolveResult(NamedTuple):
     pg_max: Array        # final max |projected gradient|
     cache_hits: Optional[Array] = None    # column-cache rows served (matvec solver)
     cache_misses: Optional[Array] = None  # column-cache rows recomputed
+    cache_evictions: Optional[Array] = None  # live rows/panels displaced (LRU)
+    spills: Optional[Array] = None        # panels written to the host tier
+    spill_hits: Optional[Array] = None    # panels re-loaded from the host tier
 
 
 def objective(alpha: Array, grad: Array, p=-1.0) -> Array:
@@ -274,7 +277,8 @@ def solve_box_qp_block(
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("kernel", "block", "sweeps", "max_iters",
-                                   "grad_chunks", "use_pallas", "cache_cap"))
+                                   "grad_chunks", "use_pallas", "cache_cap",
+                                   "compute_dtype"))
 def solve_box_qp_matvec(
     X: Array,
     y: Array,
@@ -289,6 +293,9 @@ def solve_box_qp_matvec(
     use_pallas: bool = False,
     cache_cap: int = 0,
     p=-1.0,
+    compute_dtype: Optional[str] = None,
+    Xbase: Optional[Array] = None,
+    base_index: Optional[Array] = None,
 ) -> SolveResult:
     """Block greedy CD where Q columns are recomputed from (X, y) per step.
 
@@ -297,7 +304,12 @@ def solve_box_qp_matvec(
     (alpha, alpha*) coordinates.  ``C`` and ``p`` may be per-coordinate
     (weighted classes / the SVR linear term eps -/+ y).
 
-    Never materializes Q.  Three gradient-update paths:
+    Kernel access goes through one ``core.gramop.GramOperator`` carrying the
+    precision policy (``compute_dtype`` — ``None`` keeps the pre-policy
+    bit-identical path) and the optional base-indexed dedup view
+    (``Xbase``/``base_index`` with ``X == Xbase[base_index]`` row-for-row:
+    SVR's 2n mirrored dual rows cache/store against the n base rows, signs
+    expanded exactly at read).  Never materializes Q.  Three paths:
 
     * ``use_pallas=False, cache_cap=0`` — XLA reference: the (n, B) column
       block via ``kernel.pairwise`` each outer iteration.
@@ -305,32 +317,49 @@ def solve_box_qp_matvec(
       ``repro.kernels.ops.cd_column_update`` (the (n, B) kernel block lives
       only in VMEM, per tile) and gradient init through the streaming
       ``kernel_matvec`` kernel.
-    * ``cache_cap>0`` — device-resident LRU column cache (``core.colcache``):
-      a block whose B rows are all cached is served from HBM with no kernel
-      compute at all (``lax.cond`` skips it); otherwise the B rows are
-      recomputed (Pallas ``kermat`` on the fused path) and refilled into the
-      cache.  Hit/miss row counts are returned on ``SolveResult``.
+    * ``cache_cap>0`` — device-resident LRU cache of *raw* kernel rows
+      (``core.colcache``, stored in the operator's storage dtype): a block
+      whose B rows are all cached is served from HBM with no kernel compute
+      at all (``lax.cond`` skips it); otherwise the B rows are recomputed
+      (Pallas ``kermat`` on the fused path) and refilled into the cache.
+      Hit/miss/eviction row counts are returned on ``SolveResult``.
     """
-    n = X.shape[0]
+    op = gramop.GramOperator(Xd=X, s=y, Xb=Xbase, bidx=base_index,
+                             kernel=kernel, use_pallas=use_pallas,
+                             compute_dtype=compute_dtype)
+    return solve_box_qp_op(op, C, alpha0=alpha0, tol=tol, max_iters=max_iters,
+                           block=block, sweeps=sweeps, grad_chunks=grad_chunks,
+                           cache_cap=cache_cap, p=p)
+
+
+def solve_box_qp_op(
+    op: "gramop.GramOperator",
+    C,
+    alpha0: Optional[Array] = None,
+    tol: float = 1e-3,
+    max_iters: int = 500,
+    block: int = 64,
+    sweeps: int = 4,
+    grad_chunks: int = 16,
+    cache_cap: int = 0,
+    p=-1.0,
+) -> SolveResult:
+    """The engine behind ``solve_box_qp_matvec``: block greedy CD against a
+    ``GramOperator``.  Call inside jit (the operator's kernel / backend /
+    precision fields are pytree aux data, hence trace-static)."""
+    X = op.Xd
+    n = op.n_dual
     alpha = jnp.zeros(n, X.dtype) if alpha0 is None else alpha0
     cvec = _broadcast(C, n, X.dtype)
-
-    # initial gradient g = Q @ alpha + p: streaming Pallas matvec on the
-    # fused path, chunked lax.map otherwise
-    from repro.core.kernels import gram_matvec
-
-    if use_pallas:
-        from repro.kernels import ops as kops
 
     # accumulation dtype: at least f32 (Pallas kernels accumulate in f32),
     # f64 preserved when x64 is enabled
     acc = jnp.promote_types(X.dtype, jnp.float32)
 
-    def q_matvec(v):
-        return y * gram_matvec(kernel, X, y * v, num_chunks=grad_chunks,
-                               use_pallas=use_pallas)
-
-    g = (q_matvec(alpha) + _broadcast(p, n, X.dtype)).astype(acc)
+    # initial gradient g = Q @ alpha + p: streaming Pallas matvec on the
+    # fused path, chunked lax.map otherwise
+    g = (op.matvec(alpha, num_chunks=grad_chunks)
+         + _broadcast(p, n, X.dtype)).astype(acc)
 
     def select(alpha, g):
         pg = proj_grad(alpha, g, cvec)
@@ -343,28 +372,22 @@ def solve_box_qp_matvec(
         new_ab = _solve_small_qp(Qbb, gb, ab, cvec[idx], sweeps)
         return new_ab, new_ab - ab
 
-    def q_rows(idx):
-        """(B, n) rows of Q for the selected block (Q is symmetric)."""
-        Xb, yb = X[idx], y[idx]
-        if use_pallas:
-            return kops.q_rows(X, y, Xb, yb, kernel).astype(acc)
-        Kb = kernel.pairwise(Xb, X)
-        return ((yb[:, None] * y[None, :]) * Kb).astype(acc)
-
     if cache_cap > 0:
         cap = max(cache_cap, block)  # must hold at least one full block
 
         def body(state):
             alpha, g, cache, it, _ = state
             idx, pg_max = select(alpha, g)
-            slots, hit = colcache.lookup(cache, idx)
+            keys = op.cache_keys(idx)
+            slots, hit = colcache.lookup(cache, keys)
             served = jnp.all(hit)
-            Qrows = lax.cond(
+            kr = lax.cond(
                 served,
-                lambda: cache.cols[jnp.where(hit, slots, 0)],
-                lambda: q_rows(idx),
+                lambda: cache.cols[jnp.where(hit, slots, 0)].astype(acc),
+                lambda: op.kernel_rows(idx).astype(acc),
             )
-            cache = colcache.update(cache, idx, Qrows, served, slots, hit)
+            cache = colcache.update(cache, keys, kr, served, slots, hit)
+            Qrows = op.expand_rows(kr, idx)
             new_ab, delta = solve_block(Qrows[:, idx], alpha, g, idx)
             alpha = alpha.at[idx].set(new_ab)
             g = g + delta @ Qrows
@@ -375,30 +398,34 @@ def solve_box_qp_matvec(
             return (pg_max > tol) & (it < max_iters)
 
         pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, cvec)))
+        cache0 = colcache.init(cap, op.kwidth, dtype=op.storage_dtype(acc),
+                               width=op.kwidth)
         alpha, g, cache, iters, pg_max = lax.while_loop(
-            cond, body, (alpha, g, colcache.init(cap, n, dtype=acc), 0, pg0))
-        return SolveResult(alpha, g, iters, pg_max, cache.hits, cache.misses)
+            cond, body, (alpha, g, cache0, 0, pg0))
+        return SolveResult(alpha, g, iters, pg_max, cache.hits, cache.misses,
+                           cache_evictions=cache.evictions)
 
-    def body(state):
-        alpha, g, it, _ = state
-        idx, pg_max = select(alpha, g)
-        Xb, yb = X[idx], y[idx]
-        if use_pallas:
-            # fused: dg = y * (K(X, Xb) @ (yb * delta)); the (n, B) block
+    if op.use_pallas:
+        def body(state):
+            alpha, g, it, _ = state
+            idx, pg_max = select(alpha, g)
+            # fused: dg = s * (K(X, Xb) @ (sb * delta)); the (n, B) block
             # never leaves VMEM — only the (B, B) working-set block is formed
-            Kbb = kernel.pairwise(Xb, Xb)
-            Qbb = ((yb[:, None] * yb[None, :]) * Kbb).astype(acc)
+            Qbb = op.qbb(idx).astype(acc)
             new_ab, delta = solve_block(Qbb, alpha, g, idx)
             alpha = alpha.at[idx].set(new_ab)
-            g = g + kops.cd_column_update(X, y, Xb, yb * delta, kernel)
-        else:
-            Kb = kernel.pairwise(X, Xb)              # (n, B) on the fly
-            Qb = ((y[:, None] * yb[None, :]) * Kb).astype(acc)
+            g = op.col_update(g, idx, delta)
+            return alpha, g, it + 1, pg_max
+    else:
+        def body(state):
+            alpha, g, it, _ = state
+            idx, pg_max = select(alpha, g)
+            Qb = op.q_block(idx).astype(acc)         # (n, B) on the fly
             Qbb = Qb[idx]                            # slice, don't recompute
             new_ab, delta = solve_block(Qbb, alpha, g, idx)
             alpha = alpha.at[idx].set(new_ab)
             g = g + Qb @ delta
-        return alpha, g, it + 1, pg_max
+            return alpha, g, it + 1, pg_max
 
     def cond(state):
         _, _, it, pg_max = state
@@ -1137,7 +1164,7 @@ def solve_eq_qp_shrink(
 
 @partial(jax.jit, static_argnames=("kernel", "max_iters", "grad_chunks",
                                    "use_pallas", "refresh_every", "block",
-                                   "sweeps", "n_groups"))
+                                   "sweeps", "n_groups", "compute_dtype"))
 def solve_eq_qp_matvec(
     X: Array,
     y: Array,
@@ -1156,6 +1183,7 @@ def solve_eq_qp_matvec(
     sweeps: int = 4,
     gid=None,
     n_groups: int = 1,
+    compute_dtype: Optional[str] = None,
 ) -> SolveResult:
     """Pairwise / blocked maximal-violating-pair CD with on-the-fly kernel
     columns: Q = (y y') ∘ K(X, X) is never materialized.  ``y`` is the task
@@ -1181,37 +1209,25 @@ def solve_eq_qp_matvec(
     alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
                                           n_groups, mask)
 
-    from repro.core.kernels import gram_matvec
-
-    if use_pallas:
-        from repro.kernels import ops as kops
+    op = gramop.GramOperator(Xd=X, s=y, kernel=kernel, use_pallas=use_pallas,
+                             compute_dtype=compute_dtype)
 
     acc = jnp.promote_types(dtype, jnp.float32)
 
     def full_grad(al):
-        return (y * gram_matvec(kernel, X, y * al, num_chunks=grad_chunks,
-                                use_pallas=use_pallas)
-                + pvec).astype(acc)
+        return (op.matvec(al, num_chunks=grad_chunks) + pvec).astype(acc)
 
     def rank2b_fn(g, idx, delta):
         """Rank-|idx| gradient update, shared by the rank-2 and rank-2B
         paths: fused cd_column_update on the Pallas path (the (n, |idx|)
         kernel block stays in VMEM), an on-the-fly column matmul on XLA."""
-        Xb, yb = X[idx], y[idx]
-        if use_pallas:
-            return g + kops.cd_column_update(X, y, Xb, yb * delta,
-                                             kernel).astype(acc)
-        Kb = kernel.pairwise(X, Xb)                          # (n, |idx|)
-        Qb = ((y[:, None] * yb[None, :]) * Kb).astype(acc)
-        return g + Qb @ delta
+        return op.col_update(g, idx, delta)
 
     if block > 1:
         B = max(1, min(block, n // (2 * n_groups)))
 
         def qbb_fn(idx):
-            Xb, yb = X[idx], y[idx]
-            Kbb = kernel.pairwise(Xb, Xb)
-            return ((yb[:, None] * yb[None, :]) * Kbb).astype(acc)
+            return op.qbb(idx).astype(acc)
 
         alpha, g, iters, pg_max = _blocked_mvp_loop(
             alpha, cvec, avec, mask, gidv, n_groups, B, sweeps,
@@ -1220,20 +1236,22 @@ def solve_eq_qp_matvec(
             refresh_every=max(1, refresh_every // (2 * B)))
     else:
         def qij_fn(i, j):
-            Xb = X[jnp.stack([i, j])]
-            return (y[i] * y[j] * kernel.pairwise(Xb, Xb)[0, 1]).astype(acc)
+            return op.qbb(jnp.stack([i, j]))[0, 1].astype(acc)
 
         def rank2_fn(g, i, j, di, dj):
             return rank2b_fn(g, jnp.stack([i, j]), jnp.stack([di, dj]))
 
         alpha, g, iters, pg_max = _pairwise_mvp_loop(
             alpha, cvec, avec, mask, gidv, n_groups,
-            qdiag=(y * y * kernel.diag(X)).astype(acc),
+            qdiag=op.qdiag().astype(acc),
             qij_fn=qij_fn, rank2_fn=rank2_fn, full_grad=full_grad,
             tol=tol, max_iters=max_iters, refresh_every=refresh_every)
 
     def q_col(k):
-        Kk = kernel.pairwise(X, X[k][None, :])[:, 0]
+        # XLA pairwise regardless of backend (one skinny column), under the
+        # operator's precision policy
+        Kk = kernel.pairwise(X, X[k][None, :],
+                             compute_dtype=op._cd())[:, 0]
         return (y * y[k] * Kk).astype(acc)
 
     alpha, g = _restore_equality_grouped(alpha, g, q_col, cvec, avec, dvec,

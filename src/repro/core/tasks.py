@@ -105,6 +105,18 @@ class TaskDual(NamedTuple):
     def n_base(self) -> int:
         return int(self.base_index.max()) + 1 if self.base_index.size else 0
 
+    def base_view(self):
+        """Deduped Gram view ``(Xb, bidx)`` with ``Xd == Xb[bidx]``
+        row-for-row: ``Xb`` holds the first dual point of each base id (for
+        SVR's [X; X] stacking that is X itself), ``bidx`` the int32 base id
+        per dual coordinate.  Kernel rows computed against ``Xb`` and
+        gathered through ``bidx`` are bit-identical to rows computed on the
+        duplicated ``Xd`` (same dot products), at n_base-width storage —
+        the ``core.gramop`` dedup contract."""
+        bi = np.asarray(self.base_index)
+        _, first = np.unique(bi, return_index=True)  # first row per base id
+        return self.Xd[jnp.asarray(first)], jnp.asarray(bi, jnp.int32)
+
     def collapse(self, alpha: Array) -> Array:
         """(n_rows, n_dual) dual solution -> (n_rows, n_base) decision
         coefficients ``beta = scatter-add of s ∘ u over base_index``."""

@@ -27,9 +27,14 @@ from jax.experimental import pallas as pl
 
 
 def _cd_body(x_ref, y_ref, xb_ref, w_ref, o_ref, *, kind: str, gamma: float,
-             degree: int, coef0: float):
+             degree: int, coef0: float, compute_dtype=None):
     x = x_ref[...]                                      # (bm, d)
     xb = xb_ref[...]                                    # (B, d)
+    if compute_dtype is not None:
+        # precision policy: quantize the Gram operands only — y, w and the
+        # skinny contraction stay f32 (flash_attention idiom)
+        x = x.astype(compute_dtype)
+        xb = xb.astype(compute_dtype)
     g = jax.lax.dot_general(x, xb, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     if kind == "linear":
@@ -47,7 +52,8 @@ def _cd_body(x_ref, y_ref, xb_ref, w_ref, o_ref, *, kind: str, gamma: float,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "interpret"),
+    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "interpret",
+                     "compute_dtype"),
 )
 def cd_column_update(
     X: jax.Array,
@@ -61,13 +67,14 @@ def cd_column_update(
     coef0: float = 0.0,
     bm: int = 512,
     interpret: bool = False,
+    compute_dtype=None,
 ) -> jax.Array:
     """Returns dg (n,) = y * (K(X, Xb) @ w).  y: (n,), w: (B,)."""
     n, d = X.shape
     B, _ = Xb.shape
     assert n % bm == 0
     body = functools.partial(_cd_body, kind=kind, gamma=gamma, degree=degree,
-                             coef0=coef0)
+                             coef0=coef0, compute_dtype=compute_dtype)
     out = pl.pallas_call(
         body,
         grid=(n // bm,),

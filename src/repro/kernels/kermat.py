@@ -21,9 +21,16 @@ from jax.experimental import pallas as pl
 
 
 def _kermat_body(x_ref, y_ref, o_ref, *, kind: str, gamma: float, degree: int,
-                 coef0: float):
+                 coef0: float, compute_dtype=None):
     x = x_ref[...]
     y = y_ref[...]
+    if compute_dtype is not None:
+        # precision policy (flash_attention idiom): low-precision operand
+        # tiles feed the MXU, accumulation stays f32 via
+        # preferred_element_type; the rbf norms below square the *quantized*
+        # tiles in f32 so the sqdist expansion cancels consistently
+        x = x.astype(compute_dtype)
+        y = y.astype(compute_dtype)
     g = jax.lax.dot_general(
         x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                                        # (bm, bn) MXU
@@ -41,7 +48,8 @@ def _kermat_body(x_ref, y_ref, o_ref, *, kind: str, gamma: float, degree: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "bn", "interpret"),
+    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "bn",
+                     "interpret", "compute_dtype"),
 )
 def kermat(
     X: jax.Array,
@@ -54,6 +62,7 @@ def kermat(
     bm: int = 256,
     bn: int = 256,
     interpret: bool = False,
+    compute_dtype=None,
 ) -> jax.Array:
     """K(X, Y) -> (n, m). n % bm == 0, m % bn == 0 (ops.py pads)."""
     n, d = X.shape
@@ -61,7 +70,8 @@ def kermat(
     assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
     grid = (n // bm, m // bn)
     body = functools.partial(_kermat_body, kind=kind, gamma=gamma,
-                             degree=degree, coef0=coef0)
+                             degree=degree, coef0=coef0,
+                             compute_dtype=compute_dtype)
     return pl.pallas_call(
         body,
         grid=grid,

@@ -25,7 +25,7 @@ from jax.experimental import pallas as pl
 
 
 def _kmv_body(x_ref, z_ref, v_ref, o_ref, *, kind: str, gamma: float,
-              degree: int, coef0: float):
+              degree: int, coef0: float, compute_dtype=None):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -34,6 +34,11 @@ def _kmv_body(x_ref, z_ref, v_ref, o_ref, *, kind: str, gamma: float,
 
     x = x_ref[...]                                       # (bm, d)
     z = z_ref[...]                                       # (bn, d)
+    if compute_dtype is not None:
+        # precision policy: quantize the Gram operands only — v and the
+        # output block stay f32 (flash_attention idiom)
+        x = x.astype(compute_dtype)
+        z = z.astype(compute_dtype)
     g = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     if kind == "linear":
@@ -49,7 +54,8 @@ def _kmv_body(x_ref, z_ref, v_ref, o_ref, *, kind: str, gamma: float,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "bn", "interpret"),
+    static_argnames=("kind", "gamma", "degree", "coef0", "bm", "bn",
+                     "interpret", "compute_dtype"),
 )
 def kernel_matvec(
     X: jax.Array,
@@ -63,13 +69,14 @@ def kernel_matvec(
     bm: int = 256,
     bn: int = 256,
     interpret: bool = False,
+    compute_dtype=None,
 ) -> jax.Array:
     """out (n,) = K(X, Z) @ v.  n % bm == 0, m % bn == 0 (ops.py pads)."""
     n, d = X.shape
     m, _ = Z.shape
     assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
     body = functools.partial(_kmv_body, kind=kind, gamma=gamma, degree=degree,
-                             coef0=coef0)
+                             coef0=coef0, compute_dtype=compute_dtype)
     out = pl.pallas_call(
         body,
         grid=(n // bm, m // bn),

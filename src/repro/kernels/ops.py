@@ -30,9 +30,22 @@ def _pad_rows(A: jax.Array, mult: int) -> Tuple[jax.Array, int]:
     return A, n
 
 
+def _cd_static(compute_dtype, ref_dtype):
+    """Normalize the precision policy to a canonical static string: ``None``
+    — or a dtype equal to the data's own — keeps the exact historical kernel
+    body (no cast inserted, one trace cache entry)."""
+    if compute_dtype is None:
+        return None
+    cd = jnp.dtype(compute_dtype)
+    return None if cd == jnp.dtype(ref_dtype) else str(cd)
+
+
 def kernel_matrix(X: jax.Array, Y: jax.Array, kernel, bm: int = 256,
-                  bn: int = 256) -> jax.Array:
-    """K(X, Y) via the tiled Pallas kernel. ``kernel`` is a core.kernels.Kernel."""
+                  bn: int = 256, compute_dtype=None) -> jax.Array:
+    """K(X, Y) via the tiled Pallas kernel. ``kernel`` is a core.kernels.Kernel.
+
+    ``compute_dtype`` (e.g. "bfloat16") quantizes the operand tiles inside
+    the kernel body; accumulation stays f32 (DESIGN.md §12)."""
     bm = min(bm, max(8, X.shape[0]))
     bn = min(bn, max(8, Y.shape[0]))
     Xp, n = _pad_rows(X, bm)
@@ -41,12 +54,14 @@ def kernel_matrix(X: jax.Array, Y: jax.Array, kernel, bm: int = 256,
         Xp, Yp, kind=kernel.kind, gamma=float(kernel.gamma),
         degree=int(kernel.degree), coef0=float(kernel.coef0),
         bm=bm, bn=bn, interpret=_interpret(),
+        compute_dtype=_cd_static(compute_dtype, X.dtype),
     )
     return out[:n, :m]
 
 
 def kernel_matvec(X: jax.Array, Z: jax.Array, v: jax.Array, kernel,
-                  bm: int = 256, bn: int = 256) -> jax.Array:
+                  bm: int = 256, bn: int = 256,
+                  compute_dtype=None) -> jax.Array:
     """out (n,) = K(X, Z) @ v via the streaming Pallas kernel.
 
     Zero-padded Z rows carry zero v weights, so they contribute nothing to
@@ -61,17 +76,20 @@ def kernel_matvec(X: jax.Array, Z: jax.Array, v: jax.Array, kernel,
         Xp, Zp, vp, kind=kernel.kind, gamma=float(kernel.gamma),
         degree=int(kernel.degree), coef0=float(kernel.coef0),
         bm=bm, bn=bn, interpret=_interpret(),
+        compute_dtype=_cd_static(compute_dtype, X.dtype),
     )
     return out[:n]
 
 
 def q_rows(X: jax.Array, y: jax.Array, Xb: jax.Array, yb: jax.Array,
-           kernel, bm: int = 256, bn: int = 256) -> jax.Array:
+           kernel, bm: int = 256, bn: int = 256,
+           compute_dtype=None) -> jax.Array:
     """Signed generalized-dual rows ``Q[b, :] = y_b * (K(X_b, X) ∘ y)`` of
     shape (B, n) via the tiled Pallas kernel matrix (Q is symmetric, so the
     block's rows double as its columns — the cache-refill unit shared by the
     matvec solver and the distributed conquer)."""
-    Kb = kernel_matrix(Xb, X, kernel, bm=bm, bn=bn)
+    Kb = kernel_matrix(Xb, X, kernel, bm=bm, bn=bn,
+                       compute_dtype=compute_dtype)
     return yb[:, None] * (Kb * y[None, :])
 
 
@@ -91,7 +109,7 @@ def kmeans_assign(X: jax.Array, Xm: jax.Array, W: jax.Array, s: jax.Array,
 
 
 def cd_column_update(X: jax.Array, y: jax.Array, Xb: jax.Array, w: jax.Array,
-                     kernel, bm: int = 512) -> jax.Array:
+                     kernel, bm: int = 512, compute_dtype=None) -> jax.Array:
     """dg = y * (K(X, Xb) @ w) via the fused Pallas kernel.
 
     ``y`` is the generalized dual's sign vector ``s`` — class labels for
@@ -107,5 +125,6 @@ def cd_column_update(X: jax.Array, y: jax.Array, Xb: jax.Array, w: jax.Array,
         Xp, yp, Xb, w, kind=kernel.kind, gamma=float(kernel.gamma),
         degree=int(kernel.degree), coef0=float(kernel.coef0),
         bm=bm, interpret=_interpret(),
+        compute_dtype=_cd_static(compute_dtype, X.dtype),
     )
     return out[:n]

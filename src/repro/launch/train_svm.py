@@ -120,6 +120,16 @@ def main(argv=None) -> None:
     ap.add_argument("--dist-cache", type=int, default=0,
                     help="per-device kernel-row LRU capacity for the "
                          "parallel conquer (0 = recompute rows on the fly)")
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="Gram matmul-operand precision (accumulation stays "
+                         "f32); float32 keeps the bit-exact default paths")
+    ap.add_argument("--host-spill", action="store_true",
+                    help="level-0 out-of-core solve: kernel-row panels live "
+                         "in host RAM, a device LRU holds the working set "
+                         "within --gram-budget bytes")
+    ap.add_argument("--gram-budget", type=int, default=0,
+                    help="byte budget for Gram storage tiers (0 = default)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -153,10 +163,16 @@ def main(argv=None) -> None:
     split = stratified_split if args.dataset == "imbalanced" else train_test_split
     Xtr, ytr, Xte, yte = split(jax.random.fold_in(key, 1), X, y)
     kern = Kernel(args.kernel, gamma=args.gamma)
+    extra = {}
+    if args.compute_dtype != "float32":     # float32 = the bit-exact default
+        extra["compute_dtype"] = args.compute_dtype
+    if args.gram_budget > 0:
+        extra["gram_budget"] = args.gram_budget
     cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
                       m=args.m, tol=args.tol, block=args.block,
                       eq_block_size=args.eq_block,
-                      early_stop_level=args.early, seed=args.seed)
+                      early_stop_level=args.early, seed=args.seed,
+                      host_spill=args.host_spill, **extra)
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 

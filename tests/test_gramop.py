@@ -1,0 +1,346 @@
+"""GramOperator layer (DESIGN.md §12): precision policy parity, base-index
+dedup transparency, byte-denominated budgets, and the host-spill solver.
+
+Covers the PR-7 acceptance gates: bf16-vs-f32 parity for every kernel op on
+non-tile-aligned mixed-sign shapes; ``compute_dtype`` None/f32 bit-identity;
+SVR dedup fit parity; out-of-core fit matching the in-memory fit to 1e-3
+relative objective.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCSVMConfig,
+    DEFAULT_GRAM_BUDGET,
+    EpsilonSVR,
+    Kernel,
+    auto_num_chunks,
+    colcache,
+    fit,
+    gram_matvec,
+    solve_box_qp_matvec,
+)
+from repro.core.gramop import (
+    GramOperator,
+    fits_budget,
+    resolve_compute_dtype,
+    solve_box_qp_spill,
+)
+from repro.core.solver import objective
+from repro.data import gaussian_mixture, sinc1d
+from repro.kernels import ops as kops
+
+KERNELS = [
+    Kernel("rbf", gamma=0.5),
+    Kernel("poly", gamma=0.5, degree=3, coef0=1.0),
+    Kernel("linear"),
+]
+KIDS = [k.kind for k in KERNELS]
+
+
+def _data(n, m, d, key=0):
+    """Mixed-sign, non-tile-aligned data (n, m deliberately not multiples of
+    the 8/128-lane tiles)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    X = jax.random.uniform(k1, (n, d), minval=-0.7, maxval=0.7)
+    Y = jax.random.uniform(k2, (m, d), minval=-0.7, maxval=0.7)
+    return X, Y
+
+
+def _signs(n, key=3):
+    return jnp.where(jax.random.bernoulli(jax.random.PRNGKey(key), 0.5, (n,)),
+                     1.0, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# Precision policy: bf16 operand tiles ~ f32 reference; f32 policy is a no-op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_kernel_matrix_bf16_parity(kern):
+    X, Y = _data(100, 53, 9)
+    ref = kops.kernel_matrix(X, Y, kern, bm=64, bn=64)
+    low = kops.kernel_matrix(X, Y, kern, bm=64, bn=64,
+                             compute_dtype="bfloat16")
+    assert low.dtype == jnp.float32          # f32 accumulation policy
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_kernel_matvec_bf16_parity(kern):
+    X, Z = _data(75, 41, 9, key=1)
+    v = jax.random.normal(jax.random.PRNGKey(7), (41,))
+    ref = kops.kernel_matvec(X, Z, v, kern)
+    low = kops.kernel_matvec(X, Z, v, kern, compute_dtype="bfloat16")
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2 * float(jnp.sum(jnp.abs(v))))
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_q_rows_bf16_parity(kern):
+    X, _ = _data(90, 1, 9, key=2)
+    y = _signs(90)
+    idx = jnp.asarray([3, 17, 41, 88])
+    ref = kops.q_rows(X, y, X[idx], y[idx], kern, bm=64, bn=64)
+    low = kops.q_rows(X, y, X[idx], y[idx], kern, bm=64, bn=64,
+                      compute_dtype="bfloat16")
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_cd_column_update_bf16_parity(kern):
+    X, _ = _data(85, 1, 9, key=4)
+    y = _signs(85)
+    idx = jnp.asarray([0, 12, 60])
+    w = jnp.asarray([0.3, -0.2, 0.5]) * y[idx]
+    ref = kops.cd_column_update(X, y, X[idx], w, kern)
+    low = kops.cd_column_update(X, y, X[idx], w, kern,
+                                compute_dtype="bfloat16")
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_pairwise_bf16_parity(kern):
+    X, Y = _data(64, 37, 9, key=5)
+    ref = kern.pairwise(X, Y)
+    low = kern.pairwise(X, Y, compute_dtype="bfloat16")
+    assert low.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=KIDS)
+def test_f32_policy_is_bit_identical(kern):
+    """``compute_dtype`` None / "float32" produce the SAME arrays: the
+    policy normalizes away (no cast nodes), keeping pre-policy trajectories
+    bit-exact — the acceptance gate for the default config."""
+    X, Y = _data(70, 33, 9, key=6)
+    y = _signs(70, key=8)
+    v = jax.random.normal(jax.random.PRNGKey(9), (70,))
+    for cd in (None, "float32"):
+        assert resolve_compute_dtype(cd, X.dtype) is None
+    np.testing.assert_array_equal(
+        np.asarray(kern.pairwise(X, Y, compute_dtype="float32")),
+        np.asarray(kern.pairwise(X, Y)))
+    np.testing.assert_array_equal(
+        np.asarray(kops.kernel_matrix(X, Y, kern, compute_dtype="float32")),
+        np.asarray(kops.kernel_matrix(X, Y, kern)))
+    np.testing.assert_array_equal(
+        np.asarray(gram_matvec(kern, X, v, compute_dtype="float32")),
+        np.asarray(gram_matvec(kern, X, v)))
+
+
+# ---------------------------------------------------------------------------
+# Base-indexed dedup view: sign expansion is exactly the 2n-wide operator
+# ---------------------------------------------------------------------------
+
+def _svr_ops(n=57, d=6, use_pallas=False, kern=KERNELS[0]):
+    Xb, _ = _data(n, 1, d, key=10)
+    bidx = jnp.concatenate([jnp.arange(n), jnp.arange(n)]).astype(jnp.int32)
+    s = jnp.concatenate([jnp.ones(n), -jnp.ones(n)])
+    Xd = Xb[bidx]
+    full = GramOperator(Xd=Xd, s=s, kernel=kern, use_pallas=use_pallas)
+    dd = GramOperator(Xd=Xd, s=s, Xb=Xb, bidx=bidx, kernel=kern,
+                      use_pallas=use_pallas)
+    return full, dd
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["xla", "pallas"])
+def test_dedup_q_rows_matches_full(use_pallas):
+    full, dd = _svr_ops(use_pallas=use_pallas)
+    assert dd.dedup and dd.kwidth == full.kwidth // 2
+    idx = jnp.asarray([0, 5, 57, 90, 113])   # both mirror halves
+    np.testing.assert_array_equal(np.asarray(dd.q_rows(idx)),
+                                  np.asarray(full.q_rows(idx)))
+    np.testing.assert_array_equal(np.asarray(dd.q_block(idx)),
+                                  np.asarray(full.q_block(idx)))
+    np.testing.assert_array_equal(np.asarray(dd.qbb(idx)),
+                                  np.asarray(full.qbb(idx)))
+    # mirrored coordinates share one cache key (the raw row dedup)
+    keys = np.asarray(dd.cache_keys(jnp.asarray([3, 3 + 57])))
+    assert keys[0] == keys[1] == 3
+
+
+def test_dedup_matvec_and_col_update():
+    full, dd = _svr_ops()
+    v = jax.random.normal(jax.random.PRNGKey(11), (dd.n_dual,))
+    # default matvec path ignores dedup entirely -> bit-identical
+    np.testing.assert_array_equal(np.asarray(dd.matvec(v, num_chunks=4)),
+                                  np.asarray(full.matvec(v, num_chunks=4)))
+    # via_base re-associates the sum: equal to fp tolerance, 4x fewer evals
+    np.testing.assert_allclose(
+        np.asarray(dd.matvec(v, num_chunks=4, via_base=True)),
+        np.asarray(full.matvec(v, num_chunks=4)), rtol=1e-5, atol=1e-5)
+    g = jnp.zeros(dd.n_dual)
+    idx = jnp.asarray([2, 59, 100])
+    delta = jnp.asarray([0.4, -0.1, 0.25])
+    np.testing.assert_allclose(np.asarray(dd.col_update(g, idx, delta)),
+                               np.asarray(full.col_update(g, idx, delta)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_storage_dtype_and_budget():
+    _, dd = _svr_ops()
+    assert dd.storage_dtype(jnp.float32) == jnp.dtype(jnp.float32)
+    low = dataclasses.replace(dd, compute_dtype="bfloat16")
+    assert low.storage_dtype(jnp.float32) == jnp.dtype(jnp.bfloat16)
+    assert fits_budget(4, 16, jnp.float32)
+    assert not fits_budget(5, 16, jnp.float32)
+    assert fits_budget(8, 16, jnp.bfloat16)   # bf16 fits 2x the rows
+
+
+# ---------------------------------------------------------------------------
+# Byte-denominated chunking
+# ---------------------------------------------------------------------------
+
+def test_auto_num_chunks_budget():
+    # default budget == historical 2**27 f32 slots -> tiny problems: 1 chunk
+    assert auto_num_chunks(512, 512) == 1
+    # exactly 4 budget-sized row blocks
+    assert auto_num_chunks(1024, 256, budget_bytes=1024 * 256) == 4
+    # never more chunks than rows
+    assert auto_num_chunks(8, 10 ** 9, budget_bytes=1) == 8
+
+
+def test_gram_matvec_auto_chunks_bit_identical():
+    """Chunk count only partitions output rows — any choice is bit-exact."""
+    X, _ = _data(130, 1, 7, key=12)
+    v = jax.random.normal(jax.random.PRNGKey(13), (130,))
+    kern = KERNELS[0]
+    ref = gram_matvec(kern, X, v, num_chunks=8)
+    np.testing.assert_array_equal(np.asarray(gram_matvec(kern, X, v)),
+                                  np.asarray(ref))
+    np.testing.assert_array_equal(
+        np.asarray(gram_matvec(kern, X, v, budget_bytes=130 * 7 * 4)),
+        np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Column-cache eviction accounting
+# ---------------------------------------------------------------------------
+
+def test_colcache_eviction_counter():
+    cache = colcache.init(2, 6)
+    rows = jnp.ones((2, 6))
+    served = jnp.asarray(False)
+
+    def insert(cache, ids):
+        idx = jnp.asarray(ids, jnp.int32)
+        slots, hit = colcache.lookup(cache, idx)
+        return colcache.update(cache, idx, rows, served, slots, hit)
+
+    cache = insert(cache, [0, 1])            # fills empty slots
+    assert int(cache.evictions) == 0
+    cache = insert(cache, [2, 3])            # displaces live rows 0, 1
+    assert int(cache.evictions) == 2
+    assert int(cache.misses) == 4 and int(cache.hits) == 0
+
+
+# ---------------------------------------------------------------------------
+# Host-spill out-of-core solver
+# ---------------------------------------------------------------------------
+
+def test_spill_solver_matches_in_memory():
+    n, d, C = 160, 6, 1.0
+    X, _ = _data(n, 1, d, key=14)
+    y = _signs(n, key=15)
+    kern = KERNELS[0]
+    ref = solve_box_qp_matvec(X, y, kern, C, tol=1e-4, max_iters=20_000,
+                              block=16, use_pallas=False)
+    op = GramOperator(Xd=X, s=y, kernel=kern, use_pallas=False)
+    # budget sized to ~48 rows/panel -> 4 panels, device LRU capacity 1
+    res = solve_box_qp_spill(op, C, tol=1e-4, max_iters=20_000, block=16,
+                             device_budget_bytes=48 * n * 4)
+    assert float(res.pg_max) <= 1e-4
+    f_ref = float(objective(ref.alpha, ref.grad))
+    f_sp = float(objective(res.alpha, res.grad))
+    assert abs(f_sp - f_ref) <= 1e-3 * (1 + abs(f_ref))
+    # tier counters: panels were computed, written to host, and re-served
+    assert int(res.spills) >= 4
+    assert int(res.spill_hits) > 0
+    assert int(res.cache_evictions) > 0
+
+
+def test_spill_solver_dedup_svr_dual():
+    """Out-of-core + dedup: the 2n SVR dual spills n-wide raw-row panels."""
+    n = 90
+    X, y = sinc1d(jax.random.PRNGKey(16), n, noise=0.05)
+    kern = Kernel("rbf", gamma=2.0)
+    td = EpsilonSVR(eps=0.05).build(X, y, 2.0)
+    Xb, bidx = td.base_view()
+    op = GramOperator(Xd=td.Xd, s=td.S[0], Xb=Xb, bidx=bidx, kernel=kern,
+                      use_pallas=False)
+    ref = solve_box_qp_matvec(td.Xd, td.S[0], kern, td.Cvec[0], tol=1e-4,
+                              max_iters=20_000, block=16, p=td.P[0])
+    res = solve_box_qp_spill(op, td.Cvec[0], tol=1e-4, max_iters=20_000,
+                             block=16, p=td.P[0],
+                             device_budget_bytes=40 * n * 4)
+    f_ref = float(objective(ref.alpha, ref.grad, p=td.P[0]))
+    f_sp = float(objective(res.alpha, res.grad, p=td.P[0]))
+    assert abs(f_sp - f_ref) <= 1e-3 * (1 + abs(f_ref))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fits through the driver
+# ---------------------------------------------------------------------------
+
+def _cls_data(n=240, key=17):
+    return gaussian_mixture(jax.random.PRNGKey(key), n, d=8,
+                            modes_per_class=4, spread=0.15)
+
+
+def test_fit_host_spill_matches_in_memory():
+    from repro.core import objective_value
+
+    X, y = _cls_data()
+    kern = Kernel("rbf", gamma=4.0)
+    base = dict(kernel=kern, C=2.0, k=2, levels=1, m=100, tol=1e-4,
+                kmeans_iters=8, use_pallas=False,
+                gram_budget=65_536)          # < n^2 f32 -> no dense fallback
+    m_mem = fit(DCSVMConfig(**base), X, y)
+    m_sp = fit(DCSVMConfig(**base, host_spill=True), X, y)
+    f_mem = float(objective_value(m_mem.config, X, y, m_mem.alpha))
+    f_sp = float(objective_value(m_mem.config, X, y, m_sp.alpha))
+    assert abs(f_sp - f_mem) <= 1e-3 * (1 + abs(f_mem))
+    st = m_sp.level_stats[-1]
+    assert st.get("spills", 0) > 0 and st.get("spill_hits", 0) > 0
+
+
+@pytest.mark.parametrize("budget", [DEFAULT_GRAM_BUDGET, 131_072],
+                         ids=["dense", "matvec"])
+def test_fit_svr_dedup_parity(budget):
+    """gram_dedup on/off is decision-function-transparent on both the dense
+    (gathered base Gram) and matvec (base-row cache) level-0 paths."""
+    n = 150
+    X, y = sinc1d(jax.random.PRNGKey(18), n, noise=0.03)
+    kern = Kernel("rbf", gamma=2.0)
+    base = dict(kernel=kern, C=2.0, k=2, levels=1, m=80, tol=1e-4,
+                kmeans_iters=8, use_pallas=False, gram_budget=budget)
+    m_dd = fit(DCSVMConfig(**base), X, y, task=EpsilonSVR(eps=0.05))
+    m_full = fit(DCSVMConfig(**base, gram_dedup=False), X, y,
+                 task=EpsilonSVR(eps=0.05))
+    np.testing.assert_allclose(np.asarray(m_dd.beta), np.asarray(m_full.beta),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fit_bf16_end_to_end():
+    """A bf16-policy fit trains a real classifier (the policy composes with
+    the whole pipeline, not just isolated kernels)."""
+    from repro.core import accuracy, predict_exact
+
+    X, y = _cls_data(key=19)
+    kern = Kernel("rbf", gamma=4.0)
+    base = dict(kernel=kern, C=2.0, k=2, levels=1, m=100, tol=1e-3,
+                kmeans_iters=8, use_pallas=False)
+    m32 = fit(DCSVMConfig(**base), X, y)
+    m16 = fit(DCSVMConfig(**base, compute_dtype="bfloat16"), X, y)
+    acc32 = accuracy(y, predict_exact(m32, X))
+    acc16 = accuracy(y, predict_exact(m16, X))
+    assert acc16 >= acc32 - 0.05
