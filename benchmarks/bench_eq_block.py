@@ -15,8 +15,6 @@ the same workload).
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 
 import numpy as np
 import jax
@@ -28,19 +26,6 @@ from repro.core.solver import solve_eq_qp_matvec
 from repro.data import gaussian_with_outliers, train_test_split
 
 BLOCK = 8
-
-
-def _merge_into_oneclass_json(section: dict) -> None:
-    """BENCH_oneclass.json carries both benches; keep the other sections."""
-    payload = {}
-    if os.path.exists("BENCH_oneclass.json"):
-        try:
-            with open("BENCH_oneclass.json") as f:
-                payload = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            payload = {}
-    payload["eq_block"] = section
-    emit_json("BENCH_oneclass.json", payload)
 
 
 def run(dry_run: bool = False) -> list:
@@ -98,7 +83,8 @@ def run(dry_run: bool = False) -> list:
     assert rho_dev < 1e-2 * (1 + abs(models["pairwise"].rho)), rho_dev
     section["problem"] = {"n_train": int(ntr), "nu": nu, "gamma": gamma,
                           "tol": tol, "dry_run": dry_run}
-    _merge_into_oneclass_json(section)
+    # BENCH_oneclass.json carries both benches; keep the other sections
+    emit_json("BENCH_oneclass.json", {"eq_block": section}, merge=True)
     return rows
 
 

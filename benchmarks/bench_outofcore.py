@@ -7,13 +7,10 @@ bf16-operand/f32-accumulate), emitting wall time, iterations, objective gap
 vs the f32 in-memory solution, and the spill-tier counters.
 
 Merges the ``outofcore`` section into BENCH_conquer.json alongside
-bench_kernels' cache results (``emit_json`` overwrites, so the existing
-artifact is read first and carried over).
+bench_kernels' cache results (``emit_json(..., merge=True)`` keeps the
+artifact's other sections).
 """
 from __future__ import annotations
-
-import json
-import os
 
 import jax.numpy as jnp
 
@@ -69,12 +66,7 @@ def run(dry_run: bool = False) -> list:
                      f"gap={gap(f_s):.2e};spills={int(res_s.spills)}"))
         assert gap(f_s) < (5e-2 if cd else 1e-3), (tag, gap(f_s))
 
-    payload = {}
-    if os.path.exists(ARTIFACT):                    # read-merge: emit_json
-        with open(ARTIFACT) as f:                   # overwrites whole file
-            payload = json.load(f)
-    payload["outofcore"] = results
-    emit_json(ARTIFACT, payload)
+    emit_json(ARTIFACT, {"outofcore": results}, merge=True)
     return rows
 
 

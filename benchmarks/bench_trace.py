@@ -1,0 +1,83 @@
+"""Convergence-trace benchmark: pg_max vs cumulative seconds for the conquer.
+
+Runs the level-0 conquer engine (``solve_box_qp_matvec``) with a
+device-resident ``ConvTrace`` ring threaded through the CD while-loop
+(``repro.obs.trace``), fetches the per-iteration (pg_max, objective,
+n_free, cache_hits) samples ONCE after the solve, and converts them into a
+convergence curve — sample i is stamped ``wall * (i+1)/samples`` since the
+outer iterations it records are uniform in wall time.  Also reports the
+tracing overhead (traced vs untraced wall clock of the identical solve) and
+asserts the traced trajectory lands on the untraced alpha bit-for-bit.
+
+Merges the ``trace`` section into BENCH_conquer.json
+(``emit_json(..., merge=True)`` keeps the kernels/outofcore sections).
+
+    PYTHONPATH=src python -m benchmarks.run --only trace [--dry-run]
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import bench_dataset, emit, emit_json, timed
+from repro.core.solver import solve_box_qp_matvec
+from repro.obs.trace import trace_fetch, trace_init
+
+ARTIFACT = "BENCH_conquer.json"
+
+
+def _curve(fetched: dict, wall: float, col: str):
+    vals = fetched.get(col)
+    if not vals:
+        return []
+    m = len(vals)
+    return [[wall * (i + 1) / m, v] for i, v in enumerate(vals)
+            if not np.isnan(v)]
+
+
+def run(dry_run: bool = False) -> list:
+    n, block, tol = (160, 16, 1e-3) if dry_run else (1536, 32, 1e-3)
+    max_iters = 400 if dry_run else 4000
+    cap = 512
+    Xtr, ytr, _, _, kern, C = bench_dataset("gaussian", n)
+    Xtr, ytr = Xtr[:n], ytr[:n]
+
+    rows, section = [], {"capacity": cap}
+    for tag, kw in {
+        "fused": dict(),
+        "cached": dict(cache_cap=min(256, n)),
+    }.items():
+        def solve(trace=None):
+            return solve_box_qp_matvec(
+                Xtr, ytr, kern, C, tol=tol, max_iters=max_iters,
+                block=block, sweeps=4, trace=trace, **kw)
+
+        solve().alpha.block_until_ready()                    # warm untraced
+        res0, t0 = timed(solve)
+        solve(trace=trace_init(cap)).alpha.block_until_ready()  # warm traced
+        res1, t1 = timed(solve, trace=trace_init(cap))
+        assert bool(jnp.all(res0.alpha == res1.alpha)), tag  # bit-identity
+        fetched = trace_fetch(res1.trace)
+        curve = _curve(fetched, t1, "pg_max")
+        assert curve, tag   # acceptance: >= 1 pg_max-vs-seconds curve
+        section[tag] = {
+            "wall_s": t0, "wall_s_traced": t1,
+            "trace_overhead": (t1 - t0) / max(t0, 1e-9),
+            "iters": int(res1.iters), "samples": fetched["samples"],
+            "dropped": fetched["dropped"],
+            "pg_max_vs_seconds": curve,
+            "objective_vs_seconds": _curve(fetched, t1, "objective"),
+        }
+        if "cache_hits" in fetched:
+            section[tag]["cache_hits_per_sample"] = fetched["cache_hits"]
+        rows.append((f"trace.conquer.{tag}.{n}", t1 * 1e6,
+                     f"samples={fetched['samples']};"
+                     f"overhead={section[tag]['trace_overhead']:.1%}"))
+    section["problem"] = {"n": int(n), "tol": tol, "block": block,
+                          "dry_run": dry_run}
+    emit_json(ARTIFACT, {"trace": section}, merge=True)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

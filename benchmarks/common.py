@@ -21,8 +21,21 @@ def emit(rows: List[Row]) -> None:
         print(f"{name},{us:.1f},{derived}")
 
 
-def emit_json(path: str, payload: dict) -> None:
-    """Write a structured benchmark artifact (e.g. BENCH_conquer.json)."""
+def emit_json(path: str, payload: dict, merge: bool = False) -> None:
+    """Write a structured benchmark artifact (e.g. BENCH_conquer.json).
+
+    ``merge=True`` read-merges into an existing artifact: top-level keys in
+    ``payload`` replace/extend the file's, other sections survive — for
+    benches that share one JSON (a corrupt/missing file starts fresh)."""
+    if merge:
+        base = {}
+        try:
+            with open(path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            base = {}
+        if isinstance(base, dict):
+            payload = {**base, **payload}
     payload = dict(payload, backend=jax.default_backend())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -37,16 +37,47 @@ if [[ "${1:-}" == "--fast" ]]; then
     # GramOperator smoke: the precision/spill curve asserts the out-of-core
     # solves hit the in-memory objective (f32 to 1e-3, bf16 to 5e-2)
     python -m benchmarks.run --only outofcore --dry-run
+    # telemetry smoke: span-tree Chrome trace + per-level stats dump from
+    # the training driver, metrics exposition from the serving driver —
+    # then validate the artifact schemas (the JSON keys downstream
+    # dashboards key on)
+    TDIR="$(mktemp -d)"
+    trap 'rm -rf "$TDIR"' EXIT
+    python -m repro.launch.train_svm --n 400 --levels 1 --m 64 \
+        --dataset gaussian --trace "$TDIR/trace.json" --trace-cap 32 \
+        --stats-json "$TDIR/stats.json"
+    python -m repro.launch.serve_svm --n 600 --classes 3 --levels 1 \
+        --strategy early --batch 64 --batches 4 \
+        --metrics-out "$TDIR/metrics.json"
+    python scripts/make_report.py --stats "$TDIR/stats.json" >/dev/null
+    python - "$TDIR" <<'EOF'
+import json, sys
+d = sys.argv[1]
+t = json.load(open(f"{d}/trace.json"))
+assert t["traceEvents"], "empty chrome trace"
+assert all(e["ph"] == "X" and e["dur"] >= 0 for e in t["traceEvents"])
+s = json.load(open(f"{d}/stats.json"))
+assert s["levels"], "no level stats"
+assert "trace" in s["levels"][-1] and "trace_summary" in s["levels"][-1]
+m = json.load(open(f"{d}/metrics.json"))
+assert m["counters"] and m["histograms"]
+assert any(k.startswith("serve_latency_seconds") for k in m["histograms"])
+prom = open(f"{d}/metrics.prom").read()
+assert "serve_latency_seconds_bucket" in prom
+print("telemetry smoke ok")
+EOF
 else
     python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
     # benchmarks smoke: tiny shapes, asserts Pallas/XLA parity on every
     # kernel, on the conquer solver, on the generalized SVR + one-class
     # duals, on the blocked (rank-2B) vs pairwise equality engines, on the
     # sharded parallel-block conquer (multi-device subprocesses assert
-    # fewer rounds-to-tol than the replicated baseline at 8 devices), and
-    # on the GramOperator precision/spill tiers (outofcore runs after
-    # kernels: both merge sections into BENCH_conquer.json);
-    # writes BENCH_{conquer,serve,svr,oneclass,dist}.json
+    # fewer rounds-to-tol than the replicated baseline at 8 devices), on
+    # the GramOperator precision/spill tiers, and on the traced-vs-untraced
+    # conquer (trace asserts bit-identity and emits the pg_max-vs-seconds
+    # curve; kernels/outofcore/trace all merge sections into
+    # BENCH_conquer.json); writes BENCH_{conquer,serve,svr,oneclass,dist}.json
     python -m benchmarks.run \
-        --only kernels,outofcore,serve,svr,oneclass,eq_block,dist --dry-run
+        --only kernels,outofcore,trace,serve,svr,oneclass,eq_block,dist \
+        --dry-run
 fi

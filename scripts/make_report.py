@@ -2,9 +2,16 @@
 experiments/dryrun/*.json.
 
     PYTHONPATH=src python scripts/make_report.py > experiments/roofline_tables.md
+
+With ``--stats PATH`` it instead renders the per-level training table from a
+``train_svm --stats-json`` dump (times, SV counts, cache counters and the
+level-0 convergence-trace summary):
+
+    PYTHONPATH=src python scripts/make_report.py --stats /tmp/stats.json
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -99,7 +106,52 @@ def roofline_table(mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def stats_table(path: str) -> str:
+    """Per-level markdown table from a ``train_svm --stats-json`` dump."""
+    with open(path) as f:
+        s = json.load(f)
+    lines = [
+        f"### Training levels — task={s.get('task', '?')} "
+        f"dataset={s.get('dataset', '?')} n={s.get('n', '?')} "
+        f"({s.get('train_time', 0.0):.1f}s total)",
+        "",
+        "| level | clusters | cluster_s | train_s | n_sv | iters | pg_max "
+        "| cache hit rate | trace |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for st in s.get("levels", []):
+        def num(key, fmt="{}", default="—"):
+            v = st.get(key)
+            return default if v is None else fmt.format(v)
+
+        ts = st.get("trace_summary") or {}
+        trace = "—"
+        if ts:
+            trace = f"{ts.get('samples', 0)} samples"
+            if ts.get("dropped"):
+                trace += f" (+{ts['dropped']} dropped)"
+            if ts.get("pg_first") is not None:
+                trace += (f", pg {ts['pg_first']:.2e} -> "
+                          f"{ts['pg_last']:.2e}")
+        lines.append(
+            f"| {st.get('level', '?')} | {st.get('clusters', '?')} "
+            f"| {num('cluster_time', '{:.2f}')} "
+            f"| {num('train_time', '{:.2f}')} | {num('n_sv')} "
+            f"| {num('iters')} | {num('pg_max', '{:.2e}')} "
+            f"| {num('cache_hit_rate', '{:.2%}')} | {trace} |")
+    return "\n".join(lines)
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stats", default="",
+                    help="render the per-level training table from a "
+                         "train_svm --stats-json dump instead of the "
+                         "dry-run/roofline tables")
+    args = ap.parse_args()
+    if args.stats:
+        print(stats_table(args.stats))
+        return
     print(dryrun_table("single"))
     print()
     print(dryrun_table("multi"))

@@ -40,6 +40,8 @@ from repro.core.kkmeans import Partition, two_step_kernel_kmeans
 from repro.core import gramop
 from repro.core import solver as S
 from repro.core.tasks import CSVC, Task, TaskDual, resolve_task
+from repro.obs.spans import span
+from repro.obs.trace import trace_fetch, trace_init, trace_summary
 
 Array = jax.Array
 
@@ -92,6 +94,16 @@ class DCSVMConfig:
                                    # for ~zero hits (DESIGN.md §2)
     shrink_rounds: int = 3
     seed: int = 0
+    trace: Optional[int] = None    # convergence-trace ring capacity for the
+                                   # level-0 solve: keep the LAST ``trace``
+                                   # per-iteration samples (pg_max, objective,
+                                   # n_free, cache hits) in a device-resident
+                                   # ring, fetched ONCE at fit exit into
+                                   # level_stats.  None = no trace state in
+                                   # any solver loop; the jaxpr is
+                                   # bit-identical to the untraced build
+                                   # (same static-gate contract as
+                                   # compute_dtype=None; DESIGN.md §13)
 
 
 @dataclasses.dataclass
@@ -315,6 +327,18 @@ def _solve_subset(cfg: DCSVMConfig, td: TaskDual, alpha: Array, idx: Array,
     return alpha.at[:, idx].set(new)
 
 
+def _stack_results(results: List[S.SolveResult]) -> S.SolveResult:
+    """Stack per-class SolveResults along a new leading axis, field-wise.
+    ``None`` fields (no cache, no trace) stay ``None``; pytree fields
+    (ConvTrace) are stacked leaf-wise."""
+    def stack_field(f):
+        vals = [getattr(r, f) for r in results]
+        if any(v is None for v in vals):
+            return None
+        return jax.tree.map(lambda *vs: jnp.stack(vs), *vals)
+    return S.SolveResult(*(stack_field(f) for f in S.SolveResult._fields))
+
+
 def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                 use_pallas: bool = False):
     """Top-level (level 0) solve on the whole generalized dual, warm-started.
@@ -327,6 +351,12 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
     budget is split accordingly)."""
     n = td.n_dual
     n_cls = td.S.shape[0]
+
+    def _tr():
+        # fresh per-class ring; created INSIDE the per-class closures so the
+        # class vmap stacks it to (n_cls, cap, NCOLS) / (n_cls,)
+        return trace_init(cfg.trace) if cfg.trace else None
+
     dedup = cfg.gram_dedup and td.n_base != n and not td.has_equality
     # host_spill routes the box family out-of-core even under the dense
     # threshold (the flag's meaning is "never materialize the level-0 Gram");
@@ -350,7 +380,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                     Q, ci, aqi, dqi, alpha0=ai, tol=cfg.tol,
                     max_iters=cfg.max_iters, rounds=cfg.shrink_rounds, p=pi,
                     block=cfg.eq_block_size, sweeps=cfg.sweeps, gid=gqi,
-                    n_groups=td.n_groups,
+                    n_groups=td.n_groups, trace=_tr(),
                 )
 
             return _map_classes(
@@ -363,6 +393,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
             return S.solve_with_shrinking(
                 Q, ci, alpha0=ai, tol=cfg.tol, max_iters=cfg.max_iters,
                 rounds=cfg.shrink_rounds, block=cfg.block, p=pi,
+                trace=_tr(),
             )
 
         return _map_classes(per_class, (td.S, td.P, td.Cvec, alpha),
@@ -375,6 +406,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                 max_iters=cfg.max_iters, use_pallas=use_pallas, p=pi,
                 block=cfg.eq_block_size, sweeps=cfg.sweeps, gid=gqi,
                 n_groups=td.n_groups, compute_dtype=cfg.compute_dtype,
+                trace=_tr(),
             )
 
         return jax.vmap(per_class_eq_mv)(td.S, td.P, td.Cvec, alpha,
@@ -396,9 +428,9 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
                 op, td.Cvec[r], alpha0=alpha[r], tol=cfg.tol,
                 max_iters=cfg.max_iters, block=max(cfg.block, 64),
                 sweeps=cfg.sweeps, p=td.P[r],
-                device_budget_bytes=cfg.gram_budget // max(n_cls, 1)))
-        return S.SolveResult(*(jnp.stack([getattr(res, f) for res in results])
-                               for f in S.SolveResult._fields))
+                device_budget_bytes=cfg.gram_budget // max(n_cls, 1),
+                trace=_tr()))
+        return _stack_results(results)
 
     # the (cap, kwidth) cache buffer(s) count against the same BYTE budget
     # as the stacked cluster Grams; bf16 storage fits twice the f32 rows
@@ -413,6 +445,7 @@ def _solve_full(cfg: DCSVMConfig, td: TaskDual, alpha: Array,
             max_iters=cfg.max_iters, block=max(cfg.block, 64), sweeps=cfg.sweeps,
             use_pallas=use_pallas, cache_cap=cache_cap, p=pi,
             compute_dtype=cfg.compute_dtype, Xbase=Xb, base_index=bidx,
+            trace=_tr(),
         )
 
     return jax.vmap(per_class_mv)(td.S, td.P, td.Cvec, alpha)
@@ -464,10 +497,12 @@ def _fit_algorithm1(
         if cfg.adaptive and sv_base is not None and len(sv_base) > kl:
             take = min(cfg.m, len(sv_base))
             sample_idx = rng.choice(sv_base, size=take, replace=False)
-        partition = two_step_kernel_kmeans(
-            cfg.kernel, X, kl, sub, m=cfg.m, iters=cfg.kmeans_iters,
-            sample_idx=sample_idx, balanced=cfg.balanced, use_pallas=use_pallas,
-        )
+        with span(f"divide/level{l}/cluster"):
+            partition = two_step_kernel_kmeans(
+                cfg.kernel, X, kl, sub, m=cfg.m, iters=cfg.kmeans_iters,
+                sample_idx=sample_idx, balanced=cfg.balanced,
+                use_pallas=use_pallas,
+            )
         # expand the base partition to dual coordinates: SVR's mirrored
         # (alpha_i, alpha*_i) pair inherits sample i's cluster
         dpart = partition if nd == n else Partition.build(
@@ -509,12 +544,13 @@ def _fit_algorithm1(
             geqc = jnp.moveaxis(dpart.gather(td.group_ids.T), -1, 1)
             deqc = _split_eq_targets(aeqc, cc, mask, geqc,
                                      jnp.asarray(td.Deq), td.n_groups)
-        ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
-                             use_pallas=use_pallas, aeq=aeqc, geq=geqc,
-                             deq=deqc, n_groups=max(td.n_groups, 1),
-                             Xcb=Xcb, lbc=lbc)
-        alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
-        alpha.block_until_ready()
+        with span(f"divide/level{l}/solve"):
+            ac = _solve_clusters(cfg, Xc, sc, pc, cc, ac, mask,
+                                 use_pallas=use_pallas, aeq=aeqc, geq=geqc,
+                                 deq=deqc, n_groups=max(td.n_groups, 1),
+                                 Xcb=Xcb, lbc=lbc)
+            alpha = dpart.scatter(jnp.moveaxis(ac, 1, -1), nd).T
+            alpha.block_until_ready()
         t_train = time.perf_counter() - t0
 
         sv_idx = np.nonzero(np.any(np.asarray(alpha) > 0, axis=0))[0]
@@ -530,11 +566,13 @@ def _fit_algorithm1(
     # ---- level 0: refine + full solve -----------------------------------
     t0 = time.perf_counter()
     if cfg.refine and sv_idx is not None and 0 < len(sv_idx) < nd:
-        alpha = _solve_subset(cfg, td, alpha, jnp.asarray(sv_idx),
-                              use_pallas=use_pallas)
-    res = _solve_full(cfg, td, alpha, use_pallas=use_pallas)
-    alpha = res.alpha
-    alpha.block_until_ready()
+        with span("conquer/refine"):
+            alpha = _solve_subset(cfg, td, alpha, jnp.asarray(sv_idx),
+                                  use_pallas=use_pallas)
+    with span("conquer/solve"):
+        res = _solve_full(cfg, td, alpha, use_pallas=use_pallas)
+        alpha = res.alpha
+        alpha.block_until_ready()
     sv_base0 = np.unique(
         base_index[np.any(np.asarray(alpha) > 0, axis=0)])
     st = dict(level=0, clusters=1, cluster_time=0.0,
@@ -552,6 +590,11 @@ def _fit_algorithm1(
         v = getattr(res, name, None)
         if v is not None:
             st[name] = int(np.sum(np.asarray(v)))
+    if getattr(res, "trace", None) is not None:
+        # the ONLY device->host trace transfer of the whole fit
+        fetched = trace_fetch(res.trace)
+        st["trace"] = fetched
+        st["trace_summary"] = trace_summary(fetched)
     stats.append(st)
     if callback is not None:
         callback(0, alpha, st)

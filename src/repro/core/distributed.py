@@ -70,6 +70,9 @@ from repro.core.solver import (_solve_small_qp, combination_step_size,
                                proj_grad)
 from repro.core import solver as S
 from repro.core.tasks import Task, TaskDual, resolve_task
+from repro.obs.trace import (ConvTrace, trace_fetch, trace_init,
+                             trace_record, trace_summary)
+from repro.obs.spans import span
 
 Array = jax.Array
 
@@ -168,6 +171,11 @@ class ConquerConfig:
                              # f32 accumulation); None = exact f32 default.
                              # Cached Q-row slices store in this dtype too,
                              # doubling the rows a byte budget holds
+    trace_cap: int = 0       # convergence-trace ring capacity (obs.trace);
+                             # 0 = off (jaxpr identical to the pre-trace
+                             # program); > 0 records one sample per round
+                             # and conquer_step returns a 4th ConvTrace
+                             # element
 
 
 def conquer_step(
@@ -192,6 +200,14 @@ def conquer_step(
     communication rounds and ``pg_max`` is the projected-gradient residual
     recomputed AT the returned alpha (the pre-fix code reported the
     stopping value of the previous iterate).
+
+    With ``cfg.trace_cap > 0`` one convergence sample per communication
+    round — post-update pg_max / objective / free-set size (psum-reduced,
+    so the ring is replicated across devices) plus the CE-PBM combination
+    step γ* — is recorded on device and a 4th ``ConvTrace`` element is
+    returned; fetch it with ``obs.trace.trace_fetch`` AFTER the loop.  The
+    trace adds two scalar psums per round and nothing else; ``trace_cap=0``
+    (the default) builds the identical pre-trace program.
     """
     if cfg.mode not in ("parallel", "replicated"):
         raise ValueError(f"unknown conquer mode {cfg.mode!r} "
@@ -316,7 +332,7 @@ def conquer_step(
             applied = a_new.astype(acc) - ab.astype(acc)
             asel = lax.all_gather(applied, axis).reshape(-1)
             pg = lax.pmax(jnp.max(sc_), axis)
-            return ib, a_new, Xsel, ssel, asel, gidx, pg
+            return ib, a_new, Xsel, ssel, asel, gidx, pg, gamma
 
         def q_rows_local(Xsel, ssel):
             """(P*B, n_l) Q-row slices of the selected block against the
@@ -327,27 +343,60 @@ def conquer_step(
             return ((ssel[:, None] * sl[None, :])
                     * pairwise(Xsel, Xl)).astype(acc)
 
+        tcap = cfg.trace_cap
+
         def cond(state):
             it, pg = state[-2], state[-1]
             return (pg > cfg.tol) & (it < cfg.max_iters)
 
+        def cond_t(state):
+            it, pg = state[-3], state[-2]
+            return (pg > cfg.tol) & (it < cfg.max_iters)
+
+        def record_round(tr, al, g_l, pg, gamma=None, cache_hits=None):
+            """One post-update sample per round; the psum-reduced columns
+            make every device's ring identical, so the caller reads shard 0."""
+            alc = al.astype(acc)
+            obj = lax.psum(0.5 * jnp.vdot(alc, g_l)
+                           + 0.5 * jnp.vdot(pl.astype(acc), alc), axis)
+            nfree = lax.psum(jnp.sum(((al > 0.0) & (al < cl) & vl)
+                                     .astype(jnp.int32)), axis)
+            return trace_record(tr, pg_max=pg, objective=obj, n_free=nfree,
+                                gamma=gamma, cache_hits=cache_hits)
+
         pg0 = lax.pmax(jnp.max(scores_of(al, g_l)), axis)
+        tr = None
 
         if cfg.mode == "parallel" and cache_cap == 0:
-            def body(state):
-                al, g_l, it, _ = state
-                ib, a_new, Xsel, ssel, asel, _, pg = propose(al, g_l)
+            def step(al, g_l):
+                ib, a_new, Xsel, ssel, asel, _, pg, gamma = propose(al, g_l)
                 g_l = g_l + qdelta(Xsel, ssel, ssel * asel)
                 al = al.at[ib].set(a_new)
-                return al, g_l, it + 1, pg
+                return al, g_l, pg, gamma
 
-            state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
-            al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
+            if tcap == 0:
+                def body(state):
+                    al, g_l, it, _ = state
+                    al, g_l, pg, _ = step(al, g_l)
+                    return al, g_l, it + 1, pg
+
+                state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
+                al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
+            else:
+                def body(state):
+                    al, g_l, it, _, tr = state
+                    al, g_l, pg, gamma = step(al, g_l)
+                    tr = record_round(tr, al, g_l, pg, gamma)
+                    return al, g_l, it + 1, pg, tr
+
+                state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0,
+                          trace_init(tcap))
+                al, g_l, rounds, _, tr = lax.while_loop(cond_t, body, state0)
 
         elif cfg.mode == "parallel":
-            def body(state):
-                al, g_l, cache, it, _ = state
-                ib, a_new, Xsel, ssel, asel, gidx, pg = propose(al, g_l)
+            def step(al, g_l, cache):
+                ib, a_new, Xsel, ssel, asel, gidx, pg, gamma = \
+                    propose(al, g_l)
                 slots, hit = colcache.lookup(cache, gidx)
                 served = jnp.all(hit)
                 Qrows = lax.cond(
@@ -359,19 +408,40 @@ def conquer_step(
                                         hit)
                 g_l = g_l + asel @ Qrows
                 al = al.at[ib].set(a_new)
-                return al, g_l, cache, it + 1, pg
+                return al, g_l, cache, pg, gamma
 
             # cached Q-row slices store in the policy dtype: a bf16 policy
             # fits twice the rows of f32 under the same byte budget
             store = (jnp.dtype(compute_dtype) if compute_dtype is not None
                      else acc)
             cache0 = colcache.init(cache_cap, n, dtype=store, width=n_l)
-            state0 = (al, g_l, cache0, jnp.zeros((), jnp.int32), pg0)
-            al, g_l, _, rounds, _ = lax.while_loop(cond, body, state0)
+
+            if tcap == 0:
+                def body(state):
+                    al, g_l, cache, it, _ = state
+                    al, g_l, cache, pg, _ = step(al, g_l, cache)
+                    return al, g_l, cache, it + 1, pg
+
+                state0 = (al, g_l, cache0, jnp.zeros((), jnp.int32), pg0)
+                al, g_l, _, rounds, _ = lax.while_loop(cond, body, state0)
+            else:
+                def body(state):
+                    al, g_l, cache, it, _, tr = state
+                    hits0 = cache.hits
+                    al, g_l, cache, pg, gamma = step(al, g_l, cache)
+                    # per-round local cache-hit delta (identical across
+                    # devices — lookups key on the replicated gidx)
+                    tr = record_round(tr, al, g_l, pg, gamma,
+                                      cache_hits=cache.hits - hits0)
+                    return al, g_l, cache, it + 1, pg, tr
+
+                state0 = (al, g_l, cache0, jnp.zeros((), jnp.int32), pg0,
+                          trace_init(tcap))
+                al, g_l, _, rounds, _, tr = lax.while_loop(cond_t, body,
+                                                           state0)
 
         else:   # replicated: legacy exact global GS-B baseline
-            def body(state):
-                al, g_l, it, _ = state
+            def rep_step(al, g_l):
                 sc_ = scores_of(al, g_l)
                 sb, ib = lax.top_k(sc_, B)              # local candidates
                 cand = dict(sc=sb, x=Xl[ib], g=g_l[ib], a=al[ib], y=sl[ib],
@@ -398,22 +468,50 @@ def conquer_step(
                 al = al.at[safe_idx].add(
                     jnp.where(own, delta, 0.0).astype(dtype))
                 pg = lax.pmax(jnp.max(sc_), axis)
-                return al, g_l, it + 1, pg
+                return al, g_l, pg
 
-            state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
-            al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
+            if tcap == 0:
+                def body(state):
+                    al, g_l, it, _ = state
+                    al, g_l, pg = rep_step(al, g_l)
+                    return al, g_l, it + 1, pg
+
+                state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0)
+                al, g_l, rounds, _ = lax.while_loop(cond, body, state0)
+            else:
+                def body(state):
+                    al, g_l, it, _, tr = state
+                    al, g_l, pg = rep_step(al, g_l)
+                    # no combination step in the replicated baseline:
+                    # the gamma column stays NaN
+                    tr = record_round(tr, al, g_l, pg)
+                    return al, g_l, it + 1, pg, tr
+
+                state0 = (al, g_l, jnp.zeros((), jnp.int32), pg0,
+                          trace_init(tcap))
+                al, g_l, rounds, _, tr = lax.while_loop(cond_t, body, state0)
 
         # residual at the RETURNED alpha, not the pre-update stopping value
         pg_exit = lax.pmax(jnp.max(scores_of(al, g_l)), axis)
-        return al, rounds[None], pg_exit[None]
+        if tcap == 0:
+            return al, rounds[None], pg_exit[None]
+        # the ring is replicated (psum/pmax-reduced columns): ship every
+        # device's copy out and let the caller read shard 0
+        return al, rounds[None], pg_exit[None], tr.buf[None], tr.count[None]
 
     spec = P(axis)
+    traced = cfg.trace_cap > 0
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(spec,) * 6,
-        out_specs=(spec, P(axis), P(axis)),
+        out_specs=(spec, P(axis), P(axis)) + ((P(axis), P(axis)) if traced
+                                              else ()),
     )
-    alpha, rounds, pg = fn(X, s, alpha0, pvec, cvec, vvec)
+    out = fn(X, s, alpha0, pvec, cvec, vvec)
+    alpha, rounds, pg = out[:3]
+    if traced:
+        return (alpha[:n0], rounds[0], jnp.max(pg),
+                ConvTrace(buf=out[3][0], count=out[4][0]))
     return alpha[:n0], rounds[0], jnp.max(pg)
 
 
@@ -496,10 +594,12 @@ def fit_distributed(
         sample_idx = None
         if cfg.adaptive and sv_base is not None:
             sample_idx = _sv_sample(ksamp, sv_base > 0, min(cfg.m, n))
-        part = two_step_kernel_kmeans(cfg.kernel, X, kl, sub, m=cfg.m,
-                                      iters=cfg.kmeans_iters,
-                                      sample_idx=sample_idx,
-                                      balanced=True, use_pallas=use_pallas)
+        with span(f"divide/level{l}/cluster"):
+            part = two_step_kernel_kmeans(cfg.kernel, X, kl, sub, m=cfg.m,
+                                          iters=cfg.kmeans_iters,
+                                          sample_idx=sample_idx,
+                                          balanced=True,
+                                          use_pallas=use_pallas)
         # expand the base partition to dual coordinates (SVR's mirrored
         # pair of a sample shares its cluster)
         dpart = part if nd == n else Partition.build(
@@ -507,26 +607,36 @@ def fit_distributed(
             part.model)
         mask = jnp.asarray(dpart.mask)
         ac = jnp.where(mask, dpart.gather(alpha), 0.0)
-        ac = divide_step(mesh, axis, cfg, dpart.gather(td.Xd),
-                         dpart.gather(s1), dpart.gather(p1),
-                         dpart.gather(c1), ac, mask)
-        alpha = dpart.scatter(ac, nd)
+        with span(f"divide/level{l}/solve"):
+            ac = divide_step(mesh, axis, cfg, dpart.gather(td.Xd),
+                             dpart.gather(s1), dpart.gather(p1),
+                             dpart.gather(c1), ac, mask)
+            alpha = dpart.scatter(ac, nd)
         # device-resident SV tracking: dual mass scatter-added per base
         # point (the box family keeps alpha >= 0, so mass > 0 <=> any SV)
         sv_base = jnp.zeros(n, X.dtype).at[bidx].add(alpha)
         stats.append(dict(level=l, clusters=kl,
                           n_sv=jnp.sum(sv_base > 0)))
 
+    trace_cap = getattr(cfg, "trace", None) or 0
     ccfg = ConquerConfig(kernel=cfg.kernel, C=cfg.C, tol=cfg.tol,
                          max_iters=conquer_iters, block=conquer_block,
                          sweeps=cfg.sweeps, mode=mode,
                          use_pallas=cfg.use_pallas, cache_cap=cache_cap,
-                         compute_dtype=getattr(cfg, "compute_dtype", None))
-    alpha, rounds, pg = conquer_step(mesh, axis, ccfg, td.Xd, s1, alpha,
-                                     p=p1, c=c1)
+                         compute_dtype=getattr(cfg, "compute_dtype", None),
+                         trace_cap=trace_cap)
+    with span("conquer/distributed"):
+        out = conquer_step(mesh, axis, ccfg, td.Xd, s1, alpha, p=p1, c=c1)
+        alpha, rounds, pg = out[:3]
     sv_base = jnp.zeros(n, X.dtype).at[bidx].add(alpha)
-    stats.append(dict(level=0, rounds=rounds, pg_max=pg,
-                      n_sv=jnp.sum(sv_base > 0)))
+    st0 = dict(level=0, rounds=rounds, pg_max=pg,
+               n_sv=jnp.sum(sv_base > 0))
+    if trace_cap > 0:
+        # the single sanctioned device->host fetch of the round trace,
+        # alongside the exit-time counter sync below
+        st0["trace"] = trace_fetch(out[3])
+        st0["trace_summary"] = trace_summary(st0["trace"])
+    stats.append(st0)
     return alpha, _finalize_stats(stats)
 
 

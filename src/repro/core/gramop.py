@@ -291,6 +291,7 @@ def solve_box_qp_spill(
     p=-1.0,
     device_budget_bytes: Optional[int] = None,
     max_rounds: int = 512,
+    trace=None,
 ):
     """Out-of-core block CD for the box dual: Gram bounded by HOST memory.
 
@@ -310,8 +311,18 @@ def solve_box_qp_spill(
     computed, ``cache_evictions`` = device panels dropped, ``spills`` =
     panels written to the host tier, ``spill_hits`` = panels re-loaded from
     it.
+
+    ``trace`` (an ``obs.trace.ConvTrace``) records one sample per OUTER
+    round at the fresh-gradient refresh — pg_max, objective, free-set size
+    and the round's device-panel-hit delta.  Unlike the in-memory solvers
+    this loop already host-syncs each round on ``pg`` by design, so the
+    samples are recorded host-side at the same sync point; ``None`` is a
+    strict no-op.
     """
-    from repro.core.solver import SolveResult, _broadcast, proj_grad
+    from repro.core.solver import (SolveResult, _broadcast, _n_free,
+                                   objective, proj_grad)
+    from repro.obs.spans import span
+    from repro.obs.trace import trace_record
 
     X = op.Xd
     n = op.n_dual
@@ -352,16 +363,17 @@ def solve_box_qp_spill(
             dev.move_to_end(pid)
             hits += 1
             return dev[pid]
-        if pid in host:
-            tile = jax.device_put(host[pid])
-            spill_hits += 1
-        else:
-            idxp = jnp.clip(starts[pid] + jnp.arange(rows_p), 0, nb - 1)
-            pts = op.Xb if op.dedup else op.Xd
-            tile = op.kmat(pts[idxp], pts).astype(store)
-            host[pid] = np.asarray(tile)      # write-through host spill
-            spills += 1
-            misses += 1
+        with span("spill/fetch_panel"):
+            if pid in host:
+                tile = jax.device_put(host[pid])
+                spill_hits += 1
+            else:
+                idxp = jnp.clip(starts[pid] + jnp.arange(rows_p), 0, nb - 1)
+                pts = op.Xb if op.dedup else op.Xd
+                tile = op.kmat(pts[idxp], pts).astype(store)
+                host[pid] = np.asarray(tile)      # write-through host spill
+                spills += 1
+                misses += 1
         dev[pid] = tile
         evict_to(cap_panels)
         return tile
@@ -369,6 +381,7 @@ def solve_box_qp_spill(
     it_total = 0
     pg = float(jnp.max(jnp.abs(proj_grad(alpha, g, cvec))))
     rounds = 0
+    hits_mark = 0
     while pg > tol and it_total < max_iters and rounds < max_rounds:
         for pid in range(len(starts)):
             tile = fetch(pid)
@@ -379,10 +392,11 @@ def solve_box_qp_spill(
                 dev[nxt] = jax.device_put(host[nxt])
                 spill_hits += 1
                 evict_to(cap_panels + 1)
-            alpha, g, its = _panel_block_cd(
-                op, tile, jnp.int32(starts[pid]), alpha, g, cvec, tol,
-                block=block, sweeps=sweeps, inner=inner, rows_p=rows_p)
-            it_total += int(its)
+            with span("spill/panel_solve"):
+                alpha, g, its = _panel_block_cd(
+                    op, tile, jnp.int32(starts[pid]), alpha, g, cvec, tol,
+                    block=block, sweeps=sweeps, inner=inner, rows_p=rows_p)
+                it_total += int(its)
             if it_total >= max_iters:
                 break
         # refresh from scratch: panel sweeps keep the gradient exact in
@@ -390,9 +404,17 @@ def solve_box_qp_spill(
         g = fresh_grad(alpha)
         pg = float(jnp.max(jnp.abs(proj_grad(alpha, g, cvec))))
         rounds += 1
+        if trace is not None:
+            # this loop host-syncs on pg every round anyway; the sample
+            # rides the same sync point (panel units for the hit delta)
+            trace = trace_record(trace, pg_max=pg,
+                                 objective=objective(alpha, g, pvec),
+                                 n_free=_n_free(alpha, cvec),
+                                 cache_hits=hits - hits_mark)
+            hits_mark = hits
 
     i32 = lambda v: jnp.asarray(v, jnp.int32)
     return SolveResult(alpha, g, i32(it_total), jnp.asarray(pg, acc),
                        cache_hits=i32(hits), cache_misses=i32(misses),
                        cache_evictions=i32(evictions), spills=i32(spills),
-                       spill_hits=i32(spill_hits))
+                       spill_hits=i32(spill_hits), trace=trace)

@@ -73,6 +73,7 @@ from jax import lax
 
 from repro.core import colcache, gramop
 from repro.core.kernels import Kernel
+from repro.obs.trace import ConvTrace, trace_record
 
 Array = jax.Array
 
@@ -93,6 +94,7 @@ class SolveResult(NamedTuple):
     cache_evictions: Optional[Array] = None  # live rows/panels displaced (LRU)
     spills: Optional[Array] = None        # panels written to the host tier
     spill_hits: Optional[Array] = None    # panels re-loaded from the host tier
+    trace: Optional[ConvTrace] = None     # convergence ring buffer (obs.trace)
 
 
 def objective(alpha: Array, grad: Array, p=-1.0) -> Array:
@@ -106,6 +108,14 @@ def objective(alpha: Array, grad: Array, p=-1.0) -> Array:
     """
     pu = jnp.sum(jnp.asarray(p, alpha.dtype) * alpha)
     return 0.5 * jnp.vdot(alpha, grad) + 0.5 * pu
+
+
+def _n_free(alpha: Array, cvec: Array, mask: Optional[Array] = None) -> Array:
+    """Free-set size (strictly interior coordinates) for trace recording."""
+    free = (alpha > 0.0) & (alpha < cvec)
+    if mask is not None:
+        free &= mask
+    return jnp.sum(free.astype(jnp.int32))
 
 
 def proj_grad(alpha: Array, grad: Array, C) -> Array:
@@ -162,6 +172,7 @@ def solve_box_qp(
     max_iters: int = 10_000,
     active_mask: Optional[Array] = None,
     p=-1.0,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Greedy coordinate descent on a dense Q. vmap over leading dims is fine.
 
@@ -170,6 +181,10 @@ def solve_box_qp(
     ``active_mask`` freezes coordinates (shrinking): masked-out coordinates
     are never selected (their pg is treated as 0 for selection AND stopping,
     matching LIBSVM's shrunk working set).
+
+    ``trace`` (static gate, ``None`` = identical pre-trace jaxpr) records one
+    (pg_max, objective, n_free) sample per iteration into the ring buffer,
+    evaluated at the pre-update iterate like the stopping value.
     """
     n = Q.shape[0]
     diag = jnp.maximum(jnp.diagonal(Q), 1e-12)
@@ -179,25 +194,46 @@ def solve_box_qp(
     g = Q @ alpha + pvec
     mask = jnp.ones(n, bool) if active_mask is None else active_mask
 
-    def cond(state):
-        _, _, it, pg_max = state
-        return (pg_max > tol) & (it < max_iters)
-
-    def body(state):
-        alpha, g, it, _ = state
+    def step(alpha, g):
         pg = jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)
         i = jnp.argmax(jnp.abs(pg))
         new_ai = jnp.clip(alpha[i] - g[i] / diag[i], 0.0, cvec[i])
         delta = new_ai - alpha[i]
-        alpha = alpha.at[i].set(new_ai)
-        g = g + delta * Q[:, i]
         # stopping value computed from the *pre-update* pg (cheap, standard)
-        return alpha, g, it + 1, jnp.max(jnp.abs(pg))
+        return alpha.at[i].set(new_ai), g + delta * Q[:, i], jnp.max(jnp.abs(pg))
 
     # one priming evaluation so the loop can exit immediately at the optimum
     pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)))
-    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
-    return SolveResult(alpha, g, iters, pg_max)
+
+    if trace is None:
+        def cond(state):
+            _, _, it, pg_max = state
+            return (pg_max > tol) & (it < max_iters)
+
+        def body(state):
+            alpha, g, it, _ = state
+            alpha, g, pg_max = step(alpha, g)
+            return alpha, g, it + 1, pg_max
+
+        alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+        return SolveResult(alpha, g, iters, pg_max)
+
+    def cond_t(state):
+        _, _, it, pg_max, _ = state
+        return (pg_max > tol) & (it < max_iters)
+
+    def body_t(state):
+        alpha, g, it, _, tr = state
+        tr = trace_record(tr, pg_max=jnp.max(jnp.abs(jnp.where(
+                              mask, proj_grad(alpha, g, cvec), 0.0))),
+                          objective=objective(alpha, g, pvec),
+                          n_free=_n_free(alpha, cvec, mask))
+        alpha, g, pg_max = step(alpha, g)
+        return alpha, g, it + 1, pg_max, tr
+
+    alpha, g, iters, pg_max, tr = lax.while_loop(
+        cond_t, body_t, (alpha, g, 0, pg0, trace))
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)
 
 
 # ---------------------------------------------------------------------------
@@ -236,26 +272,24 @@ def solve_box_qp_block(
     sweeps: int = 4,
     active_mask: Optional[Array] = None,
     p=-1.0,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Top-B greedy block CD: each outer iteration moves B coordinates.
 
     Selection by |projected gradient| (Gauss-Southwell-B). The rank-B gradient
     update `g += Q[:, idx] @ delta` is a skinny matmul — the MXU-friendly
     reshaping of the paper's one-at-a-time CD.  ``C``/``p`` may be
-    per-coordinate vectors (generalized dual).
+    per-coordinate vectors (generalized dual).  ``trace`` records one sample
+    per outer (rank-B) iteration; ``None`` keeps the pre-trace jaxpr.
     """
     n = Q.shape[0]
     alpha = jnp.zeros(n, Q.dtype) if alpha0 is None else alpha0
     cvec = _broadcast(C, n, Q.dtype)
-    g = Q @ alpha + _broadcast(p, n, Q.dtype)
+    pvec = _broadcast(p, n, Q.dtype)
+    g = Q @ alpha + pvec
     mask = jnp.ones(n, bool) if active_mask is None else active_mask
 
-    def cond(state):
-        _, _, it, pg_max = state
-        return (pg_max > tol) & (it < max_iters)
-
-    def body(state):
-        alpha, g, it, _ = state
+    def step(alpha, g):
         pg = jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)
         scores = jnp.abs(pg)
         _, idx = lax.top_k(scores, block)
@@ -263,13 +297,39 @@ def solve_box_qp_block(
         ab, gb = alpha[idx], g[idx]
         new_ab = _solve_small_qp(Qbb, gb, ab, cvec[idx], sweeps)
         delta = new_ab - ab
-        alpha = alpha.at[idx].set(new_ab)
-        g = g + Q[:, idx] @ delta
-        return alpha, g, it + 1, jnp.max(scores)
+        return alpha.at[idx].set(new_ab), g + Q[:, idx] @ delta, jnp.max(scores)
 
     pg0 = jnp.max(jnp.abs(jnp.where(mask, proj_grad(alpha, g, cvec), 0.0)))
-    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
-    return SolveResult(alpha, g, iters, pg_max)
+
+    if trace is None:
+        def cond(state):
+            _, _, it, pg_max = state
+            return (pg_max > tol) & (it < max_iters)
+
+        def body(state):
+            alpha, g, it, _ = state
+            alpha, g, pg_max = step(alpha, g)
+            return alpha, g, it + 1, pg_max
+
+        alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+        return SolveResult(alpha, g, iters, pg_max)
+
+    def cond_t(state):
+        _, _, it, pg_max, _ = state
+        return (pg_max > tol) & (it < max_iters)
+
+    def body_t(state):
+        alpha, g, it, _, tr = state
+        tr = trace_record(tr, pg_max=jnp.max(jnp.abs(jnp.where(
+                              mask, proj_grad(alpha, g, cvec), 0.0))),
+                          objective=objective(alpha, g, pvec),
+                          n_free=_n_free(alpha, cvec, mask))
+        alpha, g, pg_max = step(alpha, g)
+        return alpha, g, it + 1, pg_max, tr
+
+    alpha, g, iters, pg_max, tr = lax.while_loop(
+        cond_t, body_t, (alpha, g, 0, pg0, trace))
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +356,7 @@ def solve_box_qp_matvec(
     compute_dtype: Optional[str] = None,
     Xbase: Optional[Array] = None,
     base_index: Optional[Array] = None,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Block greedy CD where Q columns are recomputed from (X, y) per step.
 
@@ -329,7 +390,7 @@ def solve_box_qp_matvec(
                              compute_dtype=compute_dtype)
     return solve_box_qp_op(op, C, alpha0=alpha0, tol=tol, max_iters=max_iters,
                            block=block, sweeps=sweeps, grad_chunks=grad_chunks,
-                           cache_cap=cache_cap, p=p)
+                           cache_cap=cache_cap, p=p, trace=trace)
 
 
 def solve_box_qp_op(
@@ -343,14 +404,22 @@ def solve_box_qp_op(
     grad_chunks: int = 16,
     cache_cap: int = 0,
     p=-1.0,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """The engine behind ``solve_box_qp_matvec``: block greedy CD against a
     ``GramOperator``.  Call inside jit (the operator's kernel / backend /
-    precision fields are pytree aux data, hence trace-static)."""
+    precision fields are pytree aux data, hence trace-static).
+
+    ``trace`` (static ``None`` gate) records one sample per outer iteration
+    — on the cached path additionally the per-iteration cache-hit delta —
+    entirely on device; nothing is fetched until the caller reads the
+    returned ``SolveResult.trace``.
+    """
     X = op.Xd
     n = op.n_dual
     alpha = jnp.zeros(n, X.dtype) if alpha0 is None else alpha0
     cvec = _broadcast(C, n, X.dtype)
+    pvec = _broadcast(p, n, X.dtype)
 
     # accumulation dtype: at least f32 (Pallas kernels accumulate in f32),
     # f64 preserved when x64 is enabled
@@ -358,8 +427,7 @@ def solve_box_qp_op(
 
     # initial gradient g = Q @ alpha + p: streaming Pallas matvec on the
     # fused path, chunked lax.map otherwise
-    g = (op.matvec(alpha, num_chunks=grad_chunks)
-         + _broadcast(p, n, X.dtype)).astype(acc)
+    g = (op.matvec(alpha, num_chunks=grad_chunks) + pvec).astype(acc)
 
     def select(alpha, g):
         pg = proj_grad(alpha, g, cvec)
@@ -372,11 +440,17 @@ def solve_box_qp_op(
         new_ab = _solve_small_qp(Qbb, gb, ab, cvec[idx], sweeps)
         return new_ab, new_ab - ab
 
+    def record(tr, alpha, g, pg_max, cache_hits=None):
+        # pre-update sample, matching the stopping value's iterate
+        return trace_record(tr, pg_max=pg_max,
+                            objective=objective(alpha, g, pvec),
+                            n_free=_n_free(alpha, cvec),
+                            cache_hits=cache_hits)
+
     if cache_cap > 0:
         cap = max(cache_cap, block)  # must hold at least one full block
 
-        def body(state):
-            alpha, g, cache, it, _ = state
+        def cache_step(alpha, g, cache):
             idx, pg_max = select(alpha, g)
             keys = op.cache_keys(idx)
             slots, hit = colcache.lookup(cache, keys)
@@ -389,51 +463,88 @@ def solve_box_qp_op(
             cache = colcache.update(cache, keys, kr, served, slots, hit)
             Qrows = op.expand_rows(kr, idx)
             new_ab, delta = solve_block(Qrows[:, idx], alpha, g, idx)
-            alpha = alpha.at[idx].set(new_ab)
-            g = g + delta @ Qrows
-            return alpha, g, cache, it + 1, pg_max
-
-        def cond(state):
-            _, _, _, it, pg_max = state
-            return (pg_max > tol) & (it < max_iters)
+            return alpha.at[idx].set(new_ab), g + delta @ Qrows, cache, pg_max
 
         pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, cvec)))
         cache0 = colcache.init(cap, op.kwidth, dtype=op.storage_dtype(acc),
                                width=op.kwidth)
-        alpha, g, cache, iters, pg_max = lax.while_loop(
-            cond, body, (alpha, g, cache0, 0, pg0))
+
+        if trace is None:
+            def body(state):
+                alpha, g, cache, it, _ = state
+                alpha, g, cache, pg_max = cache_step(alpha, g, cache)
+                return alpha, g, cache, it + 1, pg_max
+
+            def cond(state):
+                _, _, _, it, pg_max = state
+                return (pg_max > tol) & (it < max_iters)
+
+            alpha, g, cache, iters, pg_max = lax.while_loop(
+                cond, body, (alpha, g, cache0, 0, pg0))
+            return SolveResult(alpha, g, iters, pg_max, cache.hits,
+                               cache.misses, cache_evictions=cache.evictions)
+
+        def body_t(state):
+            alpha, g, cache, it, _, tr = state
+            hits0 = cache.hits
+            alpha2, g2, cache, pg_max = cache_step(alpha, g, cache)
+            tr = record(tr, alpha, g, pg_max, cache_hits=cache.hits - hits0)
+            return alpha2, g2, cache, it + 1, pg_max, tr
+
+        def cond_t(state):
+            _, _, _, it, pg_max, _ = state
+            return (pg_max > tol) & (it < max_iters)
+
+        alpha, g, cache, iters, pg_max, tr = lax.while_loop(
+            cond_t, body_t, (alpha, g, cache0, 0, pg0, trace))
         return SolveResult(alpha, g, iters, pg_max, cache.hits, cache.misses,
-                           cache_evictions=cache.evictions)
+                           cache_evictions=cache.evictions, trace=tr)
 
     if op.use_pallas:
-        def body(state):
-            alpha, g, it, _ = state
+        def step(alpha, g):
             idx, pg_max = select(alpha, g)
             # fused: dg = s * (K(X, Xb) @ (sb * delta)); the (n, B) block
             # never leaves VMEM — only the (B, B) working-set block is formed
             Qbb = op.qbb(idx).astype(acc)
             new_ab, delta = solve_block(Qbb, alpha, g, idx)
-            alpha = alpha.at[idx].set(new_ab)
-            g = op.col_update(g, idx, delta)
-            return alpha, g, it + 1, pg_max
+            return alpha.at[idx].set(new_ab), op.col_update(g, idx, delta), \
+                pg_max
     else:
-        def body(state):
-            alpha, g, it, _ = state
+        def step(alpha, g):
             idx, pg_max = select(alpha, g)
             Qb = op.q_block(idx).astype(acc)         # (n, B) on the fly
             Qbb = Qb[idx]                            # slice, don't recompute
             new_ab, delta = solve_block(Qbb, alpha, g, idx)
-            alpha = alpha.at[idx].set(new_ab)
-            g = g + Qb @ delta
-            return alpha, g, it + 1, pg_max
-
-    def cond(state):
-        _, _, it, pg_max = state
-        return (pg_max > tol) & (it < max_iters)
+            return alpha.at[idx].set(new_ab), g + Qb @ delta, pg_max
 
     pg0 = jnp.max(jnp.abs(proj_grad(alpha, g, cvec)))
-    alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
-    return SolveResult(alpha, g, iters, pg_max)
+
+    if trace is None:
+        def body(state):
+            alpha, g, it, _ = state
+            alpha, g, pg_max = step(alpha, g)
+            return alpha, g, it + 1, pg_max
+
+        def cond(state):
+            _, _, it, pg_max = state
+            return (pg_max > tol) & (it < max_iters)
+
+        alpha, g, iters, pg_max = lax.while_loop(cond, body, (alpha, g, 0, pg0))
+        return SolveResult(alpha, g, iters, pg_max)
+
+    def body_t(state):
+        alpha, g, it, _, tr = state
+        alpha2, g2, pg_max = step(alpha, g)
+        tr = record(tr, alpha, g, pg_max)
+        return alpha2, g2, it + 1, pg_max, tr
+
+    def cond_t(state):
+        _, _, it, pg_max, _ = state
+        return (pg_max > tol) & (it < max_iters)
+
+    alpha, g, iters, pg_max, tr = lax.while_loop(
+        cond_t, body_t, (alpha, g, 0, pg0, trace))
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)
 
 
 # ---------------------------------------------------------------------------
@@ -450,6 +561,7 @@ def solve_with_shrinking(
     shrink_margin: float = 10.0,
     block: int = 0,
     p=-1.0,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Outer shrinking rounds around the CD solver.
 
@@ -474,18 +586,20 @@ def solve_with_shrinking(
     # iteration counts accumulate on device; converting per round would force
     # a host sync between rounds and serialize dispatch
     total_iters = jnp.zeros((), jnp.int32)
+    tr = trace  # one ring threaded through every round (None stays None)
     for r in range(rounds):
         final = r == rounds - 1
         m = jnp.ones(n, bool) if final else mask
         res = solver(Q, C, alpha0=alpha, tol=tol, max_iters=max_iters,
-                     active_mask=m, p=p)
+                     active_mask=m, p=p, trace=tr)
+        tr = res.trace
         alpha, g = res.alpha, res.grad
         total_iters = total_iters + res.iters
         strongly_lo = (alpha <= 0.0) & (g > shrink_margin * tol)
         strongly_hi = (alpha >= cvec) & (g < -shrink_margin * tol)
         mask = ~(strongly_lo | strongly_hi)
     pg_full = kkt_residual(Q, res.alpha, cvec, p=p)
-    return SolveResult(res.alpha, res.grad, total_iters, pg_full)
+    return SolveResult(res.alpha, res.grad, total_iters, pg_full, trace=tr)
 
 
 # ---------------------------------------------------------------------------
@@ -745,7 +859,8 @@ def _restore_equality_grouped(alpha, grad, Q_col, cvec, avec, dvec, gid,
 
 
 def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
-                       rank2_fn, full_grad, tol, max_iters, refresh_every):
+                       rank2_fn, full_grad, tol, max_iters, refresh_every,
+                       trace=None, pvec=None):
     """Shared pairwise maximal-violating-pair engine (dense and matvec
     front-ends differ only in how Q entries and the rank-2 gradient update
     are produced).
@@ -765,6 +880,11 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
     the group with the widest multiplier-bracket violation, so every
     group's constraint is preserved exactly and the stopping test is the
     max gap over groups.
+
+    ``trace`` (static ``None`` gate) records one (pg_max=violation,
+    objective, n_free) sample per pair step; when enabled the loop returns
+    a 5-tuple with the trace appended.  ``pvec`` supplies the linear term
+    for the objective column and is only required when tracing.
     """
     safe = _safe_a(avec)
     ingrp = gid[None, :] == jnp.arange(n_groups)[:, None]      # (G, n)
@@ -781,12 +901,7 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
         gs = jnp.argmax(gaps)
         return ig[gs], jg[gs], gaps[gs]
 
-    def inner_cond(state):
-        _, _, _, k, viol = state
-        return (viol > tol) & (k < refresh_every)
-
-    def inner_body(state):
-        alpha, g, it, k, _ = state
+    def pair_step(alpha, g):
         i, j, viol = select(alpha, g)
         # ``safe`` (a with 0 -> 1), not raw a: if the violating sets collapse
         # to one side mid-block, argmin/argmax over an all-inf side return an
@@ -803,7 +918,16 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
         new_ai, di, new_aj, dj = _pair_step(alpha, cvec, safe, i, j, t)
         alpha = alpha.at[i].set(new_ai).at[j].set(new_aj)
         g = rank2_fn(g, i, j, di, dj)
-        return alpha, g, it + 1, k + 1, jnp.maximum(viol, 0.0)
+        return alpha, g, jnp.maximum(viol, 0.0)
+
+    def inner_cond(state):
+        _, _, _, k, viol = state
+        return (viol > tol) & (k < refresh_every)
+
+    def inner_body(state):
+        alpha, g, it, k, _ = state
+        alpha, g, viol = pair_step(alpha, g)
+        return alpha, g, it + 1, k + 1, viol
 
     def outer_cond(state):
         _, _, it, viol = state
@@ -821,8 +945,32 @@ def _pairwise_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, qdiag, qij_fn,
 
     g = full_grad(alpha)
     _, _, viol0 = select(alpha, g)
-    return lax.while_loop(outer_cond, outer_body,
-                          (alpha, g, 0, jnp.maximum(viol0, 0.0)))
+
+    if trace is None:
+        return lax.while_loop(outer_cond, outer_body,
+                              (alpha, g, 0, jnp.maximum(viol0, 0.0)))
+
+    def inner_body_t(state):
+        alpha, g, it, k, _, tr = state
+        alpha2, g2, viol = pair_step(alpha, g)
+        tr = trace_record(tr, pg_max=viol,
+                          objective=objective(alpha, g, pvec),
+                          n_free=_n_free(alpha, cvec, mask))
+        return alpha2, g2, it + 1, k + 1, viol, tr
+
+    def outer_body_t(state):
+        alpha, g, it, viol, tr = state
+        block = jnp.minimum(refresh_every, max_iters - it)
+        alpha, g, it, _, _, tr = lax.while_loop(
+            lambda st: (st[4] > tol) & (st[3] < block),
+            inner_body_t, (alpha, g, it, 0, viol, tr))
+        g = full_grad(alpha)
+        _, _, viol = select(alpha, g)
+        return alpha, g, it, jnp.maximum(viol, 0.0), tr
+
+    return lax.while_loop(
+        lambda st: (st[3] > tol) & (st[2] < max_iters), outer_body_t,
+        (alpha, g, 0, jnp.maximum(viol0, 0.0), trace))
 
 
 @partial(jax.jit, static_argnames=("max_iters", "refresh_every", "n_groups"))
@@ -839,6 +987,7 @@ def solve_eq_qp(
     refresh_every: int = 256,
     gid=None,
     n_groups: int = 1,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Pairwise maximal-violating-pair CD on a dense Q; every iterate stays
     on the hyperplane(s) a'u = d.  vmap over leading dims is fine.
@@ -869,16 +1018,19 @@ def solve_eq_qp(
     alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
                                           n_groups, mask)
 
-    alpha, g, iters, pg_max = _pairwise_mvp_loop(
+    out = _pairwise_mvp_loop(
         alpha, cvec, avec, mask, gidv, n_groups,
         qdiag=jnp.diagonal(Q),
         qij_fn=lambda i, j: Q[i, j],
         rank2_fn=lambda g, i, j, di, dj: g + di * Q[:, i] + dj * Q[:, j],
         full_grad=lambda al: Q @ al + pvec,
-        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+        tol=tol, max_iters=max_iters, refresh_every=refresh_every,
+        trace=trace, pvec=pvec)
+    alpha, g, iters, pg_max = out[:4]
+    tr = out[4] if trace is not None else None
     alpha, g = _restore_equality_grouped(alpha, g, lambda k: Q[:, k], cvec,
                                          avec, dvec, gidv, n_groups, mask)
-    return SolveResult(alpha, g, iters, pg_max)
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)
 
 
 # ---------------------------------------------------------------------------
@@ -945,7 +1097,7 @@ def _solve_small_eq_qp(Qbb: Array, gb: Array, ub: Array, ab: Array, cb: Array,
 
 def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
                       qbb_fn, rank2b_fn, full_grad, tol, max_iters,
-                      refresh_every):
+                      refresh_every, trace=None, pvec=None):
     """Shared rank-2B blocked engine (dense and matvec front-ends differ
     only in how the sub-block of Q and the rank-2B gradient update are
     produced).
@@ -967,7 +1119,8 @@ def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
     ``refresh_every`` rank-2B iterations on the maintained gradient, then
     an unconditional from-scratch recompute and a stopping test on the
     fresh gradient (vmap-safe, drift-bounded).  ``iters`` counts outer
-    blocked iterations.
+    blocked iterations.  ``trace``/``pvec`` as in ``_pairwise_mvp_loop``
+    (one sample per rank-2B iteration; 5-tuple return when enabled).
     """
     n = alpha.shape[0]
     safe = _safe_a(avec)
@@ -1002,12 +1155,7 @@ def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
                                 axis=1).reshape(-1)
         return idx, valid, viol
 
-    def inner_cond(state):
-        _, _, _, k, viol = state
-        return (viol > tol) & (k < refresh_every)
-
-    def inner_body(state):
-        alpha, g, it, k, _ = state
+    def block_step(alpha, g):
         idx, valid, viol = select(alpha, g)
         ub, gb = alpha[idx], g[idx]
         new_ub = _solve_small_eq_qp(qbb_fn(idx), gb, ub, avec[idx], cvec[idx],
@@ -1020,7 +1168,16 @@ def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
             jnp.where(valid, new_ub, new_ub[s0]))
         delta = jnp.where(valid, new_ub - ub, 0.0)
         g = rank2b_fn(g, idx, delta)
-        return alpha, g, it + 1, k + 1, jnp.maximum(viol, 0.0)
+        return alpha, g, jnp.maximum(viol, 0.0)
+
+    def inner_cond(state):
+        _, _, _, k, viol = state
+        return (viol > tol) & (k < refresh_every)
+
+    def inner_body(state):
+        alpha, g, it, k, _ = state
+        alpha, g, viol = block_step(alpha, g)
+        return alpha, g, it + 1, k + 1, viol
 
     def outer_cond(state):
         _, _, it, viol = state
@@ -1037,7 +1194,30 @@ def _blocked_mvp_loop(alpha, cvec, avec, mask, gid, n_groups, block, sweeps,
 
     g = full_grad(alpha)
     viol0 = jnp.maximum(gap(*sides(alpha, g)), 0.0)
-    return lax.while_loop(outer_cond, outer_body, (alpha, g, 0, viol0))
+
+    if trace is None:
+        return lax.while_loop(outer_cond, outer_body, (alpha, g, 0, viol0))
+
+    def inner_body_t(state):
+        alpha, g, it, k, _, tr = state
+        alpha2, g2, viol = block_step(alpha, g)
+        tr = trace_record(tr, pg_max=viol,
+                          objective=objective(alpha, g, pvec),
+                          n_free=_n_free(alpha, cvec, mask))
+        return alpha2, g2, it + 1, k + 1, viol, tr
+
+    def outer_body_t(state):
+        alpha, g, it, viol, tr = state
+        blk = jnp.minimum(refresh_every, max_iters - it)
+        alpha, g, it, _, _, tr = lax.while_loop(
+            lambda st: (st[4] > tol) & (st[3] < blk), inner_body_t,
+            (alpha, g, it, 0, viol, tr))
+        g = full_grad(alpha)
+        return alpha, g, it, jnp.maximum(gap(*sides(alpha, g)), 0.0), tr
+
+    return lax.while_loop(
+        lambda st: (st[3] > tol) & (st[2] < max_iters), outer_body_t,
+        (alpha, g, 0, viol0, trace))
 
 
 @partial(jax.jit, static_argnames=("block", "sweeps", "max_iters",
@@ -1057,6 +1237,7 @@ def solve_eq_qp_block(
     refresh_every: int = 32,
     gid=None,
     n_groups: int = 1,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Rank-2B blocked pairwise CD on a dense Q: each outer iteration
     selects the ``block`` maximal-violating pairs per group from the KKT
@@ -1086,15 +1267,18 @@ def solve_eq_qp_block(
     alpha = _project_box_equality_grouped(alpha, cvec, avec, dvec, gidv,
                                           n_groups, mask)
 
-    alpha, g, iters, pg_max = _blocked_mvp_loop(
+    out = _blocked_mvp_loop(
         alpha, cvec, avec, mask, gidv, n_groups, B, sweeps,
         qbb_fn=lambda idx: Q[idx][:, idx],
         rank2b_fn=lambda g, idx, delta: g + Q[:, idx] @ delta,
         full_grad=lambda al: Q @ al + pvec,
-        tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+        tol=tol, max_iters=max_iters, refresh_every=refresh_every,
+        trace=trace, pvec=pvec)
+    alpha, g, iters, pg_max = out[:4]
+    tr = out[4] if trace is not None else None
     alpha, g = _restore_equality_grouped(alpha, g, lambda k: Q[:, k], cvec,
                                          avec, dvec, gidv, n_groups, mask)
-    return SolveResult(alpha, g, iters, pg_max)
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)
 
 
 def solve_eq_qp_shrink(
@@ -1112,6 +1296,7 @@ def solve_eq_qp_shrink(
     sweeps: int = 4,
     gid=None,
     n_groups: int = 1,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Outer shrinking rounds around the pairwise engine (the equality-family
     ``solve_with_shrinking``): coordinates pinned at a bound whose multiplier
@@ -1134,6 +1319,7 @@ def solve_eq_qp_shrink(
     mask = jnp.ones(n, bool)
     res = None
     total_iters = jnp.zeros((), jnp.int32)
+    tr = trace  # one ring threaded through every round (None stays None)
     for r in range(rounds):
         final = r == rounds - 1
         m = jnp.ones(n, bool) if final else mask
@@ -1141,11 +1327,12 @@ def solve_eq_qp_shrink(
             res = solve_eq_qp_block(Q, C, a, d, alpha0=alpha, tol=tol,
                                     max_iters=max_iters, block=block,
                                     sweeps=sweeps, active_mask=m, p=p,
-                                    gid=gidv, n_groups=n_groups)
+                                    gid=gidv, n_groups=n_groups, trace=tr)
         else:
             res = solve_eq_qp(Q, C, a, d, alpha0=alpha, tol=tol,
                               max_iters=max_iters, active_mask=m, p=p,
-                              gid=gidv, n_groups=n_groups)
+                              gid=gidv, n_groups=n_groups, trace=tr)
+        tr = res.trace
         alpha, g = res.alpha, res.grad
         total_iters = total_iters + res.iters
         rho = equality_rho_grouped(alpha, g, cvec, avec, gidv,
@@ -1159,7 +1346,7 @@ def solve_eq_qp_shrink(
         mask = ~(lock_lo | lock_hi)
     pg_full = kkt_residual_eq(Q, res.alpha, cvec, avec, p=p, gid=gidv,
                               n_groups=n_groups)
-    return SolveResult(res.alpha, res.grad, total_iters, pg_full)
+    return SolveResult(res.alpha, res.grad, total_iters, pg_full, trace=tr)
 
 
 @partial(jax.jit, static_argnames=("kernel", "max_iters", "grad_chunks",
@@ -1184,6 +1371,7 @@ def solve_eq_qp_matvec(
     gid=None,
     n_groups: int = 1,
     compute_dtype: Optional[str] = None,
+    trace: Optional[ConvTrace] = None,
 ) -> SolveResult:
     """Pairwise / blocked maximal-violating-pair CD with on-the-fly kernel
     columns: Q = (y y') ∘ K(X, X) is never materialized.  ``y`` is the task
@@ -1229,11 +1417,12 @@ def solve_eq_qp_matvec(
         def qbb_fn(idx):
             return op.qbb(idx).astype(acc)
 
-        alpha, g, iters, pg_max = _blocked_mvp_loop(
+        out = _blocked_mvp_loop(
             alpha, cvec, avec, mask, gidv, n_groups, B, sweeps,
             qbb_fn=qbb_fn, rank2b_fn=rank2b_fn, full_grad=full_grad,
             tol=tol, max_iters=max_iters,
-            refresh_every=max(1, refresh_every // (2 * B)))
+            refresh_every=max(1, refresh_every // (2 * B)),
+            trace=trace, pvec=pvec)
     else:
         def qij_fn(i, j):
             return op.qbb(jnp.stack([i, j]))[0, 1].astype(acc)
@@ -1241,11 +1430,14 @@ def solve_eq_qp_matvec(
         def rank2_fn(g, i, j, di, dj):
             return rank2b_fn(g, jnp.stack([i, j]), jnp.stack([di, dj]))
 
-        alpha, g, iters, pg_max = _pairwise_mvp_loop(
+        out = _pairwise_mvp_loop(
             alpha, cvec, avec, mask, gidv, n_groups,
             qdiag=op.qdiag().astype(acc),
             qij_fn=qij_fn, rank2_fn=rank2_fn, full_grad=full_grad,
-            tol=tol, max_iters=max_iters, refresh_every=refresh_every)
+            tol=tol, max_iters=max_iters, refresh_every=refresh_every,
+            trace=trace, pvec=pvec)
+    alpha, g, iters, pg_max = out[:4]
+    tr = out[4] if trace is not None else None
 
     def q_col(k):
         # XLA pairwise regardless of backend (one skinny column), under the
@@ -1256,4 +1448,4 @@ def solve_eq_qp_matvec(
 
     alpha, g = _restore_equality_grouped(alpha, g, q_col, cvec, avec, dvec,
                                          gidv, n_groups, mask)
-    return SolveResult(alpha, g, iters, pg_max)
+    return SolveResult(alpha, g, iters, pg_max, trace=tr)

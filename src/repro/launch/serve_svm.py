@@ -39,6 +39,7 @@ from repro.core.kernels import Kernel, gram, resolve_use_pallas
 from repro.core.kkmeans import KKMeansModel
 from repro.core.multiclass import MulticlassModel, fit_ova
 from repro.core.predict import _early_program, early_capacity
+from repro.obs.metrics import MetricsRegistry
 
 Array = jax.Array
 
@@ -305,13 +306,24 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
 
 def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
                      batches: Array, use_pallas: Optional[bool] = None,
-                     warmup: int = 2) -> dict:
+                     warmup: int = 2,
+                     metrics: Optional[MetricsRegistry] = None) -> dict:
     """Drive the jitted request program over (num_batches, batch, d) queries,
-    sync per response (a real serving loop), and report latency/throughput."""
+    sync per response (a real serving loop), and report latency/throughput.
+
+    With ``metrics``, each response latency feeds a per-strategy streaming
+    histogram (``serve_latency_seconds``) and the loop maintains
+    request/query counters; ``early`` additionally records the per-cluster
+    route distribution and how many extra on-device overflow rounds the
+    bucketed program paid (queries past ``early_capacity`` slots per
+    cluster).  Routing stats are computed OUTSIDE the timed loop — the
+    measured latencies stay those of the serving program alone."""
     num_batches, batch, _ = batches.shape
     for i in range(min(warmup, num_batches)):
         pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
         pred.block_until_ready()
+    hist = (metrics.histogram("serve_latency_seconds", strategy=strategy)
+            if metrics is not None else None)
     lat = []
     t_all = time.perf_counter()
     for i in range(num_batches):
@@ -319,7 +331,17 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
         pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
         pred.block_until_ready()
         lat.append(time.perf_counter() - t0)
+        if hist is not None:
+            hist.observe(lat[-1])
     wall = time.perf_counter() - t_all
+    if metrics is not None:
+        metrics.counter("serve_requests_total", strategy=strategy).inc(
+            num_batches)
+        metrics.counter("serve_queries_total", strategy=strategy).inc(
+            num_batches * batch)
+        if strategy == "early":
+            _record_route_metrics(sm, kern, batches, metrics,
+                                  resolve_use_pallas(use_pallas))
     lat_ms = np.sort(np.asarray(lat)) * 1e3
     return {
         "strategy": strategy,
@@ -331,6 +353,30 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
         "lat_ms_p95": float(np.percentile(lat_ms, 95)),
         "lat_ms_p99": float(np.percentile(lat_ms, 99)),
     }
+
+
+def _record_route_metrics(sm: ServingModel, kern: Kernel, batches: Array,
+                          metrics: MetricsRegistry, use_pallas: bool) -> None:
+    """Early-strategy routing telemetry: per-cluster query distribution and
+    the number of EXTRA bucketed scoring rounds caused by per-batch cluster
+    loads above ``early_capacity`` (the fused program's per-round buffer)."""
+    from repro.core.kkmeans import assign_points
+
+    num_batches, batch, d = batches.shape
+    route_model = KKMeansModel(Xm=sm.Xm, W=sm.Wm, s=sm.sm)
+    assign, _ = assign_points(kern, route_model, batches.reshape(-1, d),
+                              use_pallas=use_pallas)
+    assign = np.asarray(assign).reshape(num_batches, batch)
+    total = np.bincount(assign.ravel(), minlength=sm.k)
+    for c in range(sm.k):
+        if total[c]:
+            metrics.counter("serve_route_total", cluster=str(c)).inc(
+                int(total[c]))
+    cap = early_capacity(batch, sm.k)
+    overflow = sum(
+        max(0, -(-int(np.bincount(row, minlength=sm.k).max()) // cap) - 1)
+        for row in assign)
+    metrics.counter("serve_early_overflow_rounds_total").inc(overflow)
 
 
 def main(argv=None) -> None:
@@ -358,6 +404,10 @@ def main(argv=None) -> None:
     ap.add_argument("--nu", type=float, default=0.1,
                     help="one-class support/outlier mass bound")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="",
+                    help="dump serving metrics (latency histograms, "
+                         "request/route counters) as JSON at this path plus "
+                         "Prometheus text exposition next to it (.prom)")
     args = ap.parse_args(argv)
 
     kern = Kernel("rbf", gamma=args.gamma)
@@ -401,11 +451,18 @@ def main(argv=None) -> None:
     rng = np.random.default_rng(args.seed)
     idx = rng.integers(0, Xte.shape[0], size=(args.batches, args.batch))
     batches = jnp.asarray(np.asarray(Xte)[idx])
-    rep = run_request_loop(sm, kern, args.strategy, batches)
+    registry = MetricsRegistry() if args.metrics_out else None
+    if registry is not None:
+        registry.counter("serve_strategy_selected_total",
+                         strategy=args.strategy).inc()
+    rep = run_request_loop(sm, kern, args.strategy, batches, metrics=registry)
     print(f"{rep['strategy']}: {rep['qps']:.0f} q/s | "
           f"lat ms mean {rep['lat_ms_mean']:.2f} "
           f"p50 {rep['lat_ms_p50']:.2f} p95 {rep['lat_ms_p95']:.2f} "
           f"p99 {rep['lat_ms_p99']:.2f}")
+    if registry is not None:
+        prom = registry.dump(args.metrics_out)
+        print(f"metrics -> {args.metrics_out} and {prom}", flush=True)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,8 @@ covers svc, weighted-svc and svr through the generalized TaskDual path.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import os
 import time
 
@@ -132,6 +134,19 @@ def main(argv=None) -> None:
                     help="byte budget for Gram storage tiers (0 = default)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the fit's span "
+                         "tree (divide/conquer phases) to this path and "
+                         "print the aggregated span table; load in Perfetto "
+                         "or chrome://tracing")
+    ap.add_argument("--trace-cap", type=int, default=0,
+                    help="device-resident convergence-trace ring capacity "
+                         "for the level-0 solve (keeps the LAST N "
+                         "per-iteration samples; 0 = tracing off, solver "
+                         "jaxprs bit-identical to the untraced build)")
+    ap.add_argument("--stats-json", default="",
+                    help="dump per-level training stats (times, SV counts, "
+                         "cache counters, convergence traces) as JSON")
     args = ap.parse_args(argv)
 
     is_reg = args.dataset in REGRESSION_DATASETS
@@ -168,6 +183,8 @@ def main(argv=None) -> None:
         extra["compute_dtype"] = args.compute_dtype
     if args.gram_budget > 0:
         extra["gram_budget"] = args.gram_budget
+    if args.trace_cap > 0:
+        extra["trace"] = args.trace_cap
     cfg = DCSVMConfig(kernel=kern, C=args.C, k=args.k, levels=args.levels,
                       m=args.m, tol=args.tol, block=args.block,
                       eq_block_size=args.eq_block,
@@ -176,6 +193,45 @@ def main(argv=None) -> None:
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
+    tracer = None
+    span_ctx = contextlib.nullcontext()
+    if args.trace:
+        from repro.obs.spans import SpanTracer
+        tracer = SpanTracer()
+        span_ctx = tracer.activate()
+
+    t0 = time.perf_counter()
+    with span_ctx:
+        model = _train(args, cfg, task, Xtr, ytr, mgr)
+    t_train = time.perf_counter() - t0
+
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace)
+        print(f"chrome trace -> {args.trace}", flush=True)
+        print(tracer.summary(), flush=True)
+    if args.stats_json:
+        payload = {"task": args.task, "dataset": args.dataset,
+                   "n": int(Xtr.shape[0]), "train_time": t_train,
+                   "levels": model.level_stats}
+        with open(args.stats_json, "w") as f:
+            json.dump(payload, f, indent=1, default=_json_default)
+        print(f"stats -> {args.stats_json}", flush=True)
+    _evaluate(args, model, Xte, yte, Xtr, t_train)
+    if mgr is not None:
+        mgr.wait()
+
+
+def _json_default(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.ndarray, jax.Array)):
+        return np.asarray(v).tolist()
+    raise TypeError(f"not JSON-serializable: {type(v)!r}")
+
+
+def _train(args, cfg, task, Xtr, ytr, mgr) -> DCSVMModel:
     def cb(level, alpha, st):
         print(f"level {level}: clusters={st.get('clusters', 1)} "
               f"n_sv={st['n_sv']} cluster_t={st.get('cluster_time', 0):.1f}s "
@@ -185,7 +241,6 @@ def main(argv=None) -> None:
                      {"alpha": alpha, "level": jnp.asarray(level)},
                      blocking=False)
 
-    t0 = time.perf_counter()
     if args.distributed:
         if args.task in ("nu-svc", "one-class"):
             raise SystemExit(
@@ -201,11 +256,12 @@ def main(argv=None) -> None:
             conquer_block=max(args.block, 64),
             mode=args.dist_mode, cache_cap=args.dist_cache)
         for st in model.level_stats:
-            print(st, flush=True)
-    else:
-        model = fit(cfg, Xtr, ytr, callback=cb, task=task)
-    t_train = time.perf_counter() - t0
+            print({k: v for k, v in st.items() if k != "trace"}, flush=True)
+        return model
+    return fit(cfg, Xtr, ytr, callback=cb, task=task)
 
+
+def _evaluate(args, model: DCSVMModel, Xte, yte, Xtr, t_train: float) -> None:
     if model.is_early:
         pred = predict_early(model, Xte)
         mode = f"early prediction (level {args.early})"
@@ -228,8 +284,6 @@ def main(argv=None) -> None:
                         f" -1 {recall(yte, pred, -1.0):.4f}")
     print(f"done in {t_train:.1f}s | {mode} | {metrics} | "
           f"SVs {n_sv}/{Xtr.shape[0]}", flush=True)
-    if mgr is not None:
-        mgr.wait()
 
 
 if __name__ == "__main__":

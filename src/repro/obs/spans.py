@@ -1,0 +1,127 @@
+"""Span-tree wall-clock tracing with jax.profiler hooks.
+
+``span("divide/level0/solve")`` wraps a fit phase.  Every span enters a
+``jax.profiler.TraceAnnotation`` with the same name, so when the user runs
+the XLA profiler the device timeline carries the identical labels as our
+host-side tree — that naming contract is the whole point (DESIGN.md §13).
+
+Host-side recording only happens while a ``SpanTracer`` is activated
+(``with tracer.activate(): fit(...)``); otherwise ``span`` costs one
+TraceAnnotation enter/exit, which is a no-op when no profiler session is
+running.  The tracer exports Chrome trace-event JSON (complete ``X``
+events, microsecond timestamps — loadable in Perfetto / chrome://tracing)
+and an aggregated text summary table.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+import jax
+
+# Module-global active tracer; spans record into it when set.  Single
+# host thread drives fits here, so a plain global (not a contextvar) is
+# enough and keeps the hot path one attribute load.
+_ACTIVE: Optional["SpanTracer"] = None
+
+
+@dataclass
+class Span:
+    name: str
+    t0: float
+    t1: Optional[float] = None
+    children: List["Span"] = field(default_factory=list)
+
+    @property
+    def duration(self) -> float:
+        return (self.t1 if self.t1 is not None else time.perf_counter()) - self.t0
+
+
+class SpanTracer:
+    """Collects a tree of wall-clock spans for one fit/serve run."""
+
+    def __init__(self) -> None:
+        self.origin = time.perf_counter()
+        self.roots: List[Span] = []
+        self._stack: List[Span] = []
+
+    @contextmanager
+    def span(self, name: str) -> Iterator[Span]:
+        s = Span(name=name, t0=time.perf_counter())
+        (self._stack[-1].children if self._stack else self.roots).append(s)
+        self._stack.append(s)
+        try:
+            yield s
+        finally:
+            s.t1 = time.perf_counter()
+            self._stack.pop()
+
+    @contextmanager
+    def activate(self) -> Iterator["SpanTracer"]:
+        global _ACTIVE
+        prev = _ACTIVE
+        _ACTIVE = self
+        try:
+            yield self
+        finally:
+            _ACTIVE = prev
+
+    # -- exports ---------------------------------------------------------
+    def _walk(self):
+        stack = [(s, 0) for s in reversed(self.roots)]
+        while stack:
+            s, depth = stack.pop()
+            yield s, depth
+            stack.extend((c, depth + 1) for c in reversed(s.children))
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """Chrome trace-event JSON: complete ``X`` events, ts/dur in µs."""
+        events = []
+        for s, _ in self._walk():
+            events.append({
+                "name": s.name,
+                "ph": "X",
+                "ts": (s.t0 - self.origin) * 1e6,
+                "dur": max(s.duration, 0.0) * 1e6,
+                "pid": 0,
+                "tid": 0,
+            })
+        events.sort(key=lambda e: e["ts"])
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def write_chrome_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+    def summary(self) -> str:
+        """Aggregated text table: per-name count, total and self seconds."""
+        agg: Dict[str, List[float]] = {}
+        for s, _ in self._walk():
+            child_total = sum(c.duration for c in s.children)
+            tot, own, cnt = agg.get(s.name, (0.0, 0.0, 0))
+            agg[s.name] = [tot + s.duration,
+                           own + max(s.duration - child_total, 0.0),
+                           cnt + 1]
+        rows = sorted(agg.items(), key=lambda kv: -kv[1][0])
+        w = max([len("span")] + [len(k) for k in agg])
+        lines = [f"{'span':<{w}}  {'count':>5}  {'total_s':>9}  {'self_s':>9}",
+                 f"{'-' * w}  {'-' * 5}  {'-' * 9}  {'-' * 9}"]
+        for name, (tot, own, cnt) in rows:
+            lines.append(f"{name:<{w}}  {cnt:>5}  {tot:>9.4f}  {own:>9.4f}")
+        return "\n".join(lines)
+
+
+@contextmanager
+def span(name: str) -> Iterator[None]:
+    """Name a fit phase: host span tree (when a tracer is active) + device
+    profiler annotation (always — free unless a profiler session runs)."""
+    tracer = _ACTIVE
+    with jax.profiler.TraceAnnotation(name):
+        if tracer is None:
+            yield
+        else:
+            with tracer.span(name):
+                yield

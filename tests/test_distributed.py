@@ -133,6 +133,43 @@ def test_conquer_loop_is_host_sync_free():
     assert float(kkt_residual(Q, alpha, 2.0)) <= 1e-3
 
 
+@pytest.mark.parametrize("mode,cache", [("parallel", 0), ("parallel", 128),
+                                        ("replicated", 0)])
+def test_conquer_trace_bit_identical_and_host_sync_free(mode, cache):
+    """trace_cap > 0 threads a device-resident ConvTrace through the conquer
+    rounds: the iterate must stay bit-identical to the untraced run, the
+    traced loop must add no device->host sync (the ring is fetched after),
+    and the per-round samples must line up with the round count."""
+    from repro.obs.trace import trace_fetch
+
+    X, y = gaussian_mixture(jax.random.PRNGKey(9), 256, d=6, modes_per_class=3)
+    base = ConquerConfig(kernel=KERN, C=2.0, tol=1e-4, max_iters=2000,
+                         block=16, mode=mode, cache_cap=cache)
+    traced = dataclasses.replace(base, trace_cap=64)
+    a0, r0, pg0 = conquer_step(_mesh1(), "i", base, X, y, jnp.zeros(256))
+    conquer_step(_mesh1(), "i", traced, X, y, jnp.zeros(256))   # warm compile
+    with jax.transfer_guard_device_to_host("disallow"):
+        a1, r1, pg1, tr = conquer_step(_mesh1(), "i", traced, X, y,
+                                       jnp.zeros(256))
+        a1.block_until_ready()
+    assert np.array_equal(np.asarray(a0), np.asarray(a1))
+    assert int(r0) == int(r1)
+    out = trace_fetch(tr)
+    assert out["samples"] + out["dropped"] == int(r1)
+    # per-round pg is the selection-time violation (pre-update), so the last
+    # sample sits one round behind the exit residual but the same order
+    assert all(np.isfinite(v) and v > 0 for v in out["pg_max"])
+    assert out["pg_max"][-1] >= float(pg1) * 0.1
+    assert all(np.isfinite(v) for v in out["objective"])
+    if mode == "parallel":
+        assert "gamma" in out       # CE-PBM records the combination step γ*
+        assert all(0.0 <= g <= 1.0 for g in out["gamma"])
+    else:
+        assert "gamma" not in out   # replicated has no combination step
+    if cache:
+        assert "cache_hits" in out  # per-round hit deltas
+
+
 def test_combination_step_size_properties():
     # interior optimum of the 1-d quadratic: gamma = -g*d/(d*Q*d)
     assert float(combination_step_size(jnp.float32(-1.0),

@@ -1,0 +1,293 @@
+"""Telemetry subsystem (repro.obs): convergence-trace rings, span tracing,
+serving metrics, and the bit-identity / host-sync contracts they must keep.
+
+The load-bearing guarantees pinned here:
+
+* ``trace=None`` (the default) leaves every solver trajectory bit-identical
+  to the untraced build — tracing is a pure observer, and enabling it must
+  not move the iterate either.
+* A trace-enabled matvec solve stays free of device->host syncs (the ring
+  lives on device; the fetch happens once, after).
+* The ring keeps the LAST ``cap`` samples with an exact dropped count.
+* Chrome trace exports are schema-valid (complete ``X`` events, sorted,
+  non-negative durations); histograms/registries expose Prometheus text.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import Kernel
+from repro.core.solver import (solve_box_qp, solve_box_qp_matvec,
+                               solve_eq_qp, solve_with_shrinking)
+from repro.data import gaussian_mixture
+from repro.obs.metrics import Counter, LatencyHistogram, MetricsRegistry
+from repro.obs.spans import SpanTracer, span
+from repro.obs.trace import (TRACE_COLS, ConvTrace, trace_fetch, trace_init,
+                             trace_record, trace_summary)
+
+KERN = Kernel("rbf", gamma=4.0)
+
+
+def _problem(n=96, seed=0):
+    X, y = gaussian_mixture(jax.random.PRNGKey(seed), n, d=5,
+                            modes_per_class=3)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_trace_truncated_fill():
+    tr = trace_init(8)
+    for i in range(3):
+        tr = trace_record(tr, pg_max=float(i), objective=float(10 + i))
+    out = trace_fetch(tr)
+    assert out["samples"] == 3 and out["dropped"] == 0
+    assert out["pg_max"] == [0.0, 1.0, 2.0]
+    assert out["objective"] == [10.0, 11.0, 12.0]
+    # never-recorded columns are omitted, not NaN-filled
+    assert "gamma" not in out and "cache_hits" not in out
+
+
+def test_trace_wraparound_keeps_last_cap_in_order():
+    tr = trace_init(4)
+    for i in range(10):
+        tr = trace_record(tr, pg_max=float(i))
+    out = trace_fetch(tr)
+    assert out["samples"] == 4 and out["dropped"] == 6
+    assert out["pg_max"] == [6.0, 7.0, 8.0, 9.0]   # chronological tail
+    s = trace_summary(out)
+    assert s["pg_first"] == 6.0 and s["pg_last"] == 9.0
+
+
+def test_trace_init_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError):
+        trace_init(0)
+
+
+def test_trace_record_under_jit_and_vmap():
+    def record_k(pg):
+        tr = trace_init(4)
+        def body(i, t):
+            return trace_record(t, pg_max=pg * (i + 1.0))
+        return jax.lax.fori_loop(0, 3, body, tr)
+
+    tr = jax.jit(jax.vmap(record_k))(jnp.asarray([1.0, 10.0]))
+    out = trace_fetch(tr)
+    assert isinstance(out, list) and len(out) == 2
+    assert out[0]["pg_max"] == [1.0, 2.0, 3.0]
+    assert out[1]["pg_max"] == [10.0, 20.0, 30.0]
+    merged = trace_summary(out)
+    assert merged["samples"] == 6 and merged["pg_last"] == 30.0
+
+
+# ---------------------------------------------------------------------------
+# solver bit-identity: tracing observes, never steers
+# ---------------------------------------------------------------------------
+
+def test_traced_box_solve_is_bit_identical():
+    X, y = _problem()
+    Q = (y[:, None] * y[None, :]) * (KERN.pairwise(X, X))
+    r0 = solve_box_qp(Q, 2.0, tol=1e-5, max_iters=2000)
+    r1 = solve_box_qp(Q, 2.0, tol=1e-5, max_iters=2000, trace=trace_init(32))
+    assert np.array_equal(np.asarray(r0.alpha), np.asarray(r1.alpha))
+    assert int(r0.iters) == int(r1.iters)
+    out = trace_fetch(r1.trace)
+    assert out["samples"] + out["dropped"] == int(r1.iters)
+    # the recorded columns carry real values
+    assert out["pg_max"][-1] == pytest.approx(float(r1.pg_max), rel=1e-6)
+    assert all(f == int(f) and 0 <= f <= Q.shape[0] for f in out["n_free"])
+
+
+def test_traced_shrinking_solve_is_bit_identical():
+    X, y = _problem(seed=1)
+    Q = (y[:, None] * y[None, :]) * (KERN.pairwise(X, X))
+    r0 = solve_with_shrinking(Q, 2.0, tol=1e-4, max_iters=4000, rounds=3)
+    r1 = solve_with_shrinking(Q, 2.0, tol=1e-4, max_iters=4000, rounds=3,
+                              trace=trace_init(64))
+    assert np.array_equal(np.asarray(r0.alpha), np.asarray(r1.alpha))
+    assert trace_fetch(r1.trace)["samples"] > 0
+
+
+def test_traced_eq_solve_is_bit_identical():
+    X, _ = _problem(seed=2)
+    n = X.shape[0]
+    Q = KERN.pairwise(X, X)
+    kw = dict(tol=1e-4, max_iters=4000)
+    r0 = solve_eq_qp(Q, 1.0, 1.0, 0.3 * n, **kw)
+    r1 = solve_eq_qp(Q, 1.0, 1.0, 0.3 * n, trace=trace_init(32), **kw)
+    assert np.array_equal(np.asarray(r0.alpha), np.asarray(r1.alpha))
+    out = trace_fetch(r1.trace)
+    assert out["samples"] > 0 and "pg_max" in out
+
+
+def test_traced_matvec_solve_stays_host_sync_free():
+    """The trace ring must live on device: recording adds no host round-trip
+    to the matvec CD loop (same pin as the cache/spill counters)."""
+    X, y = _problem(n=128, seed=3)
+    kw = dict(tol=1e-4, max_iters=2000, block=16, sweeps=2)
+    r0 = solve_box_qp_matvec(X, y, KERN, 2.0, **kw)
+    # warm the traced program (compilation may inspect host values)
+    solve_box_qp_matvec(X, y, KERN, 2.0, trace=trace_init(32), **kw)
+    with jax.transfer_guard_device_to_host("disallow"):
+        r1 = solve_box_qp_matvec(X, y, KERN, 2.0, trace=trace_init(32), **kw)
+        r1.alpha.block_until_ready()
+    assert np.array_equal(np.asarray(r0.alpha), np.asarray(r1.alpha))
+    assert trace_fetch(r1.trace)["samples"] > 0
+
+
+def test_fit_trace_config_is_bit_identical_and_fetched_once():
+    from repro.core.dcsvm import DCSVMConfig, fit
+
+    X, y = _problem(n=120, seed=4)
+    base = dict(kernel=KERN, C=2.0, k=2, levels=1, m=64, tol=1e-4,
+                max_iters=2000, seed=0)
+    m0 = fit(DCSVMConfig(**base), X, y)
+    m1 = fit(DCSVMConfig(**base, trace=16), X, y)
+    assert np.array_equal(np.asarray(m0.alpha), np.asarray(m1.alpha))
+    st0, st1 = m0.level_stats[-1], m1.level_stats[-1]
+    assert "trace" not in st0                       # default: no trace key
+    assert st1["trace_summary"]["samples"] > 0
+    assert st1["trace_summary"]["pg_last"] <= st1["trace_summary"]["pg_first"]
+
+
+# ---------------------------------------------------------------------------
+# span tracing
+# ---------------------------------------------------------------------------
+
+def test_span_tree_chrome_trace_schema(tmp_path):
+    tracer = SpanTracer()
+    with tracer.activate():
+        with span("fit"):
+            with span("divide/level1/solve"):
+                pass
+            with span("conquer/solve"):
+                pass
+    with span("outside"):                           # inactive: not recorded
+        pass
+    ct = tracer.chrome_trace()
+    events = ct["traceEvents"]
+    assert [e["name"] for e in events][0] == "fit"
+    assert {e["name"] for e in events} == {"fit", "divide/level1/solve",
+                                           "conquer/solve"}
+    assert all(e["ph"] == "X" and e["dur"] >= 0 for e in events)
+    assert all(events[i]["ts"] <= events[i + 1]["ts"]
+               for i in range(len(events) - 1))
+    # parent span covers its children
+    fit_ev = next(e for e in events if e["name"] == "fit")
+    child_dur = sum(e["dur"] for e in events if e["name"] != "fit")
+    assert fit_ev["dur"] >= child_dur * (1 - 1e-6)
+    path = tmp_path / "trace.json"
+    tracer.write_chrome_trace(str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+    table = tracer.summary()
+    assert "fit" in table and "conquer/solve" in table
+
+
+def test_span_nesting_restores_active_tracer():
+    t1, t2 = SpanTracer(), SpanTracer()
+    with t1.activate():
+        with span("outer"):
+            with t2.activate():
+                with span("inner"):
+                    pass
+            with span("outer2"):
+                pass
+    assert {s.name for s in t1.roots} == {"outer"}
+    assert {s.name for s in t2.roots} == {"inner"}
+    assert [c.name for c in t1.roots[0].children] == ["outer2"]
+
+
+# ---------------------------------------------------------------------------
+# serving metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_histogram_streaming_stats():
+    h = LatencyHistogram()
+    vals = [1e-4, 2e-4, 5e-4, 1e-3, 5e-3, 2e-2, 0.5]
+    for v in vals:
+        h.observe(v)
+    assert h.total == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.vmin == min(vals) and h.vmax == max(vals)
+    assert min(vals) <= h.quantile(0.5) <= max(vals)
+    assert h.quantile(0.5) <= h.quantile(0.95) <= h.quantile(0.99)
+    j = h.to_json()
+    assert j["count"] == len(vals)
+    assert sum(j["buckets"].values()) == len(vals)
+    # an observation past the top bound lands in +Inf
+    h.observe(100.0)
+    assert h.to_json()["buckets"]["+Inf"] == 1
+
+
+def test_latency_histogram_empty():
+    j = LatencyHistogram().to_json()
+    assert j["count"] == 0 and j["p50"] is None and j["buckets"] == {}
+    assert math.isnan(LatencyHistogram().quantile(0.5))
+
+
+def test_metrics_registry_labels_and_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("serve_requests_total", strategy="early").inc(3)
+    reg.counter("serve_requests_total", strategy="exact").inc()
+    assert reg.counter("serve_requests_total", strategy="early").value == 3
+    h = reg.histogram("serve_latency_seconds", strategy="early")
+    h.observe(1e-3)
+    h.observe(2e-3)
+    j = reg.to_json()
+    assert j["counters"]['serve_requests_total{strategy="early"}'] == 3
+    assert j["counters"]['serve_requests_total{strategy="exact"}'] == 1
+    text = reg.to_prometheus_text()
+    assert "# TYPE serve_requests_total counter" in text
+    assert "# TYPE serve_latency_seconds histogram" in text
+    # cumulative buckets: the +Inf bucket equals _count
+    inf_line = [l for l in text.splitlines()
+                if l.startswith("serve_latency_seconds_bucket")
+                and 'le="+Inf"' in l]
+    assert inf_line and inf_line[0].split()[-1] == "2"
+    assert 'serve_latency_seconds_count{strategy="early"} 2' in text
+
+
+def test_metrics_registry_dump(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("requests_total").inc(5)
+    reg.histogram("latency_seconds").observe(0.01)
+    jpath = tmp_path / "metrics.json"
+    prom = reg.dump(str(jpath))
+    assert json.loads(jpath.read_text())["counters"]["requests_total"] == 5
+    assert prom.endswith(".prom")
+    assert "latency_seconds_bucket" in open(prom).read()
+
+
+def test_counter_is_plain_int():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+
+
+# ---------------------------------------------------------------------------
+# benchmark artifact merge
+# ---------------------------------------------------------------------------
+
+def test_emit_json_merge_keeps_other_sections(tmp_path, monkeypatch):
+    from benchmarks.common import emit_json
+
+    path = str(tmp_path / "BENCH.json")
+    emit_json(path, {"kernels": {"a": 1}})
+    emit_json(path, {"outofcore": {"b": 2}}, merge=True)
+    d = json.load(open(path))
+    assert d["kernels"] == {"a": 1} and d["outofcore"] == {"b": 2}
+    # merge replaces a same-named section wholesale
+    emit_json(path, {"outofcore": {"c": 3}}, merge=True)
+    assert json.load(open(path))["outofcore"] == {"c": 3}
+    # a corrupt artifact starts fresh instead of crashing the bench
+    with open(path, "w") as f:
+        f.write("{not json")
+    emit_json(path, {"trace": {"d": 4}}, merge=True)
+    assert json.load(open(path))["trace"] == {"d": 4}
