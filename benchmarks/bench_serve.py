@@ -59,5 +59,6 @@ def run(dry_run: bool = False) -> List[Row]:
         payload["strategies"][strategy] = rep
         rows.append((f"serve_{strategy}", rep["lat_ms_mean"] * 1e3,
                      f"qps={rep['qps']:.0f} acc={acc:.4f}"))
-    emit_json("BENCH_serve.json", payload)
+    # merge: bench_slo shares this artifact (its "slo" section must survive)
+    emit_json("BENCH_serve.json", payload, merge=True)
     return rows

@@ -1,0 +1,132 @@
+"""SLO benchmark for the async serving engine: tail latency under Poisson
+arrivals at swept offered QPS, against two registered model versions.
+
+Unlike ``bench_serve`` (fixed batches through the synchronous request
+loop), this drives the production path: requests with MIXED sizes arrive on
+a Poisson clock, the engine's batch manager merges whatever is ready into
+pad-bucketed batches, and each request's latency is measured submit ->
+future resolution (queueing + batching + compute).  Two versions of the
+model are registered and requests split across them — the multi-version
+routing cost is part of what is measured.
+
+Asserts the engine's core invariant: ZERO jit compiles after warmup over
+the whole sweep (ragged sizes bucket onto warm signatures).  Merges the
+``slo`` section into ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import List
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row, emit_json
+from repro.core import DCSVMConfig, Kernel, fit_ova
+from repro.data import gaussian_mixture_multiclass, train_test_split
+from repro.launch.engine import AsyncServingEngine, EngineConfig
+from repro.launch.registry import ModelRegistry
+
+SIZES = np.array([1, 4, 16, 64])          # mixed request sizes
+SIZE_P = np.array([0.35, 0.30, 0.25, 0.10])
+
+
+def _percentiles(lat_s: List[float]) -> dict:
+    ms = np.asarray(lat_s) * 1e3
+    return {
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p95_ms": float(np.percentile(ms, 95)),
+        "p99_ms": float(np.percentile(ms, 99)),
+        "mean_ms": float(ms.mean()),
+    }
+
+
+async def _drive(engine: AsyncServingEngine, Xpool: np.ndarray, qps: float,
+                 n_requests: int, seed: int) -> dict:
+    """One Poisson trace at offered ``qps``: mixed sizes, versions
+    alternating 1/2, per-request latency = submit -> resolved future."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice(SIZES, size=n_requests, p=SIZE_P)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n_requests))
+    lats: List[float] = []
+
+    async def one(delay: float, size: int, version: int) -> None:
+        await asyncio.sleep(delay)
+        X = Xpool[rng.integers(0, Xpool.shape[0], size=size)]
+        t0 = time.perf_counter()
+        await engine.submit(X, "mix", version=version, strategy="early")
+        lats.append(time.perf_counter() - t0)
+
+    t_all = time.perf_counter()
+    await asyncio.gather(*[
+        one(float(arrivals[i]), int(sizes[i]), 1 + i % 2)
+        for i in range(n_requests)])
+    wall = time.perf_counter() - t_all
+    return {
+        "offered_qps": float(qps),
+        "achieved_rps": n_requests / max(wall, 1e-9),
+        "achieved_qps": float(sizes.sum()) / max(wall, 1e-9),
+        "requests": int(n_requests),
+        "queries": int(sizes.sum()),
+        **_percentiles(lats),
+    }
+
+
+def run(dry_run: bool = False) -> List[Row]:
+    n = 700 if dry_run else 5000
+    n_requests = 40 if dry_run else 400
+    qps_sweep = [100.0] if dry_run else [100.0, 400.0, 1600.0]
+    kern = Kernel("rbf", gamma=8.0)
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), n, n_classes=3,
+                                       d=8)
+    Xtr, ytr, Xte, _ = train_test_split(jax.random.PRNGKey(1), X, y)
+
+    registry = ModelRegistry()
+    # v1: early-stopped 1-level model (cheap, approximate); v2: the full
+    # 2-level solve — the hot-swap pair a production rollout would hold
+    cfg1 = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=1,
+                       m=min(400, Xtr.shape[0]), tol=1e-3,
+                       early_stop_level=1)
+    cfg2 = DCSVMConfig(kernel=kern, C=4.0, k=4, levels=2,
+                       m=min(400, Xtr.shape[0]), tol=1e-3)
+    man1 = registry.register("mix", fit_ova(cfg1, Xtr, ytr), with_bcm=False)
+    man2 = registry.register("mix", fit_ova(cfg2, Xtr, ytr), with_bcm=False)
+
+    engine = AsyncServingEngine(
+        registry, EngineConfig(max_batch=128 if dry_run else 256))
+    warm = engine.warmup("mix", strategies=["early"])
+    Xpool = np.asarray(Xte)
+
+    async def sweep() -> List[dict]:
+        out = []
+        async with engine:
+            for i, qps in enumerate(qps_sweep):
+                out.append(await _drive(engine, Xpool, qps, n_requests,
+                                        seed=100 + i))
+        return out
+
+    results = asyncio.run(sweep())
+    compiles = engine.stats()["compiles_after_warmup"]
+    assert compiles == 0, (
+        f"engine compiled {compiles} executable(s) inside the timed sweep — "
+        "the bucketed jit cache went cold")
+
+    payload = {
+        "slo": {
+            "n_train": int(Xtr.shape[0]),
+            "versions": [man1.version, man2.version],
+            "n_sv": [man1.n_sv, man2.n_sv],
+            "warmup_compiles": int(warm),
+            "compiles_after_warmup": int(compiles),
+            "dry_run": dry_run,
+            "sweep": results,
+        }
+    }
+    emit_json("BENCH_serve.json", payload, merge=True)
+    rows: List[Row] = []
+    for r in results:
+        rows.append((f"slo_q{int(r['offered_qps'])}", r["p99_ms"] * 1e3,
+                     f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
+                     f"rps={r['achieved_rps']:.0f} compiles=0"))
+    return rows

@@ -15,7 +15,8 @@ import traceback
 from benchmarks.common import emit
 
 ALL = ["fig1", "fig2", "fig3", "table1", "table3", "table6", "kernels",
-       "outofcore", "trace", "serve", "svr", "oneclass", "eq_block", "dist"]
+       "outofcore", "trace", "serve", "slo", "svr", "oneclass", "eq_block",
+       "dist"]
 
 
 def main() -> None:

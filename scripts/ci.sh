@@ -3,7 +3,7 @@
 # fused conquer path / serving engine (and their BENCH_*.json artifacts) are
 # caught early.
 #
-#   scripts/ci.sh            # full tier-1 + kernels/serve/svr/oneclass/
+#   scripts/ci.sh            # full tier-1 + kernels/serve/slo/svr/oneclass/
 #                            # eq-block/dist bench smoke (dist spawns 1- and
 #                            # 8-forced-host-device subprocesses)
 #   scripts/ci.sh --fast     # quick local loop: tests only, and the
@@ -49,9 +49,16 @@ if [[ "${1:-}" == "--fast" ]]; then
     python -m repro.launch.serve_svm --n 600 --classes 3 --levels 1 \
         --strategy early --batch 64 --batches 4 \
         --metrics-out "$TDIR/metrics.json"
+    # async serving smoke: in-process engine over the versioned registry,
+    # short Poisson trace of mixed request sizes — asserts a finite p99,
+    # zero compiles after warmup, and the manifest/metrics schemas
+    python -m repro.launch.serve_svm --n 600 --classes 3 --levels 1 \
+        --strategy early --batch 64 --batches 24 --serve-async --qps 200 \
+        --registry "$TDIR/registry.json" \
+        --metrics-out "$TDIR/async_metrics.json" | tee "$TDIR/async.out"
     python scripts/make_report.py --stats "$TDIR/stats.json" >/dev/null
     python - "$TDIR" <<'EOF'
-import json, sys
+import json, re, sys
 d = sys.argv[1]
 t = json.load(open(f"{d}/trace.json"))
 assert t["traceEvents"], "empty chrome trace"
@@ -64,7 +71,28 @@ assert m["counters"] and m["histograms"]
 assert any(k.startswith("serve_latency_seconds") for k in m["histograms"])
 prom = open(f"{d}/metrics.prom").read()
 assert "serve_latency_seconds_bucket" in prom
-print("telemetry smoke ok")
+assert "# HELP" in prom
+# async engine artifacts: manifest schema, engine metrics, finite p99,
+# zero compiles after warmup
+r = json.load(open(f"{d}/registry.json"))
+assert r["route"] == {"default": 1}
+man = r["models"][0]
+for key in ("name", "version", "task", "kernel", "C", "rho", "rho_c", "k",
+            "n_classes", "n_sv", "strategies", "max_sv_per_cluster",
+            "with_bcm", "cap_policy"):
+    assert key in man, f"manifest missing {key}"
+assert man["cap_policy"] == "bucket" and man["kernel"]["kind"] == "rbf"
+am = json.load(open(f"{d}/async_metrics.json"))
+assert any(k.startswith("serve_latency_seconds") for k in am["histograms"])
+assert any(k.startswith("serve_batch_fill_ratio") for k in am["histograms"])
+assert "serve_queue_depth" in am.get("gauges", {})
+assert not any(k.startswith("serve_compiles_total")
+               for k in am["counters"]), "engine recompiled after warmup"
+out = open(f"{d}/async.out").read()
+p99 = float(re.search(r"p99 ([0-9.]+)", out).group(1))
+assert p99 == p99 and p99 > 0, "p99 not finite"
+assert re.search(r"after warmup 0", out), "compiles after warmup != 0"
+print("telemetry + async serving smoke ok")
 EOF
 else
     python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
@@ -78,6 +106,6 @@ else
     # curve; kernels/outofcore/trace all merge sections into
     # BENCH_conquer.json); writes BENCH_{conquer,serve,svr,oneclass,dist}.json
     python -m benchmarks.run \
-        --only kernels,outofcore,trace,serve,svr,oneclass,eq_block,dist \
+        --only kernels,outofcore,trace,serve,slo,svr,oneclass,eq_block,dist \
         --dry-run
 fi

@@ -229,8 +229,28 @@ def _early_blocks(model, w: Array):
 
 def early_capacity(nq: int, k: int) -> int:
     """Query-buffer slots per cluster: 2x the balanced load.  Overflow past
-    this capacity is handled by extra on-device rounds, never dropped."""
+    this capacity is handled by extra on-device rounds, never dropped.
+
+    ``cap`` is a STATIC argument of the fused early program — every distinct
+    value is a fresh jit signature and a fresh compile.  Serving paths must
+    therefore derive it from a padded bucket size (``bucket_size``), never
+    from the live ragged batch size: feeding raw ``Xq.shape[0]`` here is
+    exactly the per-batch-size recompile bug the bucketed serving path
+    exists to fix."""
     return int(min(nq, max(8, -(-2 * nq // k))))
+
+
+def bucket_size(nq: int, lo: int = 8, hi: int = 4096) -> int:
+    """Pad bucket for a ragged request batch: the smallest power of two
+    >= ``nq``, clamped below by ``lo``; batches past ``hi`` round up to a
+    multiple of ``hi``.  Ragged arrival sizes collapse onto O(log hi)
+    distinct (batch, cap) jit signatures, so the serving caches stay warm
+    forever once each bucket has compiled."""
+    if nq <= 0:
+        return lo
+    if nq > hi:
+        return -(-nq // hi) * hi
+    return max(lo, 1 << (nq - 1).bit_length())
 
 
 def decision_early(model: DCSVMModel, Xq: Array,

@@ -1,0 +1,305 @@
+"""Asyncio serving engine: continuous batching over the versioned registry.
+
+The ColossalAI async-inference shape grown around ``serve_batch``: an
+asyncio front end wrapping a request->future map over a batch manager that
+pops ready requests into pad-bucketed batches.
+
+* ``submit`` resolves the request's (model, version) against the registry's
+  route table ONCE at enqueue (so a hot swap repoints later requests while
+  queued ones keep their resolved version), attaches an ``asyncio.Future``,
+  and parks the request on its (name, version, strategy) group queue.
+* The batch-manager task pops the group with the oldest waiting request,
+  drains up to ``max_batch`` query rows from it (continuous batching: one
+  slow group never blocks another; late arrivals ride the next pop),
+  concatenates the rows, and serves them through ``serve_batch`` padded to
+  a power-of-two bucket (``predict.bucket_size``).  Everything the jit
+  cache keys on — batch shape AND the early strategy's static
+  ``early_capacity`` — derives from the bucket, so ragged request sizes
+  collapse onto O(log max_batch) compiled programs and the cache stays
+  warm forever.
+* Results scatter back per request id: each future resolves with exactly
+  its own (pred, scores) rows, bit-identical to a direct ``serve_batch``
+  call on the same rows (per-row scores are independent of batch-mates and
+  padding).
+
+``warmup`` pre-compiles every (version, strategy, bucket) signature outside
+the request path and marks the compile-counter baseline; after that the
+engine serves with ZERO recompiles (``serve_compiles_total`` pins it).
+Metrics: queue depth gauge, batch-fill-ratio histogram, per-version /
+per-strategy latency histograms, request/query counters, compile counter.
+
+Hot swap: ``swap`` atomically repoints the registry route, then drains the
+old version's queue and drops it — in-flight requests complete on the
+version they resolved (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.predict import bucket_size
+from repro.launch.registry import ModelRegistry, RegistryEntry
+from repro.launch.serve_svm import serve_batch, serving_cache_size
+from repro.obs.metrics import MetricsRegistry
+
+GroupKey = Tuple[str, int, str]        # (name, version, strategy)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 256      # max query rows popped into one bucketed batch
+    min_bucket: int = 8       # smallest pad bucket (predict.bucket_size lo)
+    use_pallas: Optional[bool] = None
+
+    @property
+    def max_bucket(self) -> int:
+        """Power-of-two ceiling of ``max_batch`` — the largest bucket the
+        batch manager ever forms from merged requests (a single oversized
+        request still buckets past it, in ``max_bucket`` multiples)."""
+        return max(self.min_bucket, 1 << (int(self.max_batch) - 1).bit_length())
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    X: jnp.ndarray            # (nq, d) query rows
+    nq: int
+    future: asyncio.Future    # resolves to (pred[nq], scores[nq, C])
+    t_enq: float
+
+
+class AsyncServingEngine:
+    """Single-process async serving front end over a ``ModelRegistry``."""
+
+    def __init__(self, registry: ModelRegistry,
+                 config: EngineConfig = EngineConfig(),
+                 metrics: Optional[MetricsRegistry] = None) -> None:
+        self.registry = registry
+        self.config = config
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._queues: Dict[GroupKey, Deque[_Request]] = {}
+        self._event: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._closed = False
+        self._rid = 0
+        # compile accounting: everything below the mark is warmup
+        self._cache_mark = serving_cache_size()
+        m = self.metrics
+        m.describe("serve_queue_depth", "query rows currently queued")
+        m.describe("serve_batch_fill_ratio",
+                   "real rows / bucket rows per served batch")
+        m.describe("serve_latency_seconds",
+                   "request latency, enqueue to future resolution")
+        m.describe("serve_compiles_total",
+                   "jit compiles observed after warmup (should stay 0)")
+
+    # -- lifecycle -------------------------------------------------------
+    async def start(self) -> "AsyncServingEngine":
+        if self._task is not None:
+            raise RuntimeError("engine already started")
+        self._event = asyncio.Event()
+        self._closed = False
+        self._task = asyncio.get_running_loop().create_task(self._batch_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Drain every queue, then stop the batch manager."""
+        if self._task is None:
+            return
+        await self.drain()
+        self._closed = True
+        self._event.set()
+        await self._task
+        self._task = None
+
+    async def __aenter__(self) -> "AsyncServingEngine":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- request path ----------------------------------------------------
+    async def submit(self, Xq, name: str = "default",
+                     version: Optional[int] = None,
+                     strategy: str = "early"):
+        """Enqueue one request; await returns (pred, scores) for exactly
+        the submitted rows.  Version resolution happens here, against the
+        route table as of NOW — the hot-swap boundary."""
+        if self._task is None or self._closed:
+            raise RuntimeError("engine is not running (use `async with` "
+                               "or await start())")
+        entry = self.registry.resolve(name, version)
+        man = entry.manifest
+        if strategy not in man.strategies:
+            raise ValueError(
+                f"{name}:{man.version} does not serve {strategy!r} "
+                f"(manifest allows {list(man.strategies)})")
+        X = jnp.asarray(Xq, entry.sm.Xsv.dtype)
+        if X.ndim == 1:
+            X = X[None, :]
+        self._rid += 1
+        req = _Request(rid=self._rid, X=X, nq=int(X.shape[0]),
+                       future=asyncio.get_running_loop().create_future(),
+                       t_enq=time.perf_counter())
+        key: GroupKey = (name, man.version, strategy)
+        self._queues.setdefault(key, deque()).append(req)
+        self.metrics.gauge("serve_queue_depth").set(self._depth())
+        self._event.set()
+        return await req.future
+
+    # -- batch manager ---------------------------------------------------
+    def _depth(self) -> int:
+        return sum(r.nq for dq in self._queues.values() for r in dq)
+
+    def _oldest_group(self) -> Optional[GroupKey]:
+        live = [(dq[0].t_enq, k) for k, dq in self._queues.items() if dq]
+        return min(live)[1] if live else None
+
+    def _pop_ready(self, key: GroupKey) -> List[_Request]:
+        """Continuous batching pop: drain the group's queue head until the
+        next request would overflow ``max_batch`` rows (a single oversized
+        request is served alone)."""
+        dq = self._queues[key]
+        reqs = [dq.popleft()]
+        total = reqs[0].nq
+        while dq and total + dq[0].nq <= self.config.max_batch:
+            r = dq.popleft()
+            reqs.append(r)
+            total += r.nq
+        return reqs
+
+    async def _batch_loop(self) -> None:
+        while True:
+            key = self._oldest_group()
+            if key is None:
+                if self._closed:
+                    return
+                self._event.clear()
+                await self._event.wait()
+                continue
+            reqs = self._pop_ready(key)
+            try:
+                self._serve_group(key, reqs)
+            except Exception as e:                 # noqa: BLE001 — scatter
+                for r in reqs:                     # failures to the callers
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            self.metrics.gauge("serve_queue_depth").set(self._depth())
+            # yield so producers/consumers run between batches
+            await asyncio.sleep(0)
+
+    def _serve_group(self, key: GroupKey, reqs: Sequence[_Request]) -> None:
+        name, version, strategy = key
+        entry: RegistryEntry = self.registry.resolve(name, version)
+        nq = sum(r.nq for r in reqs)
+        bucket = bucket_size(nq, lo=self.config.min_bucket,
+                             hi=self.config.max_bucket)
+        X = reqs[0].X if len(reqs) == 1 else jnp.concatenate(
+            [r.X for r in reqs])
+        pred, scores = serve_batch(entry.sm, X, entry.kern, strategy,
+                                   use_pallas=self.config.use_pallas,
+                                   bucket=bucket)
+        pred.block_until_ready()
+        t_done = time.perf_counter()
+
+        m = self.metrics
+        ver = str(version)
+        m.counter("serve_requests_total", model=name, version=ver,
+                  strategy=strategy).inc(len(reqs))
+        m.counter("serve_queries_total", model=name, version=ver,
+                  strategy=strategy).inc(nq)
+        m.histogram("serve_batch_fill_ratio").observe(nq / bucket)
+        hist = m.histogram("serve_latency_seconds", model=name, version=ver,
+                           strategy=strategy)
+        cache = serving_cache_size()
+        if cache > self._cache_mark:
+            m.counter("serve_compiles_total").inc(cache - self._cache_mark)
+            self._cache_mark = cache
+        off = 0
+        for r in reqs:
+            if not r.future.done():                # (cancelled callers skip)
+                r.future.set_result(
+                    (pred[off: off + r.nq], scores[off: off + r.nq]))
+            hist.observe(t_done - r.t_enq)
+            off += r.nq
+
+    # -- warmup ----------------------------------------------------------
+    def warmup(self, name: Optional[str] = None,
+               strategies: Optional[Sequence[str]] = None,
+               buckets: Optional[Sequence[int]] = None) -> int:
+        """Compile every (version, strategy, bucket) signature outside the
+        request path, then mark the compile-counter baseline: any compile
+        the engine observes afterwards increments ``serve_compiles_total``.
+        Returns the number of executables compiled during warmup."""
+        names = [name] if name is not None else self.registry.names()
+        if buckets is None:
+            b, buckets = self.config.min_bucket, []
+            while b <= self.config.max_bucket:
+                buckets.append(b)
+                b *= 2
+        before = serving_cache_size()
+        for nm in names:
+            for ver in self.registry.versions(nm):
+                entry = self.registry.resolve(nm, ver)
+                d = entry.sm.Xsv.shape[-1]
+                strats = (strategies if strategies is not None
+                          else entry.manifest.strategies)
+                for strat in strats:
+                    for b in buckets:
+                        Xz = jnp.zeros((b, d), entry.sm.Xsv.dtype)
+                        pred, _ = serve_batch(
+                            entry.sm, Xz, entry.kern, strat,
+                            use_pallas=self.config.use_pallas, bucket=b)
+                        pred.block_until_ready()
+        compiled = serving_cache_size() - before
+        self.metrics.counter("serve_warmup_compiles_total").inc(compiled)
+        self._cache_mark = serving_cache_size()
+        return compiled
+
+    # -- hot swap / drain ------------------------------------------------
+    def _queued_matching(self, name: Optional[str],
+                         version: Optional[int]) -> int:
+        return sum(
+            len(dq) for (nm, ver, _), dq in self._queues.items()
+            if (name is None or nm == name)
+            and (version is None or ver == version))
+
+    async def drain(self, name: Optional[str] = None,
+                    version: Optional[int] = None) -> None:
+        """Wait until no queued request references (name, version);
+        ``None`` matches everything (full drain)."""
+        while self._queued_matching(name, version):
+            self._event.set()
+            await asyncio.sleep(0)
+
+    async def swap(self, name: str, version: int,
+                   drop_old: bool = True) -> Optional[int]:
+        """Hot-swap ``name`` to ``version``: atomically repoint the route
+        table (new submits resolve the new version immediately), then drain
+        requests still queued on the old version and drop it.  Returns the
+        previous default version."""
+        old = self.registry.set_default(name, version)
+        if drop_old and old is not None and old != version:
+            await self.drain(name, old)
+            self.registry.drop(name, old)
+        return old
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        j = self.metrics.to_json()
+        compiles = sum(v for k, v in j["counters"].items()
+                       if k.startswith("serve_compiles_total"))
+        return {
+            "queue_depth": self._depth(),
+            "requests": sum(v for k, v in j["counters"].items()
+                            if k.startswith("serve_requests_total")),
+            "queries": sum(v for k, v in j["counters"].items()
+                           if k.startswith("serve_queries_total")),
+            "compiles_after_warmup": int(compiles),
+            "models": self.registry.to_json()["route"],
+        }

@@ -38,7 +38,7 @@ from repro.core.dcsvm import DCSVMConfig, DCSVMModel
 from repro.core.kernels import Kernel, gram, resolve_use_pallas
 from repro.core.kkmeans import KKMeansModel
 from repro.core.multiclass import MulticlassModel, fit_ova
-from repro.core.predict import _early_program, early_capacity
+from repro.core.predict import _early_program, bucket_size, early_capacity
 from repro.obs.metrics import MetricsRegistry
 
 Array = jax.Array
@@ -272,7 +272,8 @@ def serve_scores_bcm(sm: ServingModel, Xq: Array, kern: Kernel,
 
 
 def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
-                use_pallas: Optional[bool] = None) -> Tuple[Array, Array]:
+                use_pallas: Optional[bool] = None,
+                bucket: Optional[int] = None) -> Tuple[Array, Array]:
     """One batched request: returns (predictions, scores).
 
     Predictions are class labels (argmax over score columns) for
@@ -281,11 +282,30 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
     inlier/outlier labels for ``task == "ocsvm"`` (sign of score - rho; the
     returned scores are the offset decision values) — every branch is on a
     static shape, so each path stays one compiled program per strategy.
-    """
+
+    ``bucket``, when given, pads the batch with zero query rows to exactly
+    ``bucket`` rows before scoring and slices the results back to the real
+    rows.  Everything shape-derived — the jit signature AND the early
+    strategy's static buffer capacity (``early_capacity``) — then depends
+    only on the bucket, so ragged request sizes sharing a bucket share ONE
+    compiled program (unbucketed, every distinct batch size recompiled the
+    early program through its shape-derived ``cap``).  Per-row scores are
+    independent of the padding rows, so bucketed results on the real rows
+    match the unbucketed ones."""
+    nq = Xq.shape[0]
+    if bucket is not None:
+        pad = int(bucket) - nq
+        if pad < 0:
+            raise ValueError(f"bucket={bucket} smaller than the batch ({nq})")
+        if pad:
+            Xq = jnp.concatenate(
+                [Xq, jnp.zeros((pad, Xq.shape[1]), Xq.dtype)])
     up = resolve_use_pallas(use_pallas)
     if strategy == "exact":
         scores = serve_scores_exact(sm, Xq, kern, use_pallas=up)
     elif strategy == "early":
+        # cap derives from the (possibly padded) batch shape: with a bucket
+        # it is a pure function of the bucket, keeping the jit cache warm
         cap = early_capacity(Xq.shape[0], sm.k)
         scores = serve_scores_early(sm, Xq, kern, cap, use_pallas=up)
     elif strategy == "bcm":
@@ -295,6 +315,7 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
         scores = serve_scores_bcm(sm, Xq, kern)
     else:
         raise ValueError(f"unknown strategy: {strategy}")
+    scores = scores[:nq]
     if sm.task == "svr":
         return scores[:, 0], scores
     if sm.task == "ocsvm":
@@ -304,12 +325,40 @@ def serve_batch(sm: ServingModel, Xq: Array, kern: Kernel, strategy: str,
     return sm.classes[jnp.argmax(scores, axis=1)], scores
 
 
+def serving_cache_size() -> int:
+    """Total jit-cache entries across every serving program — the compile
+    counter's raw signal.  Any growth between two reads means a serving
+    call compiled a fresh executable (a new batch/bucket shape, strategy,
+    model signature, or capacity); the engine and the request loop read it
+    around their timed regions to pin "zero recompiles after warmup"."""
+    from repro.core.predict import _decision_scan
+
+    progs = (_early_program, _decision_scan, serve_scores_exact,
+             serve_scores_bcm)
+    return sum(p._cache_size() for p in progs)
+
+
 def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
-                     batches: Array, use_pallas: Optional[bool] = None,
+                     batches, use_pallas: Optional[bool] = None,
                      warmup: int = 2,
-                     metrics: Optional[MetricsRegistry] = None) -> dict:
-    """Drive the jitted request program over (num_batches, batch, d) queries,
-    sync per response (a real serving loop), and report latency/throughput.
+                     metrics: Optional[MetricsRegistry] = None,
+                     bucketed: bool = False) -> dict:
+    """Drive the jitted request program over a query stream, sync per
+    response (a real serving loop), and report latency/throughput.
+
+    ``batches`` is either a stacked (num_batches, batch, d) array (one
+    static shape — the historical fixed-batch loop) or a sequence of
+    (nq_i, d) arrays with RAGGED sizes; ``bucketed=True`` pads each batch
+    to its power-of-two bucket (``predict.bucket_size``) so ragged sizes
+    share compiled programs.
+
+    Warmup covers EVERY distinct compiled signature (batch shape x bucket)
+    appearing in the stream, not just the first batch's: with ragged
+    batches, a first-shape-only warmup leaves later shapes to compile
+    inside the timed region, and those multi-hundred-ms outliers corrupt
+    p95/p99.  The report's ``compiles_timed`` (jit-cache growth across the
+    timed loop, ``serving_cache_size``) pins the invariant: after warmup
+    the timed region must serve with ZERO recompiles.
 
     With ``metrics``, each response latency feeds a per-strategy streaming
     histogram (``serve_latency_seconds``) and the loop maintains
@@ -318,36 +367,57 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
     bucketed program paid (queries past ``early_capacity`` slots per
     cluster).  Routing stats are computed OUTSIDE the timed loop — the
     measured latencies stay those of the serving program alone."""
-    num_batches, batch, _ = batches.shape
-    for i in range(min(warmup, num_batches)):
-        pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
-        pred.block_until_ready()
+    if isinstance(batches, (list, tuple)):
+        blist = [jnp.asarray(b) for b in batches]
+    else:
+        blist = [batches[i] for i in range(batches.shape[0])]
+    sizes = [int(b.shape[0]) for b in blist]
+    buckets = [bucket_size(n) if bucketed else None for n in sizes]
+    uniform = len(set(sizes)) == 1
+
+    # warm every distinct (shape, bucket) signature before timing
+    distinct = {}
+    for b, bk in zip(blist, buckets):
+        distinct.setdefault((b.shape, bk), (b, bk))
+    for _ in range(max(1, warmup)):
+        for b, bk in distinct.values():
+            pred, _ = serve_batch(sm, b, kern, strategy, use_pallas,
+                                  bucket=bk)
+            pred.block_until_ready()
+
     hist = (metrics.histogram("serve_latency_seconds", strategy=strategy)
             if metrics is not None else None)
     lat = []
+    cache0 = serving_cache_size()
     t_all = time.perf_counter()
-    for i in range(num_batches):
+    for b, bk in zip(blist, buckets):
         t0 = time.perf_counter()
-        pred, _ = serve_batch(sm, batches[i], kern, strategy, use_pallas)
+        pred, _ = serve_batch(sm, b, kern, strategy, use_pallas, bucket=bk)
         pred.block_until_ready()
         lat.append(time.perf_counter() - t0)
         if hist is not None:
             hist.observe(lat[-1])
     wall = time.perf_counter() - t_all
+    compiles_timed = serving_cache_size() - cache0
     if metrics is not None:
         metrics.counter("serve_requests_total", strategy=strategy).inc(
-            num_batches)
+            len(blist))
         metrics.counter("serve_queries_total", strategy=strategy).inc(
-            num_batches * batch)
+            sum(sizes))
+        if compiles_timed:
+            metrics.counter("serve_compiles_total", strategy=strategy).inc(
+                compiles_timed)
         if strategy == "early":
-            _record_route_metrics(sm, kern, batches, metrics,
+            _record_route_metrics(sm, kern, blist, buckets, metrics,
                                   resolve_use_pallas(use_pallas))
     lat_ms = np.sort(np.asarray(lat)) * 1e3
     return {
         "strategy": strategy,
-        "batch": int(batch),
-        "batches": int(num_batches),
-        "qps": num_batches * batch / max(wall, 1e-9),
+        "batch": sizes[0] if uniform else 0,   # 0 = ragged stream
+        "batches": len(blist),
+        "queries": int(sum(sizes)),
+        "compiles_timed": int(compiles_timed),
+        "qps": sum(sizes) / max(wall, 1e-9),
         "lat_ms_mean": float(lat_ms.mean()),
         "lat_ms_p50": float(np.percentile(lat_ms, 50)),
         "lat_ms_p95": float(np.percentile(lat_ms, 95)),
@@ -355,28 +425,85 @@ def run_request_loop(sm: ServingModel, kern: Kernel, strategy: str,
     }
 
 
-def _record_route_metrics(sm: ServingModel, kern: Kernel, batches: Array,
+def _record_route_metrics(sm: ServingModel, kern: Kernel, blist, buckets,
                           metrics: MetricsRegistry, use_pallas: bool) -> None:
     """Early-strategy routing telemetry: per-cluster query distribution and
     the number of EXTRA bucketed scoring rounds caused by per-batch cluster
     loads above ``early_capacity`` (the fused program's per-round buffer)."""
     from repro.core.kkmeans import assign_points
 
-    num_batches, batch, d = batches.shape
     route_model = KKMeansModel(Xm=sm.Xm, W=sm.Wm, s=sm.sm)
-    assign, _ = assign_points(kern, route_model, batches.reshape(-1, d),
+    assign, _ = assign_points(kern, route_model, jnp.concatenate(blist),
                               use_pallas=use_pallas)
-    assign = np.asarray(assign).reshape(num_batches, batch)
-    total = np.bincount(assign.ravel(), minlength=sm.k)
+    assign = np.asarray(assign)
+    total = np.bincount(assign, minlength=sm.k)
     for c in range(sm.k):
         if total[c]:
             metrics.counter("serve_route_total", cluster=str(c)).inc(
                 int(total[c]))
-    cap = early_capacity(batch, sm.k)
-    overflow = sum(
-        max(0, -(-int(np.bincount(row, minlength=sm.k).max()) // cap) - 1)
-        for row in assign)
+    overflow = 0
+    off = 0
+    for b, bk in zip(blist, buckets):
+        row = assign[off: off + b.shape[0]]
+        off += b.shape[0]
+        if row.size == 0:
+            continue
+        # the program's capacity is bucket-derived when serving bucketed
+        cap = early_capacity(bk if bk is not None else b.shape[0], sm.k)
+        overflow += max(
+            0, -(-int(np.bincount(row, minlength=sm.k).max()) // cap) - 1)
     metrics.counter("serve_early_overflow_rounds_total").inc(overflow)
+
+
+def _serve_async(args, model, Xpool: np.ndarray) -> None:
+    """--serve-async: register the model, warm every bucket signature, and
+    drive a Poisson trace of mixed-size requests through the continuous-
+    batching engine (imports are local: registry/engine import this
+    module)."""
+    import asyncio
+
+    from repro.launch.engine import AsyncServingEngine, EngineConfig
+    from repro.launch.registry import ModelRegistry
+
+    registry = ModelRegistry()
+    man = registry.register("default", model,
+                            with_bcm=(args.strategy == "bcm"))
+    if args.registry:
+        registry.save(args.registry)
+        print(f"registry manifests -> {args.registry}")
+    engine = AsyncServingEngine(registry,
+                                EngineConfig(max_batch=args.batch))
+    warm = engine.warmup(strategies=[args.strategy])
+    rng = np.random.default_rng(args.seed)
+    n_req = args.batches
+    sizes = rng.choice([1, 4, 16, 64], size=n_req, p=[0.35, 0.3, 0.25, 0.1])
+    arrivals = np.cumsum(rng.exponential(1.0 / args.qps, size=n_req))
+    lats: list = []
+
+    async def one(delay: float, size: int) -> None:
+        await asyncio.sleep(delay)
+        Xq = Xpool[rng.integers(0, Xpool.shape[0], size=size)]
+        t0 = time.perf_counter()
+        await engine.submit(Xq, "default", strategy=args.strategy)
+        lats.append(time.perf_counter() - t0)
+
+    async def drive() -> None:
+        async with engine:
+            await asyncio.gather(*[
+                one(float(arrivals[i]), int(sizes[i])) for i in range(n_req)])
+
+    asyncio.run(drive())
+    ms = np.asarray(lats) * 1e3
+    stats = engine.stats()
+    print(f"async {args.strategy} v{man.version}: {n_req} requests "
+          f"({int(sizes.sum())} queries) at {args.qps:.0f} offered rps | "
+          f"lat ms p50 {np.percentile(ms, 50):.2f} "
+          f"p95 {np.percentile(ms, 95):.2f} p99 {np.percentile(ms, 99):.2f} "
+          f"| warmup compiles {warm}, after warmup "
+          f"{stats['compiles_after_warmup']}")
+    if args.metrics_out:
+        prom = engine.metrics.dump(args.metrics_out)
+        print(f"metrics -> {args.metrics_out} and {prom}", flush=True)
 
 
 def main(argv=None) -> None:
@@ -408,6 +535,16 @@ def main(argv=None) -> None:
                     help="dump serving metrics (latency histograms, "
                          "request/route counters) as JSON at this path plus "
                          "Prometheus text exposition next to it (.prom)")
+    ap.add_argument("--serve-async", action="store_true",
+                    help="serve through the asyncio continuous-batching "
+                         "engine (launch/engine.py): Poisson arrivals with "
+                         "mixed request sizes against the versioned "
+                         "registry, instead of the fixed-batch sync loop")
+    ap.add_argument("--qps", type=float, default=500.0,
+                    help="offered Poisson request rate for --serve-async")
+    ap.add_argument("--registry", default="",
+                    help="write the model registry's manifests JSON here "
+                         "(--serve-async)")
     args = ap.parse_args(argv)
 
     kern = Kernel("rbf", gamma=args.gamma)
@@ -447,6 +584,10 @@ def main(argv=None) -> None:
     else:
         acc = accuracy_multiclass(yte, pred)
         print(f"serving accuracy ({args.strategy}): {acc:.4f}")
+
+    if args.serve_async:
+        _serve_async(args, model, np.asarray(Xte))
+        return
 
     rng = np.random.default_rng(args.seed)
     idx = rng.integers(0, Xte.shape[0], size=(args.batches, args.batch))

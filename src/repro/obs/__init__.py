@@ -22,6 +22,7 @@ from repro.obs.trace import (  # noqa: F401
 from repro.obs.spans import SpanTracer, span  # noqa: F401
 from repro.obs.metrics import (  # noqa: F401
     Counter,
+    Gauge,
     LatencyHistogram,
     MetricsRegistry,
 )

@@ -31,6 +31,24 @@ class Counter:
         self.value += n
 
 
+class Gauge:
+    """Last-written instantaneous value (queue depth, in-flight requests)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def inc(self, n: float = 1) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1) -> None:
+        self.value -= n
+
+
 class LatencyHistogram:
     """Streaming histogram over fixed log-spaced bucket upper bounds."""
 
@@ -97,11 +115,16 @@ class MetricsRegistry:
 
     def __init__(self) -> None:
         self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, LatencyHistogram] = {}
         self._hist_meta: Dict[str, Tuple[str, Dict[str, str]]] = {}
+        self._help: Dict[str, str] = {}
 
     def counter(self, name: str, **labels: str) -> Counter:
         return self._counters.setdefault(_key(name, labels), Counter())
+
+    def gauge(self, name: str, **labels: str) -> Gauge:
+        return self._gauges.setdefault(_key(name, labels), Gauge())
 
     def histogram(self, name: str, **labels: str) -> LatencyHistogram:
         key = _key(name, labels)
@@ -110,26 +133,44 @@ class MetricsRegistry:
             self._hist_meta[key] = (name, labels)
         return self._hists[key]
 
+    def describe(self, name: str, text: str) -> None:
+        """Attach a ``# HELP`` line to a metric base name."""
+        self._help[name] = text
+
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out: Dict[str, Any] = {
             "counters": {k: c.value for k, c in sorted(self._counters.items())},
             "histograms": {k: h.to_json() for k, h in sorted(self._hists.items())},
         }
+        if self._gauges:
+            out["gauges"] = {k: g.value for k, g in sorted(self._gauges.items())}
+        return out
+
+    def _header(self, lines: List[str], seen: set, base: str,
+                kind: str) -> None:
+        """HELP + TYPE lines, once per (base name, kind).  The seen set is
+        PER KIND: a counter and a histogram sharing a base name must both
+        get their TYPE line (one shared set suppressed the second kind's)."""
+        if base in seen:
+            return
+        seen.add(base)
+        lines.append(f"# HELP {base} {self._help.get(base, base)}")
+        lines.append(f"# TYPE {base} {kind}")
 
     def to_prometheus_text(self) -> str:
         lines: List[str] = []
-        seen_types = set()
+        seen_counters: set = set()
+        seen_gauges: set = set()
+        seen_hists: set = set()
         for key, c in sorted(self._counters.items()):
-            base = key.split("{", 1)[0]
-            if base not in seen_types:
-                lines.append(f"# TYPE {base} counter")
-                seen_types.add(base)
+            self._header(lines, seen_counters, key.split("{", 1)[0], "counter")
             lines.append(f"{key} {c.value}")
+        for key, g in sorted(self._gauges.items()):
+            self._header(lines, seen_gauges, key.split("{", 1)[0], "gauge")
+            lines.append(f"{key} {g.value:g}")
         for key, h in sorted(self._hists.items()):
             name, labels = self._hist_meta[key]
-            if name not in seen_types:
-                lines.append(f"# TYPE {name} histogram")
-                seen_types.add(name)
+            self._header(lines, seen_hists, name, "histogram")
             cum = 0
             for i, cnt in enumerate(h.counts):
                 cum += cnt
@@ -138,7 +179,8 @@ class MetricsRegistry:
                     f"{_key(name + '_bucket', {**labels, 'le': le})} {cum}")
             lines.append(f"{_key(name + '_sum', labels)} {h.sum:.9g}")
             lines.append(f"{_key(name + '_count', labels)} {h.total}")
-        return "\n".join(lines) + "\n"
+        # an empty registry exposes nothing, not a bare newline
+        return "\n".join(lines) + "\n" if lines else ""
 
     def dump(self, json_path: str) -> str:
         """Write JSON to ``json_path`` and Prometheus text next to it

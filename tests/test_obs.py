@@ -24,7 +24,7 @@ from repro.core import Kernel
 from repro.core.solver import (solve_box_qp, solve_box_qp_matvec,
                                solve_eq_qp, solve_with_shrinking)
 from repro.data import gaussian_mixture
-from repro.obs.metrics import Counter, LatencyHistogram, MetricsRegistry
+from repro.obs.metrics import Counter, Gauge, LatencyHistogram, MetricsRegistry
 from repro.obs.spans import SpanTracer, span
 from repro.obs.trace import (TRACE_COLS, ConvTrace, trace_fetch, trace_init,
                              trace_record, trace_summary)
@@ -251,6 +251,48 @@ def test_metrics_registry_labels_and_prometheus_text():
                 and 'le="+Inf"' in l]
     assert inf_line and inf_line[0].split()[-1] == "2"
     assert 'serve_latency_seconds_count{strategy="early"} 2' in text
+
+
+def test_prometheus_type_lines_not_shared_across_kinds():
+    """Regression: ``to_prometheus_text`` used ONE ``seen_types`` set for
+    counters and histograms, so a histogram sharing a counter's base name
+    lost its ``# TYPE`` line.  Per-kind tracking emits both."""
+    reg = MetricsRegistry()
+    reg.counter("serve_work").inc(2)
+    reg.histogram("serve_work").observe(0.5)     # same base name, other kind
+    text = reg.to_prometheus_text()
+    assert "# TYPE serve_work counter" in text
+    assert "# TYPE serve_work histogram" in text
+    # and each exposition family got a HELP line
+    assert text.count("# HELP serve_work ") == 2
+
+
+def test_prometheus_empty_registry_is_empty_string():
+    """Regression: an empty registry emitted ``"\\n"`` (one blank line) —
+    scrapers treat that differently from "no metrics"."""
+    assert MetricsRegistry().to_prometheus_text() == ""
+
+
+def test_prometheus_help_and_gauge_exposition():
+    reg = MetricsRegistry()
+    reg.describe("serve_queue_depth", "query rows currently queued")
+    g = reg.gauge("serve_queue_depth")
+    g.set(7)
+    g.inc(2)
+    g.dec()
+    assert isinstance(g, Gauge) and g.value == 8
+    text = reg.to_prometheus_text()
+    assert "# HELP serve_queue_depth query rows currently queued" in text
+    assert "# TYPE serve_queue_depth gauge" in text
+    assert "serve_queue_depth 8" in text
+    assert text.endswith("\n")
+    # undescribed metrics fall back to the base name as HELP text
+    reg.counter("serve_requests_total").inc()
+    assert ("# HELP serve_requests_total serve_requests_total"
+            in reg.to_prometheus_text())
+    # gauges only appear in to_json when present (schema compatibility)
+    assert "gauges" in reg.to_json()
+    assert MetricsRegistry().to_json().keys() == {"counters", "histograms"}
 
 
 def test_metrics_registry_dump(tmp_path):

@@ -1,0 +1,340 @@
+"""Async serving engine + versioned registry tests.
+
+Covers the ragged-batch recompile fixes (bucket-derived capacity, ONE
+compile across ragged sizes sharing a bucket), queue/bucketing determinism
+(async results bit-equal to direct ``serve_batch``), registry
+resolve/hot-swap under in-flight requests, manifest round-trips for all
+three tasks, and the engine's zero-recompiles-after-warmup invariant under
+a Poisson trace with mixed request sizes and two registered versions.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import DCSVMConfig, Kernel, fit, fit_ova
+from repro.core.predict import _early_program, bucket_size
+from repro.core.tasks import EpsilonSVR, OneClassSVM
+from repro.data import (
+    friedman1,
+    gaussian_mixture_multiclass,
+    gaussian_with_outliers,
+    train_test_split,
+)
+from repro.launch.engine import AsyncServingEngine, EngineConfig
+from repro.launch.registry import ModelManifest, ModelRegistry
+from repro.launch.serve_svm import (
+    export_serving_model,
+    run_request_loop,
+    serve_batch,
+    serving_cache_size,
+)
+
+KERN = Kernel("rbf", gamma=16.0)
+
+
+@pytest.fixture(scope="module")
+def ova_models():
+    """Two versions of a 3-class OVA model (different C) + a query pool."""
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(0), 700,
+                                       n_classes=3, d=8, spread=0.10)
+    Xtr, ytr, Xte, yte = train_test_split(jax.random.PRNGKey(1), X, y)
+    cfg1 = DCSVMConfig(kernel=KERN, C=4.0, k=4, levels=1, m=200, tol=1e-3)
+    cfg2 = DCSVMConfig(kernel=KERN, C=2.0, k=4, levels=1, m=200, tol=1e-3)
+    return fit_ova(cfg1, Xtr, ytr), fit_ova(cfg2, Xtr, ytr), np.asarray(Xte)
+
+
+@pytest.fixture(scope="module")
+def registry2(ova_models):
+    m1, m2, _ = ova_models
+    reg = ModelRegistry()
+    reg.register("mix", m1)
+    reg.register("mix", m2)
+    return reg
+
+
+def _mixed_batches(Xpool, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Xpool[rng.integers(0, Xpool.shape[0], size=s)] for s in sizes]
+
+
+# ---------------------------------------------------------------------------
+# bucket-shape capacity: the ragged-batch recompile fixes
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_policy():
+    assert [bucket_size(n) for n in (0, 1, 7, 8, 9, 64, 100, 300)] == \
+        [8, 8, 8, 8, 16, 64, 128, 512]
+    # past hi: multiples of hi, not the next power of two
+    assert bucket_size(5000, hi=4096) == 8192
+    assert bucket_size(9000, hi=4096) == 12288
+
+
+def test_one_compile_across_ragged_sizes(ova_models):
+    """THE recompile bug: unbucketed, every distinct batch size is a fresh
+    ``early_capacity`` static arg and a fresh compile of the early program.
+    Bucketed, ragged sizes sharing one bucket share ONE compile."""
+    m1, _, Xpool = ova_models
+    sm = export_serving_model(m1)
+    sizes = [33, 50, 64, 40, 57]                  # all bucket to 64
+    batches = _mixed_batches(Xpool, sizes)
+    before = _early_program._cache_size()
+    for b in batches:
+        serve_batch(sm, jnp.asarray(b), KERN, "early", bucket=64)
+    assert _early_program._cache_size() - before == 1
+    # the unbucketed path compiles per distinct size (the defect this PR
+    # fixes in every serving loop; kept for single-shot compatibility).
+    # size 64 is excluded: its raw signature equals the warmed bucket's.
+    ragged = [b for b in batches if b.shape[0] != 64]
+    before = _early_program._cache_size()
+    for b in ragged:
+        serve_batch(sm, jnp.asarray(b), KERN, "early")
+    assert _early_program._cache_size() - before == len(ragged)
+
+
+@pytest.mark.parametrize("strategy", ["exact", "early", "bcm"])
+def test_bucketed_bit_identical_to_unbucketed(ova_models, strategy):
+    """Padding rows must not perturb the real rows: bucketed scores are
+    bit-identical to the unbucketed ``serve_batch`` on the same rows."""
+    m1, _, Xpool = ova_models
+    sm = export_serving_model(m1)
+    for size in (3, 17, 33):
+        Xq = jnp.asarray(_mixed_batches(Xpool, [size], seed=size)[0])
+        pred_u, scores_u = serve_batch(sm, Xq, KERN, strategy)
+        pred_b, scores_b = serve_batch(sm, Xq, KERN, strategy,
+                                       bucket=bucket_size(size))
+        np.testing.assert_array_equal(np.asarray(scores_u),
+                                      np.asarray(scores_b))
+        np.testing.assert_array_equal(np.asarray(pred_u), np.asarray(pred_b))
+
+
+def test_serve_batch_rejects_undersized_bucket(ova_models):
+    m1, _, Xpool = ova_models
+    sm = export_serving_model(m1)
+    with pytest.raises(ValueError, match="bucket"):
+        serve_batch(sm, jnp.asarray(Xpool[:32]), KERN, "early", bucket=16)
+
+
+def test_request_loop_warms_every_ragged_shape(ova_models):
+    """Pre-fix, ``run_request_loop`` warmed only the first batch's shape, so
+    ragged streams compiled INSIDE the timed region (corrupting p95/p99).
+    Now every distinct bucket signature is warmed first: the report's
+    ``compiles_timed`` (jit-cache growth across the timed loop) is zero."""
+    m1, _, Xpool = ova_models
+    sm = export_serving_model(m1)
+    batches = _mixed_batches(Xpool, [5, 12, 33, 64, 9, 50, 2])
+    rep = run_request_loop(sm, KERN, "early", batches, warmup=1,
+                           bucketed=True)
+    assert rep["compiles_timed"] == 0
+    assert rep["batch"] == 0 and rep["batches"] == 7
+    assert rep["queries"] == 5 + 12 + 33 + 64 + 9 + 50 + 2
+    assert rep["lat_ms_p99"] >= rep["lat_ms_p50"] > 0
+
+
+# ---------------------------------------------------------------------------
+# manifests
+# ---------------------------------------------------------------------------
+
+def test_manifest_roundtrip_all_tasks():
+    """svc / svr / ocsvm (incl. per-cluster rho_c of an early-stopped
+    one-class model) manifests all survive the JSON round trip."""
+    reg = ModelRegistry()
+    kern = Kernel("rbf", gamma=4.0)
+    # svc
+    X, y = gaussian_mixture_multiclass(jax.random.PRNGKey(2), 300,
+                                       n_classes=3, d=6, spread=0.1)
+    cfg = DCSVMConfig(kernel=kern, C=4.0, k=2, levels=1, m=100, tol=1e-2)
+    reg.register("svc", fit_ova(cfg, X, y))
+    # svr
+    Xr, yr = friedman1(jax.random.PRNGKey(3), 300)
+    reg.register("svr", fit(cfg, Xr, yr, task=EpsilonSVR(eps=0.2)),
+                 with_bcm=False)
+    # ocsvm, early-stopped => per-cluster rho_c
+    Xo, _ = gaussian_with_outliers(jax.random.PRNGKey(4), 300)
+    cfg_o = DCSVMConfig(kernel=kern, C=1.0, k=2, levels=1, m=100, tol=1e-2,
+                        early_stop_level=1)
+    reg.register("ocsvm", fit(cfg_o, Xo, task=OneClassSVM(nu=0.2)))
+
+    for name, task, n_classes in (("svc", "svc", 3), ("svr", "svr", 0),
+                                  ("ocsvm", "ocsvm", 1)):
+        man = reg.resolve(name).manifest
+        assert man.task == task and man.n_classes == n_classes
+        rt = ModelManifest.from_json(man.to_json())
+        assert rt == man
+        assert rt.make_kernel() == kern
+    assert reg.resolve("svr").manifest.eps == pytest.approx(0.2)
+    assert reg.resolve("svr").manifest.strategies == ("exact", "early")
+    oc = reg.resolve("ocsvm").manifest
+    assert oc.nu == pytest.approx(0.2)
+    assert len(oc.rho_c) == 2            # k=2 per-cluster offsets survived
+    # manifests JSON is what --registry dumps
+    j = reg.to_json()
+    assert {m["name"] for m in j["models"]} == {"svc", "svr", "ocsvm"}
+
+
+def test_registry_versioning_and_routing(registry2):
+    assert registry2.versions("mix") == [1, 2]
+    assert registry2.default_version("mix") == 1        # first stays default
+    assert registry2.resolve("mix").version == 1
+    assert registry2.resolve("mix", 2).version == 2
+    with pytest.raises(KeyError):
+        registry2.resolve("mix", 9)
+    with pytest.raises(KeyError):
+        registry2.resolve("nope")
+    with pytest.raises(ValueError, match="default"):
+        registry2.drop("mix", 1)                        # routed default
+    with pytest.raises(ValueError, match="registered"):
+        registry2.register("mix", object(), version=2)  # duplicate version
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+def test_async_bit_equal_to_direct_serve(registry2):
+    """Queue/bucketing determinism: whatever the batch manager merges, each
+    request's rows come back bit-identical to a direct ``serve_batch`` on
+    those rows (per-row scores are independent of batch-mates/padding)."""
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)   # any pool works
+    sizes = [1, 7, 33, 12, 64, 50, 3, 28]
+    reqs = _mixed_batches(Xpool, sizes, seed=5)
+
+    async def main():
+        engine = AsyncServingEngine(registry2, EngineConfig(max_batch=64))
+        engine.warmup("mix", strategies=["early", "exact"])
+        async with engine:
+            outs = await asyncio.gather(*[
+                engine.submit(r, "mix", strategy="early") for r in reqs])
+        return outs
+
+    outs = asyncio.run(main())
+    entry = registry2.resolve("mix")
+    for r, (pred, scores) in zip(reqs, outs):
+        dp, ds = serve_batch(entry.sm, jnp.asarray(r), entry.kern, "early",
+                             bucket=bucket_size(len(r)))
+        np.testing.assert_array_equal(np.asarray(scores), np.asarray(ds))
+        np.testing.assert_array_equal(np.asarray(pred), np.asarray(dp))
+
+
+def test_engine_zero_compiles_after_warmup_poisson(registry2):
+    """Acceptance: Poisson arrivals, mixed sizes, BOTH registered versions —
+    zero recompiles after warmup, pinned by the compile counter AND the raw
+    jit-cache size."""
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)
+    rng = np.random.default_rng(7)
+    n_req = 40
+    sizes = rng.choice([1, 4, 16, 64], size=n_req, p=[0.35, 0.3, 0.25, 0.1])
+    gaps = rng.exponential(1.0 / 2000.0, size=n_req)
+
+    engine = AsyncServingEngine(registry2, EngineConfig(max_batch=64))
+    engine.warmup("mix", strategies=["early"])
+    cache_after_warmup = serving_cache_size()
+
+    async def main():
+        async with engine:
+            async def one(i):
+                await asyncio.sleep(float(np.sum(gaps[: i + 1])))
+                X = Xpool[rng.integers(0, Xpool.shape[0], size=int(sizes[i]))]
+                return await engine.submit(X, "mix", version=1 + i % 2,
+                                           strategy="early")
+            await asyncio.gather(*[one(i) for i in range(n_req)])
+
+    asyncio.run(main())
+    assert serving_cache_size() == cache_after_warmup
+    st = engine.stats()
+    assert st["compiles_after_warmup"] == 0
+    assert st["requests"] == n_req and st["queries"] == int(sizes.sum())
+    # engine metrics made it through: per-version latency histograms,
+    # fill-ratio histogram, queue-depth gauge
+    j = engine.metrics.to_json()
+    assert any('version="1"' in k for k in j["histograms"])
+    assert any('version="2"' in k for k in j["histograms"])
+    assert any(k.startswith("serve_batch_fill_ratio")
+               for k in j["histograms"])
+    assert j["gauges"]["serve_queue_depth"] == 0
+
+
+def test_hot_swap_under_inflight_requests(ova_models):
+    """Swap repoints NEW submits atomically; requests already queued on the
+    old version drain on it, then the old version is dropped."""
+    m1, m2, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+    reg.register("m", m2)
+    results = {}
+
+    async def main():
+        engine = AsyncServingEngine(reg, EngineConfig(max_batch=32))
+        engine.warmup("m", strategies=["early"])
+        async with engine:
+            pre = [asyncio.ensure_future(
+                engine.submit(Xpool[i * 8:(i + 1) * 8], "m",
+                              strategy="early")) for i in range(4)]
+            # let the submit coroutines run to their enqueue point so they
+            # resolve v1 (the route table as of NOW) before the swap lands
+            await asyncio.sleep(0)
+            old = await engine.swap("m", 2)
+            assert old == 1
+            post = await engine.submit(Xpool[:8], "m", strategy="early")
+            results["pre"] = [await f for f in pre]
+            results["post"] = post
+        assert reg.versions("m") == [2]       # drained, then dropped
+        assert reg.default_version("m") == 2
+
+    asyncio.run(main())
+    # pre-swap requests were served by v1, post-swap by v2 — each matches a
+    # direct serve against the respective model
+    sm2 = reg.resolve("m", 2).sm
+    sm1 = export_serving_model(m1)
+    for i, (pred, scores) in enumerate(results["pre"]):
+        _, ref = serve_batch(sm1, jnp.asarray(Xpool[i * 8:(i + 1) * 8]),
+                             KERN, "early", bucket=bucket_size(8))
+        np.testing.assert_array_equal(np.asarray(scores), np.asarray(ref))
+    _, ref2 = serve_batch(sm2, jnp.asarray(Xpool[:8]), KERN, "early",
+                          bucket=bucket_size(8))
+    np.testing.assert_array_equal(np.asarray(results["post"][1]),
+                                  np.asarray(ref2))
+
+
+def test_engine_rejects_unserveable_strategy(ova_models):
+    """A with_bcm=False export's manifest caps the strategy set; the engine
+    refuses at submit instead of crashing inside the batch loop."""
+    m1, _, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1, with_bcm=False)
+
+    async def main():
+        async with AsyncServingEngine(reg) as engine:
+            with pytest.raises(ValueError, match="does not serve"):
+                await engine.submit(Xpool[:4], "m", strategy="bcm")
+
+    asyncio.run(main())
+
+
+def test_engine_submit_requires_running_loop(registry2):
+    engine = AsyncServingEngine(registry2)
+    with pytest.raises(RuntimeError, match="not running"):
+        asyncio.run(engine.submit(np.zeros((2, 8), np.float32), "mix"))
+
+
+def test_slo_report_schema(registry2):
+    """The SLO driver's per-QPS record carries the dashboard keys."""
+    from benchmarks.bench_slo import _drive
+
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)
+
+    async def main():
+        engine = AsyncServingEngine(registry2, EngineConfig(max_batch=64))
+        engine.warmup("mix", strategies=["early"])
+        async with engine:
+            return await _drive(engine, Xpool, qps=500.0, n_requests=12,
+                                seed=0)
+
+    rec = asyncio.run(main())
+    for key in ("offered_qps", "achieved_rps", "achieved_qps", "requests",
+                "queries", "p50_ms", "p95_ms", "p99_ms", "mean_ms"):
+        assert key in rec, f"SLO record missing {key}"
+    assert rec["requests"] == 12
+    assert np.isfinite(rec["p99_ms"]) and rec["p99_ms"] >= rec["p50_ms"] > 0
