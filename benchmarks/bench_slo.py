@@ -9,9 +9,16 @@ future resolution (queueing + batching + compute).  Two versions of the
 model are registered and requests split across them — the multi-version
 routing cost is part of what is measured.
 
-Asserts the engine's core invariant: ZERO jit compiles after warmup over
-the whole sweep (ragged sizes bucket onto warm signatures).  Merges the
-``slo`` section into ``BENCH_serve.json``.
+The OVERLOAD sweep drives a bounded-queue engine (``max_queue_rows`` +
+default deadline) at 0.5/1/2/4x its MEASURED capacity (closed-loop
+saturation estimate) and records the degradation ladder's observables:
+shed rate (typed ``EngineOverloaded`` — the in-process 429), deadline
+expiries, goodput, and admitted-request tails.  It asserts the ladder
+works: the 4x point sheds deterministically, admitted p99 stays within 3x
+the 0.5x p99 (the queue bound caps the wait a request can accumulate), a
+pre-expired deadline probe resolves ``DeadlineExceeded`` without touching
+the device, and ZERO jit compiles happen after warmup across everything.
+Merges the ``slo`` section into ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -25,11 +32,18 @@ import jax
 from benchmarks.common import Row, emit_json
 from repro.core import DCSVMConfig, Kernel, fit_ova
 from repro.data import gaussian_mixture_multiclass, train_test_split
-from repro.launch.engine import AsyncServingEngine, EngineConfig
+from repro.launch.engine import (
+    AsyncServingEngine,
+    DeadlineExceeded,
+    EngineConfig,
+    EngineOverloaded,
+)
 from repro.launch.registry import ModelRegistry
 
 SIZES = np.array([1, 4, 16, 64])          # mixed request sizes
 SIZE_P = np.array([0.35, 0.30, 0.25, 0.10])
+MEAN_REQ_ROWS = float((SIZES * SIZE_P).sum())
+OVERLOAD_MULTS = (0.5, 1.0, 2.0, 4.0)     # offered load / measured capacity
 
 
 def _percentiles(lat_s: List[float]) -> dict:
@@ -73,6 +87,150 @@ async def _drive(engine: AsyncServingEngine, Xpool: np.ndarray, qps: float,
     }
 
 
+async def _measure_capacity(engine: AsyncServingEngine, Xpool: np.ndarray,
+                            n_requests: int, workers: int = 16) -> float:
+    """Closed-loop saturation: ``workers`` concurrent callers push
+    requests back-to-back through the warm engine, drawing sizes from the
+    SAME mixed distribution the sweep offers.  Batch service time is
+    dominated by per-batch overhead, so rows/sec throughput depends
+    strongly on batch fill — ``workers`` must keep roughly ``max_batch``
+    rows outstanding (16 callers x ~12 mean rows ~ 190) or the probe
+    reports small-batch throughput and "4x capacity" never overloads the
+    engine.  Run against an UNBOUNDED engine: the bounded ladder under
+    test would shed a saturating closed loop.  Returns sustained
+    queries/sec."""
+    rng = np.random.default_rng(0)
+    served = 0
+
+    async def worker() -> None:
+        nonlocal served
+        for _ in range(n_requests):
+            size = int(rng.choice(SIZES, p=SIZE_P))
+            X = Xpool[rng.integers(0, Xpool.shape[0], size=size)]
+            await engine.submit(X, "mix", strategy="early")
+            served += size
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*[worker() for _ in range(workers)])
+    return served / (time.perf_counter() - t0)
+
+
+async def _drive_overload(engine: AsyncServingEngine, Xpool: np.ndarray,
+                          mult: float, req_rate: float, n_requests: int,
+                          seed: int) -> dict:
+    """One Poisson trace at ``mult``x capacity against the bounded-queue
+    engine: every request either delivers, sheds with the typed
+    ``EngineOverloaded``, or expires with ``DeadlineExceeded`` — anything
+    else propagates and fails the bench."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice(SIZES, size=n_requests, p=SIZE_P)
+    arrivals = np.cumsum(rng.exponential(1.0 / req_rate, size=n_requests))
+    lats: List[float] = []
+    counts = {"shed": 0, "deadline_expired": 0}
+
+    async def one(delay: float, size: int) -> int:
+        await asyncio.sleep(delay)
+        X = Xpool[rng.integers(0, Xpool.shape[0], size=size)]
+        t0 = time.perf_counter()
+        try:
+            await engine.submit(X, "mix", strategy="early")
+        except EngineOverloaded:
+            counts["shed"] += 1
+            return 0
+        except DeadlineExceeded:
+            counts["deadline_expired"] += 1
+            return 0
+        lats.append(time.perf_counter() - t0)
+        return size
+
+    t_all = time.perf_counter()
+    rows = await asyncio.gather(*[
+        one(float(arrivals[i]), int(sizes[i])) for i in range(n_requests)])
+    wall = time.perf_counter() - t_all
+    return {
+        "mult": float(mult),
+        "offered_qps": float(req_rate * MEAN_REQ_ROWS),
+        "requests": int(n_requests),
+        "shed": counts["shed"],
+        "deadline_expired": counts["deadline_expired"],
+        "delivered": len(lats),
+        "shed_rate": counts["shed"] / n_requests,
+        "goodput_qps": float(sum(rows)) / max(wall, 1e-9),
+        **(_percentiles(lats) if lats
+           else {k: float("nan")
+                 for k in ("p50_ms", "p95_ms", "p99_ms", "mean_ms")}),
+    }
+
+
+def _overload_sweep(registry: ModelRegistry, Xpool: np.ndarray,
+                    dry_run: bool) -> dict:
+    """Measure capacity, sweep 0.5/1/2/4x offered load against a
+    bounded-queue engine with a default deadline, probe the pre-expired
+    deadline path, and assert the degradation-ladder acceptance bars."""
+    max_batch = 128 if dry_run else 256
+    # the queue bound is ONE batch worth of rows: an admitted request waits
+    # at most ~2 batch service times (the in-flight batch + the queue ahead
+    # of it), which is what keeps the admitted p99 a small multiple of the
+    # lightly-loaded p99 no matter how hard the 4x point pushes
+    cfg = EngineConfig(max_batch=max_batch, max_queue_rows=max_batch,
+                       timeout_s=1.0)
+    engine = AsyncServingEngine(registry, cfg)
+    engine.warmup("mix", strategies=["early"])
+    n_requests = 150 if dry_run else 400
+
+    # capacity is probed against an unbounded engine (same max_batch, same
+    # shared jit cache) — the bounded engine under test would shed the
+    # saturating closed loop
+    probe = AsyncServingEngine(registry, EngineConfig(max_batch=max_batch))
+    probe.warmup("mix", strategies=["early"])
+
+    async def sweep():
+        out = []
+        async with probe:
+            cap = await _measure_capacity(probe, Xpool,
+                                          n_requests=8 if dry_run else 25)
+        async with engine:
+            for i, mult in enumerate(OVERLOAD_MULTS):
+                out.append(await _drive_overload(
+                    engine, Xpool, mult, mult * cap / MEAN_REQ_ROWS,
+                    n_requests, seed=200 + i))
+            # deterministic deadline probe: an already-expired request must
+            # resolve DeadlineExceeded without consuming a batch slot
+            q_before = engine.stats()["queries"]
+            try:
+                await engine.submit(Xpool[:4], "mix", strategy="early",
+                                    timeout_s=0.0)
+                raise AssertionError("pre-expired request was served")
+            except DeadlineExceeded:
+                pass
+            assert engine.stats()["queries"] == q_before, (
+                "an expired request consumed a batch slot")
+        return cap, out
+
+    capacity_qps, results = asyncio.run(sweep())
+    st = engine.stats()
+    assert st["compiles_after_warmup"] == 0, (
+        "the overload sweep recompiled — the bucketed jit cache went cold")
+    r_lo, r_hi = results[0], results[-1]
+    assert r_hi["shed"] > 0, (
+        f"4x capacity ({r_hi['offered_qps']:.0f} qps offered) never shed — "
+        "admission control is not engaging")
+    assert r_hi["p99_ms"] <= 3.0 * r_lo["p99_ms"], (
+        f"admitted p99 degraded {r_hi['p99_ms'] / r_lo['p99_ms']:.1f}x from "
+        f"0.5x to 4x load ({r_lo['p99_ms']:.2f} -> {r_hi['p99_ms']:.2f} ms) "
+        "— the queue bound is not capping the wait")
+    return {
+        "capacity_qps": float(capacity_qps),
+        "max_queue_rows": cfg.max_queue_rows,
+        "timeout_s": cfg.timeout_s,
+        "deadline_probe": "DeadlineExceeded",
+        "compiles_after_warmup": int(st["compiles_after_warmup"]),
+        "shed_total": int(st["shed"]),
+        "deadline_exceeded_total": int(st["deadline_exceeded"]),
+        "sweep": results,
+    }
+
+
 def run(dry_run: bool = False) -> List[Row]:
     n = 700 if dry_run else 5000
     n_requests = 40 if dry_run else 400
@@ -112,6 +270,8 @@ def run(dry_run: bool = False) -> List[Row]:
         f"engine compiled {compiles} executable(s) inside the timed sweep — "
         "the bucketed jit cache went cold")
 
+    overload = _overload_sweep(registry, Xpool, dry_run)
+
     payload = {
         "slo": {
             "n_train": int(Xtr.shape[0]),
@@ -121,6 +281,7 @@ def run(dry_run: bool = False) -> List[Row]:
             "compiles_after_warmup": int(compiles),
             "dry_run": dry_run,
             "sweep": results,
+            "overload": overload,
         }
     }
     emit_json("BENCH_serve.json", payload, merge=True)
@@ -129,4 +290,10 @@ def run(dry_run: bool = False) -> List[Row]:
         rows.append((f"slo_q{int(r['offered_qps'])}", r["p99_ms"] * 1e3,
                      f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
                      f"rps={r['achieved_rps']:.0f} compiles=0"))
+    for r in overload["sweep"]:
+        rows.append((
+            f"overload_{r['mult']:g}x", r["p99_ms"] * 1e3,
+            f"shed={r['shed_rate'] * 100:.0f}% "
+            f"goodput={r['goodput_qps']:.0f}q/s "
+            f"p50={r['p50_ms']:.2f}ms compiles=0"))
     return rows

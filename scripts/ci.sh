@@ -56,6 +56,14 @@ if [[ "${1:-}" == "--fast" ]]; then
         --strategy early --batch 64 --batches 24 --serve-async --qps 200 \
         --registry "$TDIR/registry.json" \
         --metrics-out "$TDIR/async_metrics.json" | tee "$TDIR/async.out"
+    # overload burst: ~2x+ capacity offered instantaneously against a
+    # bounded queue + deadline — asserts the degradation ladder: requests
+    # shed (serve_shed_total > 0), admitted p99 stays finite, and the jit
+    # cache stays warm (zero compiles after warmup)
+    python -m repro.launch.serve_svm --n 600 --classes 3 --levels 1 \
+        --strategy early --batch 64 --batches 40 --serve-async \
+        --qps 100000 --max-queue 64 --timeout-s 2 \
+        --metrics-out "$TDIR/overload_metrics.json" | tee "$TDIR/overload.out"
     python scripts/make_report.py --stats "$TDIR/stats.json" >/dev/null
     python - "$TDIR" <<'EOF'
 import json, re, sys
@@ -92,7 +100,23 @@ out = open(f"{d}/async.out").read()
 p99 = float(re.search(r"p99 ([0-9.]+)", out).group(1))
 assert p99 == p99 and p99 > 0, "p99 not finite"
 assert re.search(r"after warmup 0", out), "compiles after warmup != 0"
-print("telemetry + async serving smoke ok")
+# overload burst: sheds happened, typed and counted; admitted p99 finite;
+# the deadline/queue-wait instrumentation flowed through the registry;
+# still zero compiles after warmup under overload
+om = json.load(open(f"{d}/overload_metrics.json"))
+shed = sum(v for k, v in om["counters"].items()
+           if k.startswith("serve_shed_total"))
+assert shed > 0, "2x+ overload burst never shed — admission control dead"
+assert any(k.startswith("serve_queue_wait_seconds")
+           for k in om["histograms"]), "queue-wait histogram missing"
+assert not any(k.startswith("serve_compiles_total")
+               for k in om["counters"]), "engine recompiled under overload"
+oout = open(f"{d}/overload.out").read()
+op99 = float(re.search(r"p99 ([0-9.]+)", oout).group(1))
+assert op99 == op99 and op99 > 0, "admitted p99 not finite under overload"
+assert re.search(r"shed ([1-9][0-9]*)", oout), "shed count not reported"
+assert re.search(r"after warmup 0", oout), "compiles after warmup != 0"
+print("telemetry + async serving + overload smoke ok")
 EOF
 else
     python -m pytest -x -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}

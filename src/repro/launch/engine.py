@@ -11,26 +11,56 @@ pops ready requests into pad-bucketed batches.
 * The batch-manager task pops the group with the oldest waiting request,
   drains up to ``max_batch`` query rows from it (continuous batching: one
   slow group never blocks another; late arrivals ride the next pop),
-  concatenates the rows, and serves them through ``serve_batch`` padded to
-  a power-of-two bucket (``predict.bucket_size``).  Everything the jit
-  cache keys on — batch shape AND the early strategy's static
-  ``early_capacity`` — derives from the bucket, so ragged request sizes
-  collapse onto O(log max_batch) compiled programs and the cache stays
-  warm forever.
+  assembles the rows INTO A HOST buffer already padded to a power-of-two
+  bucket (``predict.bucket_size``), and serves it through ``serve_batch``.
+  Everything the jit cache keys on — batch shape AND the early strategy's
+  static ``early_capacity`` — derives from the bucket, so ragged request
+  sizes collapse onto O(log max_batch) compiled programs and the cache
+  stays warm forever.  Assembly and result scatter are numpy, never traced
+  ops: an eager ``jnp.concatenate``/slice per ragged shape would compile a
+  tiny throwaway XLA executable for every distinct (sizes...) tuple — a
+  hidden compile storm the ``serve_batch`` cache counter can't see that
+  turned first-trace p50 from ~4ms into ~600ms under mixed sizes.
 * Results scatter back per request id: each future resolves with exactly
   its own (pred, scores) rows, bit-identical to a direct ``serve_batch``
   call on the same rows (per-row scores are independent of batch-mates and
   padding).
 
+Overload robustness (DESIGN.md §15's degradation ladder: admit → queue →
+shed):
+
+* **Admission control** — ``EngineConfig.max_queue_rows`` bounds the total
+  queued query rows; a ``submit`` that would push past the bound fails
+  fast with ``EngineOverloaded`` (the in-process 429) and increments
+  ``serve_shed_total``.  Nothing is enqueued, so an overloaded engine's
+  queue — and its admitted-request tail latency — stays bounded.
+* **Per-request deadlines** — ``submit(..., timeout_s=)`` (or the engine
+  default ``EngineConfig.timeout_s``) arms a deadline timer; a request
+  whose deadline expires while QUEUED resolves with ``DeadlineExceeded``
+  and is reaped in ``_pop_ready`` before batch formation, so dead rows
+  never burn device time (``serve_deadline_exceeded_total``).  A request
+  admitted into a batch has its timer cancelled: the deadline bounds queue
+  wait, not device compute.  ``timeout_s<=0`` is pre-expired — it resolves
+  immediately without ever enqueueing.  ``serve_queue_wait_seconds`` /
+  ``serve_compute_seconds`` histograms separate wait from compute.
+* **Event-loop liveness** — the blocking ``serve_batch``/
+  ``block_until_ready()`` device sync runs in an executor thread, so
+  submits, deadline timers, and drain wakeups keep firing DURING a batch.
+* **Supervision** — batch-FORMATION errors (e.g. a popped group whose
+  registry entry is gone: a swap/drain-protocol violation) kill the loop;
+  the death is observed, not swallowed: queued futures are failed,
+  drainers are woken, and ``submit``/``drain``/``stop`` re-raise the
+  loop's exception instead of hanging.  Per-batch SERVE errors still
+  scatter to just the affected callers.
+
 ``warmup`` pre-compiles every (version, strategy, bucket) signature outside
 the request path and marks the compile-counter baseline; after that the
 engine serves with ZERO recompiles (``serve_compiles_total`` pins it).
-Metrics: queue depth gauge, batch-fill-ratio histogram, per-version /
-per-strategy latency histograms, request/query counters, compile counter.
 
 Hot swap: ``swap`` atomically repoints the registry route, then drains the
 old version's queue and drops it — in-flight requests complete on the
-version they resolved (DESIGN.md §14).
+version they resolved; queued requests whose deadline expires during the
+drain are reaped, not served (DESIGN.md §14/§15).
 """
 from __future__ import annotations
 
@@ -40,6 +70,7 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core.predict import bucket_size
@@ -50,11 +81,21 @@ from repro.obs.metrics import MetricsRegistry
 GroupKey = Tuple[str, int, str]        # (name, version, strategy)
 
 
+class EngineOverloaded(RuntimeError):
+    """Admission refused: the bounded queue is full (in-process 429)."""
+
+
+class DeadlineExceeded(asyncio.TimeoutError):
+    """The request's deadline expired before it reached a batch."""
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 256      # max query rows popped into one bucketed batch
     min_bucket: int = 8       # smallest pad bucket (predict.bucket_size lo)
     use_pallas: Optional[bool] = None
+    max_queue_rows: Optional[int] = None   # admission bound on queued rows
+    timeout_s: Optional[float] = None      # default per-request deadline
 
     @property
     def max_bucket(self) -> int:
@@ -71,6 +112,9 @@ class _Request:
     nq: int
     future: asyncio.Future    # resolves to (pred[nq], scores[nq, C])
     t_enq: float
+    deadline: Optional[float] = None            # t_enq + timeout_s
+    timer: Optional[asyncio.TimerHandle] = None
+    t_pop: float = 0.0        # batch-formation time (set at pop)
 
 
 class AsyncServingEngine:
@@ -83,7 +127,9 @@ class AsyncServingEngine:
         self.config = config
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._queues: Dict[GroupKey, Deque[_Request]] = {}
-        self._event: Optional[asyncio.Event] = None
+        self._inflight: Dict[GroupKey, int] = {}   # popped, not yet resolved
+        self._event: Optional[asyncio.Event] = None    # work arrived
+        self._served: Optional[asyncio.Event] = None   # queue progressed
         self._task: Optional[asyncio.Task] = None
         self._closed = False
         self._rid = 0
@@ -95,6 +141,14 @@ class AsyncServingEngine:
                    "real rows / bucket rows per served batch")
         m.describe("serve_latency_seconds",
                    "request latency, enqueue to future resolution")
+        m.describe("serve_queue_wait_seconds",
+                   "delivered-request wait, enqueue to batch formation")
+        m.describe("serve_compute_seconds",
+                   "batch compute, formation to device sync")
+        m.describe("serve_shed_total",
+                   "requests refused at admission (queue full)")
+        m.describe("serve_deadline_exceeded_total",
+                   "requests expired before batch formation")
         m.describe("serve_compiles_total",
                    "jit compiles observed after warmup (should stay 0)")
 
@@ -103,19 +157,26 @@ class AsyncServingEngine:
         if self._task is not None:
             raise RuntimeError("engine already started")
         self._event = asyncio.Event()
+        self._served = asyncio.Event()
         self._closed = False
         self._task = asyncio.get_running_loop().create_task(self._batch_loop())
+        self._task.add_done_callback(self._on_loop_done)
         return self
 
     async def stop(self) -> None:
-        """Drain every queue, then stop the batch manager."""
+        """Drain every queue, then stop the batch manager.  If the batch
+        loop died, the drain (or the final await) re-raises its exception
+        in bounded time instead of spinning on a queue that will never
+        empty."""
         if self._task is None:
             return
-        await self.drain()
-        self._closed = True
-        self._event.set()
-        await self._task
-        self._task = None
+        try:
+            await self.drain()
+        finally:
+            self._closed = True
+            self._event.set()
+            task, self._task = self._task, None
+            await task          # surfaces the loop's exception if it died
 
     async def __aenter__(self) -> "AsyncServingEngine":
         return await self.start()
@@ -123,13 +184,47 @@ class AsyncServingEngine:
     async def __aexit__(self, *exc) -> None:
         await self.stop()
 
+    # -- supervision -----------------------------------------------------
+    def _raise_if_loop_dead(self) -> None:
+        """Fail fast when the batch-loop task died with an exception —
+        re-raise it from the caller (submit/drain/stop) instead of letting
+        queues that will never drain hang the process."""
+        t = self._task
+        if t is not None and t.done() and not t.cancelled():
+            exc = t.exception()
+            if exc is not None:
+                raise exc
+
+    def _on_loop_done(self, task: asyncio.Task) -> None:
+        """The batch loop is supervised: on death, fail every queued
+        future (no caller awaits forever) and wake drainers so they
+        observe the exception instead of sleeping on a dead queue."""
+        exc = None if task.cancelled() else task.exception()
+        if exc is not None:
+            for dq in self._queues.values():
+                while dq:
+                    r = dq.popleft()
+                    if r.timer is not None:
+                        r.timer.cancel()
+                    if not r.future.done():
+                        r.future.set_exception(exc)
+        if self._served is not None:
+            self._served.set()
+
     # -- request path ----------------------------------------------------
     async def submit(self, Xq, name: str = "default",
                      version: Optional[int] = None,
-                     strategy: str = "early"):
+                     strategy: str = "early",
+                     timeout_s: Optional[float] = None):
         """Enqueue one request; await returns (pred, scores) for exactly
         the submitted rows.  Version resolution happens here, against the
-        route table as of NOW — the hot-swap boundary."""
+        route table as of NOW — the hot-swap boundary.
+
+        Raises ``EngineOverloaded`` when admission would push the queued
+        rows past ``max_queue_rows``; resolves with ``DeadlineExceeded``
+        when the deadline (``timeout_s`` or the engine default) expires
+        before the request reaches a batch."""
+        self._raise_if_loop_dead()
         if self._task is None or self._closed:
             raise RuntimeError("engine is not running (use `async with` "
                                "or await start())")
@@ -139,18 +234,52 @@ class AsyncServingEngine:
             raise ValueError(
                 f"{name}:{man.version} does not serve {strategy!r} "
                 f"(manifest allows {list(man.strategies)})")
-        X = jnp.asarray(Xq, entry.sm.Xsv.dtype)
+        # requests are held HOST-side: queued rows cost no device memory,
+        # and batch assembly stays numpy (no per-ragged-shape op compiles)
+        X = np.asarray(Xq, dtype=entry.sm.Xsv.dtype)
         if X.ndim == 1:
             X = X[None, :]
+        nq = int(X.shape[0])
+        cap = self.config.max_queue_rows
+        if cap is not None and self._depth() + nq > cap:
+            self.metrics.counter("serve_shed_total", model=name).inc()
+            raise EngineOverloaded(
+                f"queue full: {self._depth()} queued rows + {nq} new > "
+                f"max_queue_rows={cap}")
+        loop = asyncio.get_running_loop()
         self._rid += 1
-        req = _Request(rid=self._rid, X=X, nq=int(X.shape[0]),
-                       future=asyncio.get_running_loop().create_future(),
-                       t_enq=time.perf_counter())
+        tmo = timeout_s if timeout_s is not None else self.config.timeout_s
+        req = _Request(rid=self._rid, X=X, nq=nq,
+                       future=loop.create_future(),
+                       t_enq=time.perf_counter(),
+                       deadline=None)
+        if tmo is not None:
+            req.deadline = req.t_enq + tmo
+            if tmo <= 0:               # pre-expired: never enqueue, never
+                self._expire(req)      # burn a batch slot
+                return await req.future
+            req.timer = loop.call_later(tmo, self._expire, req)
         key: GroupKey = (name, man.version, strategy)
         self._queues.setdefault(key, deque()).append(req)
         self.metrics.gauge("serve_queue_depth").set(self._depth())
         self._event.set()
         return await req.future
+
+    def _expire(self, req: _Request) -> None:
+        """Deadline timer body: resolve the queued request with
+        ``DeadlineExceeded`` and wake the loop so the dead row is reaped
+        before the next batch forms.  Timers run on the event loop, which
+        stays live during device compute (executor offload) — expiry fires
+        on time even mid-batch."""
+        req.timer = None
+        if req.future.done():
+            return
+        req.future.set_exception(DeadlineExceeded(
+            f"request {req.rid} ({req.nq} rows) expired after "
+            f"{time.perf_counter() - req.t_enq:.4f}s in queue"))
+        self.metrics.counter("serve_deadline_exceeded_total").inc()
+        if self._event is not None:
+            self._event.set()
 
     # -- batch manager ---------------------------------------------------
     def _depth(self) -> int:
@@ -163,17 +292,36 @@ class AsyncServingEngine:
     def _pop_ready(self, key: GroupKey) -> List[_Request]:
         """Continuous batching pop: drain the group's queue head until the
         next request would overflow ``max_batch`` rows (a single oversized
-        request is served alone)."""
+        request is served alone).  Requests whose future is already done —
+        caller-cancelled or deadline-expired — are REAPED here, before
+        batch formation: they contribute no rows, no device time, and no
+        latency observation.  A live request admitted into the batch has
+        its deadline timer cancelled (the deadline bounds queue wait)."""
         dq = self._queues[key]
-        reqs = [dq.popleft()]
-        total = reqs[0].nq
-        while dq and total + dq[0].nq <= self.config.max_batch:
-            r = dq.popleft()
+        reqs: List[_Request] = []
+        total = 0
+        t_pop = time.perf_counter()
+        while dq:
+            r = dq[0]
+            if r.future.done():                    # reap dead rows
+                dq.popleft()
+                if r.timer is not None:
+                    r.timer.cancel()
+                    r.timer = None
+                continue
+            if reqs and total + r.nq > self.config.max_batch:
+                break
+            dq.popleft()
+            if r.timer is not None:
+                r.timer.cancel()
+                r.timer = None
+            r.t_pop = t_pop
             reqs.append(r)
             total += r.nq
         return reqs
 
     async def _batch_loop(self) -> None:
+        loop = asyncio.get_running_loop()
         while True:
             key = self._oldest_group()
             if key is None:
@@ -183,50 +331,103 @@ class AsyncServingEngine:
                 await self._event.wait()
                 continue
             reqs = self._pop_ready(key)
+            if not reqs:
+                # the pop only reaped dead requests — that still progressed
+                # the queue, so wake drainers before the next scan
+                self.metrics.gauge("serve_queue_depth").set(self._depth())
+                self._served.set()
+                continue
+            # batch-formation errors (a popped group whose entry vanished:
+            # a swap/drain-protocol violation) are engine-fatal — they kill
+            # the loop and surface through submit/drain/stop, never hang.
+            # The popped requests are failed here; still-queued ones are
+            # failed by the supervisor (_on_loop_done).
             try:
-                self._serve_group(key, reqs)
+                entry: RegistryEntry = self.registry.resolve(key[0], key[1])
+            except BaseException as e:
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                raise
+            try:
+                await self._serve_group(loop, entry, key, reqs)
             except Exception as e:                 # noqa: BLE001 — scatter
                 for r in reqs:                     # failures to the callers
                     if not r.future.done():
                         r.future.set_exception(e)
             self.metrics.gauge("serve_queue_depth").set(self._depth())
-            # yield so producers/consumers run between batches
-            await asyncio.sleep(0)
+            self._served.set()
 
-    def _serve_group(self, key: GroupKey, reqs: Sequence[_Request]) -> None:
+    async def _serve_group(self, loop: asyncio.AbstractEventLoop,
+                           entry: RegistryEntry, key: GroupKey,
+                           reqs: Sequence[_Request]) -> None:
         name, version, strategy = key
-        entry: RegistryEntry = self.registry.resolve(name, version)
         nq = sum(r.nq for r in reqs)
         bucket = bucket_size(nq, lo=self.config.min_bucket,
                              hi=self.config.max_bucket)
-        X = reqs[0].X if len(reqs) == 1 else jnp.concatenate(
-            [r.X for r in reqs])
-        pred, scores = serve_batch(entry.sm, X, entry.kern, strategy,
-                                   use_pallas=self.config.use_pallas,
-                                   bucket=bucket)
-        pred.block_until_ready()
+        # one host alloc at exactly the bucket shape: serve_batch sees a
+        # full-bucket batch (pad path untouched), so every eager op inside
+        # it runs at a warmup-covered signature — no hidden compiles for
+        # ragged sizes, on top of the jitted scorers' bucket signatures
+        X = np.zeros((bucket, reqs[0].X.shape[1]), reqs[0].X.dtype)
+        off = 0
+        for r in reqs:
+            X[off: off + r.nq] = r.X
+            off += r.nq
+
+        def compute():
+            # one H2D transfer of the full bucket (jnp.asarray, not raw
+            # numpy: the jit fast path keys numpy args separately, which
+            # would double every warmed signature)
+            pred, scores = serve_batch(entry.sm, jnp.asarray(X), entry.kern,
+                                       strategy,
+                                       use_pallas=self.config.use_pallas,
+                                       bucket=bucket)
+            # device->host once, in the executor thread (this is also the
+            # device sync); scatter below is then pure numpy slicing
+            return np.asarray(pred)[:nq], np.asarray(scores)[:nq]
+
+        # the device sync runs OFF the event loop so submits, deadline
+        # timers, and drain wakeups keep firing during the batch
+        self._inflight[key] = self._inflight.get(key, 0) + len(reqs)
+        try:
+            pred, scores = await loop.run_in_executor(None, compute)
+        finally:
+            self._inflight[key] -= len(reqs)
+            if not self._inflight[key]:
+                del self._inflight[key]
         t_done = time.perf_counter()
 
         m = self.metrics
         ver = str(version)
-        m.counter("serve_requests_total", model=name, version=ver,
-                  strategy=strategy).inc(len(reqs))
-        m.counter("serve_queries_total", model=name, version=ver,
-                  strategy=strategy).inc(nq)
         m.histogram("serve_batch_fill_ratio").observe(nq / bucket)
+        m.histogram("serve_compute_seconds").observe(t_done - reqs[0].t_pop)
         hist = m.histogram("serve_latency_seconds", model=name, version=ver,
                            strategy=strategy)
+        wait_h = m.histogram("serve_queue_wait_seconds", lo=1e-6)
         cache = serving_cache_size()
         if cache > self._cache_mark:
             m.counter("serve_compiles_total").inc(cache - self._cache_mark)
             self._cache_mark = cache
+        # only DELIVERED requests are counted and observed: a request
+        # cancelled mid-compute neither lands in the histograms (no p99
+        # skew) nor in the request/query counters
+        delivered = d_rows = 0
         off = 0
         for r in reqs:
-            if not r.future.done():                # (cancelled callers skip)
+            if not r.future.done():
                 r.future.set_result(
                     (pred[off: off + r.nq], scores[off: off + r.nq]))
-            hist.observe(t_done - r.t_enq)
+                hist.observe(t_done - r.t_enq)
+                wait_h.observe(r.t_pop - r.t_enq)
+                delivered += 1
+                d_rows += r.nq
             off += r.nq
+        if delivered:
+            m.counter("serve_requests_total", model=name, version=ver,
+                      strategy=strategy).inc(delivered)
+            m.counter("serve_queries_total", model=name, version=ver,
+                      strategy=strategy).inc(d_rows)
 
     # -- warmup ----------------------------------------------------------
     def warmup(self, name: Optional[str] = None,
@@ -264,25 +465,45 @@ class AsyncServingEngine:
     # -- hot swap / drain ------------------------------------------------
     def _queued_matching(self, name: Optional[str],
                          version: Optional[int]) -> int:
-        return sum(
-            len(dq) for (nm, ver, _), dq in self._queues.items()
-            if (name is None or nm == name)
-            and (version is None or ver == version))
+        """Requests still owed work for (name, version): queued PLUS
+        popped-but-in-flight (the executor offload means a batch can be on
+        the device while its requests are off the queues)."""
+        def match(nm: str, ver: int) -> bool:
+            return ((name is None or nm == name)
+                    and (version is None or ver == version))
+        return (sum(len(dq) for (nm, ver, _), dq in self._queues.items()
+                    if match(nm, ver))
+                + sum(n for (nm, ver, _), n in self._inflight.items()
+                      if match(nm, ver)))
 
     async def drain(self, name: Optional[str] = None,
                     version: Optional[int] = None) -> None:
-        """Wait until no queued request references (name, version);
-        ``None`` matches everything (full drain)."""
-        while self._queued_matching(name, version):
+        """Wait until no queued or in-flight request references
+        (name, version); ``None`` matches everything (full drain).
+        Event-driven: the batch loop sets ``_served`` after every batch
+        (and after every reap), so a drain costs one wakeup per queue
+        progression instead of a 100%-CPU ``sleep(0)`` spin.  Re-raises
+        the batch loop's exception if it died — a dead loop means the
+        queue will never empty."""
+        while True:
+            self._raise_if_loop_dead()
+            if self._served is not None:
+                self._served.clear()
+            if not self._queued_matching(name, version):
+                return
+            if self._task is None:
+                raise RuntimeError("engine is not running")
             self._event.set()
-            await asyncio.sleep(0)
+            await self._served.wait()
 
     async def swap(self, name: str, version: int,
                    drop_old: bool = True) -> Optional[int]:
         """Hot-swap ``name`` to ``version``: atomically repoint the route
         table (new submits resolve the new version immediately), then drain
-        requests still queued on the old version and drop it.  Returns the
-        previous default version."""
+        requests still queued on the old version and drop it.  Queued
+        requests whose deadline expires during the drain are reaped, not
+        served — the drain completes either way.  Returns the previous
+        default version."""
         old = self.registry.set_default(name, version)
         if drop_old and old is not None and old != version:
             await self.drain(name, old)
@@ -292,14 +513,17 @@ class AsyncServingEngine:
     # -- introspection ---------------------------------------------------
     def stats(self) -> Dict[str, object]:
         j = self.metrics.to_json()
-        compiles = sum(v for k, v in j["counters"].items()
-                       if k.startswith("serve_compiles_total"))
+
+        def total(prefix: str) -> int:
+            return int(sum(v for k, v in j["counters"].items()
+                           if k.startswith(prefix)))
+
         return {
             "queue_depth": self._depth(),
-            "requests": sum(v for k, v in j["counters"].items()
-                            if k.startswith("serve_requests_total")),
-            "queries": sum(v for k, v in j["counters"].items()
-                           if k.startswith("serve_queries_total")),
-            "compiles_after_warmup": int(compiles),
+            "requests": total("serve_requests_total"),
+            "queries": total("serve_queries_total"),
+            "shed": total("serve_shed_total"),
+            "deadline_exceeded": total("serve_deadline_exceeded_total"),
+            "compiles_after_warmup": total("serve_compiles_total"),
             "models": self.registry.to_json()["route"],
         }

@@ -137,8 +137,14 @@ class ModelRegistry:
         the newest registered version.  The first version of a name becomes
         the default route; later ones only when ``make_default=True``
         (``set_default`` / the engine's hot swap repoints explicitly)."""
-        if version is not None and (name, int(version)) in self._entries:
-            raise ValueError(f"{name}:{version} is already registered")
+        if version is not None:
+            # coerce ONCE at entry: pre-fix the pre-lock check keyed on
+            # (name, int(version)) but the insert used (name, version), so
+            # register(version="2") and register(version=2) silently
+            # coexisted as distinct keys
+            version = int(version)
+            if (name, version) in self._entries:
+                raise ValueError(f"{name}:{version} is already registered")
         sm = export_serving_model(model,
                                   max_sv_per_cluster=max_sv_per_cluster,
                                   with_bcm=with_bcm)
@@ -161,12 +167,16 @@ class ModelRegistry:
     def resolve(self, name: str, version: Optional[int] = None
                 ) -> RegistryEntry:
         """Resolve a request's (name, version) to a concrete entry;
-        ``version=None`` follows the default route table."""
-        if version is None:
-            version = self._route.get(name)
+        ``version=None`` follows the default route table.  Takes the lock:
+        the route read and the entry lookup must be one atomic snapshot, or
+        a concurrent ``drop``/``set_default`` can surface a half-removed
+        entry (route repointed, entry gone — or vice versa)."""
+        with self._lock:
             if version is None:
-                raise KeyError(f"no model registered under name {name!r}")
-        entry = self._entries.get((name, int(version)))
+                version = self._route.get(name)
+                if version is None:
+                    raise KeyError(f"no model registered under name {name!r}")
+            entry = self._entries.get((name, int(version)))
         if entry is None:
             raise KeyError(f"model {name!r} has no version {version}")
         return entry

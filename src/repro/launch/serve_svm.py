@@ -462,7 +462,9 @@ def _serve_async(args, model, Xpool: np.ndarray) -> None:
     module)."""
     import asyncio
 
-    from repro.launch.engine import AsyncServingEngine, EngineConfig
+    from repro.launch.engine import (
+        AsyncServingEngine, DeadlineExceeded, EngineConfig, EngineOverloaded,
+    )
     from repro.launch.registry import ModelRegistry
 
     registry = ModelRegistry()
@@ -471,20 +473,30 @@ def _serve_async(args, model, Xpool: np.ndarray) -> None:
     if args.registry:
         registry.save(args.registry)
         print(f"registry manifests -> {args.registry}")
-    engine = AsyncServingEngine(registry,
-                                EngineConfig(max_batch=args.batch))
+    engine = AsyncServingEngine(registry, EngineConfig(
+        max_batch=args.batch,
+        max_queue_rows=args.max_queue if args.max_queue > 0 else None,
+        timeout_s=args.timeout_s if args.timeout_s > 0 else None))
     warm = engine.warmup(strategies=[args.strategy])
     rng = np.random.default_rng(args.seed)
     n_req = args.batches
     sizes = rng.choice([1, 4, 16, 64], size=n_req, p=[0.35, 0.3, 0.25, 0.1])
     arrivals = np.cumsum(rng.exponential(1.0 / args.qps, size=n_req))
     lats: list = []
+    outcomes = {"shed": 0, "expired": 0}
 
     async def one(delay: float, size: int) -> None:
         await asyncio.sleep(delay)
         Xq = Xpool[rng.integers(0, Xpool.shape[0], size=size)]
         t0 = time.perf_counter()
-        await engine.submit(Xq, "default", strategy=args.strategy)
+        try:
+            await engine.submit(Xq, "default", strategy=args.strategy)
+        except EngineOverloaded:
+            outcomes["shed"] += 1           # the in-process 429
+            return
+        except DeadlineExceeded:
+            outcomes["expired"] += 1
+            return
         lats.append(time.perf_counter() - t0)
 
     async def drive() -> None:
@@ -493,11 +505,15 @@ def _serve_async(args, model, Xpool: np.ndarray) -> None:
                 one(float(arrivals[i]), int(sizes[i])) for i in range(n_req)])
 
     asyncio.run(drive())
-    ms = np.asarray(lats) * 1e3
     stats = engine.stats()
+    # tails over ADMITTED-and-delivered requests only: shed/expired
+    # requests fail fast by design and must not pollute the latency report
+    ms = (np.asarray(lats) * 1e3 if lats else np.asarray([float("nan")]))
     print(f"async {args.strategy} v{man.version}: {n_req} requests "
           f"({int(sizes.sum())} queries) at {args.qps:.0f} offered rps | "
-          f"lat ms p50 {np.percentile(ms, 50):.2f} "
+          f"delivered {len(lats)} shed {outcomes['shed']} "
+          f"expired {outcomes['expired']} | "
+          f"admitted lat ms p50 {np.percentile(ms, 50):.2f} "
           f"p95 {np.percentile(ms, 95):.2f} p99 {np.percentile(ms, 99):.2f} "
           f"| warmup compiles {warm}, after warmup "
           f"{stats['compiles_after_warmup']}")
@@ -542,6 +558,15 @@ def main(argv=None) -> None:
                          "registry, instead of the fixed-batch sync loop")
     ap.add_argument("--qps", type=float, default=500.0,
                     help="offered Poisson request rate for --serve-async")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="--serve-async admission bound on queued query "
+                         "rows; submits past it shed with EngineOverloaded "
+                         "(0 = unbounded)")
+    ap.add_argument("--timeout-s", type=float, default=0.0,
+                    help="--serve-async default per-request deadline; "
+                         "requests expiring in queue resolve with "
+                         "DeadlineExceeded before batch formation "
+                         "(0 = none)")
     ap.add_argument("--registry", default="",
                     help="write the model registry's manifests JSON here "
                          "(--serve-async)")

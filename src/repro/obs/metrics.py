@@ -126,10 +126,15 @@ class MetricsRegistry:
     def gauge(self, name: str, **labels: str) -> Gauge:
         return self._gauges.setdefault(_key(name, labels), Gauge())
 
-    def histogram(self, name: str, **labels: str) -> LatencyHistogram:
+    def histogram(self, name: str, lo: float = 1e-5, hi: float = 10.0,
+                  per_decade: int = 4, **labels: str) -> LatencyHistogram:
+        """Get-or-create; the bucket layout (``lo``/``hi``/``per_decade``)
+        only applies on first creation — later calls return the existing
+        series unchanged, so every label of one metric shares one layout."""
         key = _key(name, labels)
         if key not in self._hists:
-            self._hists[key] = LatencyHistogram()
+            self._hists[key] = LatencyHistogram(lo=lo, hi=hi,
+                                                per_decade=per_decade)
             self._hist_meta[key] = (name, labels)
         return self._hists[key]
 

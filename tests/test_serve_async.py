@@ -8,6 +8,7 @@ three tasks, and the engine's zero-recompiles-after-warmup invariant under
 a Poisson trace with mixed request sizes and two registered versions.
 """
 import asyncio
+import threading
 
 import numpy as np
 import pytest
@@ -23,7 +24,12 @@ from repro.data import (
     gaussian_with_outliers,
     train_test_split,
 )
-from repro.launch.engine import AsyncServingEngine, EngineConfig
+from repro.launch.engine import (
+    AsyncServingEngine,
+    DeadlineExceeded,
+    EngineConfig,
+    EngineOverloaded,
+)
 from repro.launch.registry import ModelManifest, ModelRegistry
 from repro.launch.serve_svm import (
     export_serving_model,
@@ -317,6 +323,341 @@ def test_engine_submit_requires_running_loop(registry2):
     engine = AsyncServingEngine(registry2)
     with pytest.raises(RuntimeError, match="not running"):
         asyncio.run(engine.submit(np.zeros((2, 8), np.float32), "mix"))
+
+
+# ---------------------------------------------------------------------------
+# overload robustness: shed / deadlines / liveness / supervision
+# ---------------------------------------------------------------------------
+
+class _GatedServe:
+    """Wraps ``serve_batch`` behind a threading gate: the batch loop's
+    executor thread blocks in ``__call__`` until ``release`` is set, giving
+    tests a deterministic window in which the loop is mid-batch (popped,
+    computing) while the event loop itself stays live."""
+
+    def __init__(self):
+        self.release = threading.Event()
+        self.entered = threading.Event()
+
+    def __call__(self, *a, **kw):
+        self.entered.set()
+        assert self.release.wait(30), "gate never released"
+        return serve_batch(*a, **kw)
+
+
+async def _until_inflight(gate: _GatedServe) -> None:
+    while not gate.entered.is_set():
+        await asyncio.sleep(0.001)
+
+
+def _hist_count(engine, name):
+    return sum(h["count"] for k, h in
+               engine.metrics.to_json()["histograms"].items()
+               if k.startswith(name))
+
+
+def test_engine_death_surfaces_in_stop_submit_drain(ova_models):
+    """Satellite 1 regression: a poisoned registry entry kills the batch
+    loop at batch formation; pre-fix, ``stop()``/``drain()`` spun forever
+    on a queue that never empties and the task's exception was swallowed.
+    Now the death is supervised: queued futures fail, ``submit`` re-raises,
+    and ``stop()`` surfaces the error in bounded time."""
+    m1, _, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+
+    async def main():
+        engine = AsyncServingEngine(reg, EngineConfig(max_batch=32))
+        engine.warmup("m", strategies=["early"])
+        await engine.start()
+        fut = asyncio.ensure_future(
+            engine.submit(Xpool[:8], "m", strategy="early"))
+        await asyncio.sleep(0)           # submit enqueued; loop not yet run
+        reg._entries[("m", 1)] = None    # poison: formation resolve raises
+        await asyncio.sleep(0.05)        # let the loop die on the poison
+        # the queued request's future was failed by the supervisor
+        with pytest.raises(KeyError, match="version"):
+            await fut
+        # submit fails fast with the loop's exception, not a hang
+        with pytest.raises(KeyError, match="version"):
+            await engine.submit(Xpool[:4], "m", strategy="early")
+        # drain and stop surface the death in bounded time (pre-fix: hang)
+        with pytest.raises(KeyError, match="version"):
+            await asyncio.wait_for(engine.drain(), timeout=10)
+        with pytest.raises(KeyError, match="version"):
+            await asyncio.wait_for(engine.stop(), timeout=10)
+
+    asyncio.run(main())
+
+
+def test_cancelled_request_not_served_not_observed(ova_models, monkeypatch):
+    """Satellite 2 regression: a caller-cancelled request must be reaped
+    before batch formation — its rows never reach the device and it never
+    lands in the latency histogram (pre-fix it was concatenated, served,
+    and observed, skewing p99)."""
+    import repro.launch.engine as engine_mod
+
+    m1, _, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+    engine = AsyncServingEngine(reg, EngineConfig(max_batch=64))
+    engine.warmup("m", strategies=["early"])
+    gate = _GatedServe()
+    monkeypatch.setattr(engine_mod, "serve_batch", gate)
+
+    async def main():
+        async with engine:
+            fA = asyncio.ensure_future(
+                engine.submit(Xpool[:8], "m", strategy="early"))
+            await _until_inflight(gate)            # A popped, mid-batch
+            fB = asyncio.ensure_future(
+                engine.submit(Xpool[:5], "m", strategy="early"))
+            await asyncio.sleep(0)                 # B enqueued
+            fB.cancel()                            # caller gave up (e.g.
+            await asyncio.sleep(0)                 # asyncio.wait_for)
+            gate.release.set()
+            predA, _ = await fA
+            assert predA.shape[0] == 8
+            with pytest.raises(asyncio.CancelledError):
+                await fB
+            await engine.drain()                   # loop reaps B
+
+    asyncio.run(main())
+    st = engine.stats()
+    # B's 5 rows never entered a batch; only A was delivered and observed
+    assert st["queries"] == 8 and st["requests"] == 1
+    assert _hist_count(engine, "serve_latency_seconds") == 1
+    assert _hist_count(engine, "serve_queue_wait_seconds") == 1
+    assert st["queue_depth"] == 0
+
+
+def test_shed_at_max_queue_rows(ova_models, monkeypatch):
+    """Admission control: with the loop mid-batch, submits past
+    ``max_queue_rows`` fail fast with the typed ``EngineOverloaded`` and
+    count into ``serve_shed_total``; admitted requests all deliver."""
+    import repro.launch.engine as engine_mod
+
+    m1, _, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+    engine = AsyncServingEngine(
+        reg, EngineConfig(max_batch=64, max_queue_rows=32))
+    engine.warmup("m", strategies=["early"])
+    gate = _GatedServe()
+    monkeypatch.setattr(engine_mod, "serve_batch", gate)
+
+    async def main():
+        async with engine:
+            fA = asyncio.ensure_future(
+                engine.submit(Xpool[:8], "m", strategy="early"))
+            await _until_inflight(gate)            # loop blocked mid-batch
+            subs = [asyncio.ensure_future(
+                engine.submit(Xpool[i * 8:(i + 1) * 8], "m",
+                              strategy="early")) for i in range(10)]
+            await asyncio.sleep(0)                 # all ten hit admission
+            shed = [t for t in subs if t.done()]
+            # 32-row bound admits exactly the first four 8-row requests
+            assert len(shed) == 6
+            for t in shed:
+                with pytest.raises(EngineOverloaded, match="queue full"):
+                    await t
+            gate.release.set()
+            await fA
+            for t in subs:
+                if t not in shed:
+                    pred, _ = await t
+                    assert pred.shape[0] == 8
+
+    asyncio.run(main())
+    st = engine.stats()
+    assert st["shed"] == 6
+    assert st["requests"] == 5 and st["queries"] == 40   # A + 4 admitted
+
+
+def test_deadline_expiry_while_queued(ova_models, monkeypatch):
+    """A queued request whose deadline expires mid-batch (the event loop
+    stays live during device compute) resolves with ``DeadlineExceeded``
+    and is reaped before the next batch forms — no device time burned."""
+    import repro.launch.engine as engine_mod
+
+    m1, _, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+    engine = AsyncServingEngine(reg, EngineConfig(max_batch=64))
+    engine.warmup("m", strategies=["early"])
+    gate = _GatedServe()
+    monkeypatch.setattr(engine_mod, "serve_batch", gate)
+
+    async def main():
+        async with engine:
+            fA = asyncio.ensure_future(
+                engine.submit(Xpool[:8], "m", strategy="early"))
+            await _until_inflight(gate)
+            fB = asyncio.ensure_future(
+                engine.submit(Xpool[:5], "m", strategy="early",
+                              timeout_s=0.02))
+            # the timer fires while the loop is still blocked in compute —
+            # liveness: deadline timers don't wait for the batch
+            await asyncio.sleep(0.1)
+            assert fB.done()
+            with pytest.raises(DeadlineExceeded, match="expired"):
+                await fB
+            gate.release.set()
+            await fA
+            await engine.drain()
+
+    asyncio.run(main())
+    st = engine.stats()
+    assert st["deadline_exceeded"] == 1
+    assert st["queries"] == 8 and st["requests"] == 1    # B never served
+    assert _hist_count(engine, "serve_latency_seconds") == 1
+
+
+def test_pre_expired_deadline_never_enqueues(registry2):
+    """``timeout_s<=0`` is already expired at submit: it resolves with
+    ``DeadlineExceeded`` immediately, without enqueueing or burning a
+    batch slot (the bench's deterministic deadline probe)."""
+    engine = AsyncServingEngine(registry2, EngineConfig(max_batch=64))
+    engine.warmup("mix", strategies=["early"])
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)
+
+    async def main():
+        async with engine:
+            with pytest.raises(DeadlineExceeded):
+                await engine.submit(Xpool[:4], "mix", strategy="early",
+                                    timeout_s=0.0)
+
+    asyncio.run(main())
+    st = engine.stats()
+    assert st["deadline_exceeded"] == 1
+    assert st["queries"] == 0 and st["queue_depth"] == 0
+
+
+def test_deadline_vs_hot_swap_drain(ova_models, monkeypatch):
+    """Swap/drain interaction: a queued old-version request that expires
+    during the drain is reaped, not served — the drain completes, the old
+    version drops, and the caller sees ``DeadlineExceeded``."""
+    import repro.launch.engine as engine_mod
+
+    m1, m2, Xpool = ova_models
+    reg = ModelRegistry()
+    reg.register("m", m1)
+    reg.register("m", m2)
+    engine = AsyncServingEngine(reg, EngineConfig(max_batch=32))
+    engine.warmup("m", strategies=["early"])
+    gate = _GatedServe()
+    monkeypatch.setattr(engine_mod, "serve_batch", gate)
+
+    async def main():
+        async with engine:
+            fA = asyncio.ensure_future(
+                engine.submit(Xpool[:8], "m", strategy="early"))
+            await _until_inflight(gate)
+            fB = asyncio.ensure_future(
+                engine.submit(Xpool[:5], "m", strategy="early",
+                              timeout_s=0.02))
+            await asyncio.sleep(0)                 # B queued on v1
+            swap = asyncio.ensure_future(engine.swap("m", 2))
+            await asyncio.sleep(0.1)               # B expires mid-drain
+            gate.release.set()
+            await fA                               # v1's in-flight batch
+            assert await asyncio.wait_for(swap, timeout=10) == 1
+            with pytest.raises(DeadlineExceeded):
+                await fB
+            post, _ = await engine.submit(Xpool[:4], "m", strategy="early")
+
+    asyncio.run(main())
+    assert reg.versions("m") == [2]                # drained, then dropped
+    assert engine.stats()["deadline_exceeded"] == 1
+
+
+def test_drain_bounded_wakeups(registry2):
+    """Satellite 3 regression: ``drain`` is event-driven (one wakeup per
+    queue progression), not a 100%-CPU ``sleep(0)`` busy-wait — draining a
+    long queue costs O(batches) loop wakeups."""
+    class _CountingEvent(asyncio.Event):
+        def __init__(self):
+            super().__init__()
+            self.waits = 0
+
+        async def wait(self):
+            self.waits += 1
+            return await super().wait()
+
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)
+    engine = AsyncServingEngine(registry2, EngineConfig(max_batch=64))
+    engine.warmup("mix", strategies=["early"])
+    counted = {}
+
+    async def main():
+        async with engine:
+            ev = _CountingEvent()
+            engine._served = ev
+            subs = [asyncio.ensure_future(
+                engine.submit(Xpool[i * 16:(i + 1) * 16], "mix",
+                              strategy="early")) for i in range(12)]
+            await asyncio.sleep(0)                 # all twelve enqueue
+            await engine.drain()
+            counted["waits"] = ev.waits
+            for t in subs:
+                await t
+
+    asyncio.run(main())
+    # 12 x 16 rows / 64-row batches = 3 batches; a few extra wakeups for
+    # pops that interleave with the drain loop are fine — hundreds are not
+    assert counted["waits"] <= 8, counted
+
+
+def test_registry_version_coercion(ova_models):
+    """Satellite 4 regression: ``register(version="2")`` must coerce once
+    at entry — pre-fix the duplicate check keyed ``(name, int(v))`` but the
+    insert used ``(name, v)``, so "2" and 2 silently coexisted."""
+    m1, _, _ = ova_models
+    reg = ModelRegistry()
+    man = reg.register("m", m1, version="2")
+    assert man.version == 2
+    assert reg.versions("m") == [2]
+    assert reg.resolve("m").version == 2
+    assert reg.resolve("m", "2").version == 2
+    with pytest.raises(ValueError, match="registered"):
+        reg.register("m", m1, version=2)
+    with pytest.raises(ValueError, match="registered"):
+        reg.register("m", m1, version="2")
+
+
+def test_zero_compiles_after_warmup_under_overload(registry2):
+    """Acceptance: an overload burst against a bounded queue with default
+    deadlines sheds/expires some requests and delivers the rest — and the
+    jit cache stays exactly at its warmup mark throughout."""
+    Xpool = np.asarray(registry2.resolve("mix").sm.Xall)
+    engine = AsyncServingEngine(
+        registry2, EngineConfig(max_batch=64, max_queue_rows=64,
+                                timeout_s=0.25))
+    engine.warmup("mix", strategies=["early"])
+    mark = serving_cache_size()
+    rng = np.random.default_rng(11)
+    sizes = rng.choice([1, 4, 16, 64], size=60, p=[0.35, 0.3, 0.25, 0.1])
+
+    async def main():
+        async with engine:
+            async def one(i):
+                X = Xpool[rng.integers(0, Xpool.shape[0],
+                                       size=int(sizes[i]))]
+                return await engine.submit(X, "mix", version=1 + i % 2,
+                                           strategy="early")
+            return await asyncio.gather(
+                *[one(i) for i in range(60)], return_exceptions=True)
+
+    outs = asyncio.run(main())
+    ok = [o for o in outs if not isinstance(o, BaseException)]
+    bad = [o for o in outs if isinstance(o, BaseException)]
+    assert all(isinstance(o, (EngineOverloaded, DeadlineExceeded))
+               for o in bad), bad
+    assert ok, "burst delivered nothing"
+    assert serving_cache_size() == mark
+    st = engine.stats()
+    assert st["compiles_after_warmup"] == 0
+    assert st["requests"] == len(ok)
 
 
 def test_slo_report_schema(registry2):
